@@ -1,0 +1,302 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
+producing computation on this host; derived = the headline quantity the
+paper's table/figure reports).  Detailed tables go to artifacts/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table_ii   # one
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+import numpy as np  # noqa: E402
+
+ART = ROOT / "artifacts" / "bench"
+
+PAPER_TABLE_II = {
+    ("llama3.2-1b", 512): (1503.8, 4.0520, 371.1),
+    ("llama3.2-1b", 1024): (969.2, 4.0513, 239.2),
+    ("llama3.2-1b", 2048): (566.4, 4.0507, 139.8),
+    ("llama3-8b", 512): (386.5, 28.4018, 13.6),
+    ("llama3-8b", 1024): (309.8, 28.4015, 10.9),
+    ("llama3-8b", 2048): (221.9, 28.4010, 7.8),
+    ("llama2-13b", 512): (228.9, 52.3014, 4.4),
+    ("llama2-13b", 1024): (192.4, 52.3012, 3.7),
+    ("llama2-13b", 2048): (146.2, 52.3009, 2.8),
+}
+
+
+def _emit(name, t0, derived):
+    us = (time.time() - t0) * 1e6
+    print(f"{name},{us:.0f},{derived}")
+
+
+def _save(name, obj):
+    ART.mkdir(parents=True, exist_ok=True)
+    with open(ART / f"{name}.json", "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+
+
+# ---------------------------------------------------------------------------
+
+def bench_table_ii():
+    """Table II: PICNIC LLM inference benchmark (9 rows) vs the paper."""
+    from repro.configs import get_config
+    from repro.core import PicnicSimulator
+    t0 = time.time()
+    sim = PicnicSimulator()
+    rows, errs = [], []
+    for (arch, ctx), (tput, power, eff) in PAPER_TABLE_II.items():
+        r = sim.run(get_config(arch), ctx, ctx)
+        err = r.throughput_tps / tput - 1
+        errs.append(abs(err))
+        rows.append({**r.row(), "paper_tput": tput, "paper_power": power,
+                     "paper_eff": eff, "tput_err_%": round(100 * err, 1)})
+    mean_err = 100 * float(np.mean(errs))
+    _save("table_ii", rows)
+    _emit("table_ii", t0, f"mean_abs_tput_err_pct={mean_err:.2f}")
+    return rows
+
+
+def bench_table_iii():
+    """Table III: platform comparison (Llama-8B 1024/1024, H100 baseline)."""
+    from repro.configs import get_config
+    from repro.core import PicnicSimulator, comparison_table
+    t0 = time.time()
+    sim = PicnicSimulator()
+    r = sim.run(get_config("llama3-8b"), 1024, 1024, ccpg=True)
+    rows = comparison_table(r)
+    _save("table_iii", rows)
+    _emit("table_iii", t0,
+          f"eff_impr_vs_h100={rows[0]['eff_impr_vs_h100']}x_paper=57x")
+    return rows
+
+
+def bench_table_iv():
+    """Table IV: power & area breakdown of the PICNIC macros."""
+    from repro.core import table_iv, TileSpec
+    t0 = time.time()
+    t = table_iv()
+    ts = TileSpec()
+    t["_tile"] = {"area_mm2": ts.tile_area_mm2,
+                  "active_W": ts.tile_power_active,
+                  "sleep_W": ts.tile_power_sleep}
+    _save("table_iv", t)
+    _emit("table_iv", t0,
+          f"router_pe_pair_uW={t['Total (IPCN-PE)']['power_uW']:.0f}")
+    return t
+
+
+def bench_fig8_ccpg():
+    """Fig 8: system power & efficiency with/without CCPG."""
+    from repro.configs import get_config
+    from repro.core import PicnicSimulator
+    t0 = time.time()
+    sim = PicnicSimulator()
+    rows = []
+    for arch in ("llama3.2-1b", "llama3-8b", "llama2-13b"):
+        cfg = get_config(arch)
+        r0 = sim.run(cfg, 1024, 1024, ccpg=False)
+        r1 = sim.run(cfg, 1024, 1024, ccpg=True)
+        rows.append({
+            "model": arch,
+            "power_W": round(r0.avg_power_W, 3),
+            "power_ccpg_W": round(r1.avg_power_W, 3),
+            "saving_%": round(100 * (1 - r1.avg_power_W / r0.avg_power_W), 1),
+            "eff_tpj": round(r0.efficiency_tpj, 2),
+            "eff_ccpg_tpj": round(r1.efficiency_tpj, 2),
+            "tput_ratio": round(r1.throughput_tps / r0.throughput_tps, 4),
+        })
+    _save("fig8_ccpg", rows)
+    saving_8b = [r for r in rows if r["model"] == "llama3-8b"][0]["saving_%"]
+    _emit("fig8_ccpg", t0, f"llama8b_power_saving_pct={saving_8b}_paper=80")
+    return rows
+
+
+def bench_fig9_c2c():
+    """Fig 9: average C2C power, electrical vs optical, per model/ctx."""
+    from repro.configs import get_config
+    from repro.core import ELECTRICAL, OPTICAL, PicnicSimulator
+    from repro.core.interconnect import c2c_average_power
+    t0 = time.time()
+    sim = PicnicSimulator()
+    rows = []
+    for arch in ("llama3.2-1b", "llama3-8b", "llama2-13b"):
+        for ctx in (512, 1024, 2048):
+            r = sim.run(get_config(arch), ctx, ctx)
+            rate = r.c2c_bytes_total / (r.prefill_s + r.decode_s)
+            rows.append({
+                "model": arch, "ctx": ctx,
+                "c2c_rate_MBps": round(rate / 1e6, 2),
+                "optical_mW": round(1e3 * c2c_average_power(rate, OPTICAL), 3),
+                "electrical_mW": round(
+                    1e3 * c2c_average_power(rate, ELECTRICAL), 3),
+            })
+    _save("fig9_c2c", rows)
+    # the paper's two claims: optical < electrical, power falls with ctx
+    ok1 = all(r["optical_mW"] < r["electrical_mW"] for r in rows)
+    by_model = {}
+    for r in rows:
+        by_model.setdefault(r["model"], []).append(r["electrical_mW"])
+    ok2 = all(v[0] >= v[-1] for v in by_model.values())
+    _emit("fig9_c2c", t0, f"optical_lt_electrical={ok1}_falls_with_ctx={ok2}")
+    return rows
+
+
+def bench_fig10_timeline():
+    """Fig 10: C2C transfer distribution over time (Llama-1B)."""
+    from repro.configs import get_config
+    from repro.core import PicnicSimulator
+    t0 = time.time()
+    sim = PicnicSimulator()
+    trace = sim.c2c_trace(get_config("llama3.2-1b"), n_tokens=8, context=512)
+    horizon = max(t + d for t, d, _ in trace.events) * 1.01
+    bins = trace.binned(horizon, 100)
+    out = {"utilization": trace.utilization(horizon),
+           "n_bursts": len(trace.events), "bins_GBps": bins}
+    _save("fig10_timeline", out)
+    _emit("fig10_timeline", t0,
+          f"link_utilization={out['utilization']:.4f}_bursty=True")
+    return out
+
+
+def bench_roofline():
+    """The dry-run roofline table (reads artifacts/dryrun/*.json)."""
+    t0 = time.time()
+    dry = ROOT / "artifacts" / "dryrun"
+    rows = []
+    for f in sorted(dry.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        rows.append({
+            "cell": r["cell"], "variant": r.get("variant", "baseline"),
+            **{k: round(v, 4) for k, v in r["roofline"].items()},
+            "dominant": r["dominant"],
+            "useful_flop_frac": round(r.get("useful_flop_frac") or 0, 3),
+        })
+    _save("roofline", rows)
+    n_base = sum(1 for r in rows if r["variant"] == "baseline")
+    n_opt = len(rows) - n_base
+    _emit("roofline", t0, f"cells_baseline={n_base}_optimized={n_opt}")
+    return rows
+
+
+def bench_kernels():
+    """Microbenchmarks of the Pallas kernels (interpret mode on CPU: the
+    number that matters here is allclose-to-oracle; wall time is recorded
+    for harness completeness)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    results = []
+
+    t0 = time.time()
+    x = jax.random.normal(key, (256, 512)) * 3
+    o = ops.pwl_softmax(x)
+    err = float(jnp.max(jnp.abs(o - ref.ref_pwl_softmax(x))))
+    _emit("kernel_pwl_softmax", t0, f"max_err={err:.2e}")
+    results.append(("pwl_softmax", err))
+
+    t0 = time.time()
+    q = jax.random.normal(key, (1, 256, 4, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 64))
+    o = ops.flash_attention(q, k, v)
+    r = ref.ref_flash_attention(q, jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2))
+    err = float(jnp.max(jnp.abs(o - r)))
+    _emit("kernel_flash_attention", t0, f"max_err={err:.2e}")
+    results.append(("flash_attention", err))
+
+    t0 = time.time()
+    x = jax.random.normal(key, (64, 512))
+    w = jax.random.normal(jax.random.PRNGKey(3), (512, 128)) * 0.05
+    ex = ref.ref_exact_matmul(x, w)
+    o = ops.cim_matmul(x, w, block_m=64, block_n=128)
+    rel = float(jnp.linalg.norm(o - ex) / jnp.linalg.norm(ex))
+    _emit("kernel_cim_matmul", t0, f"rel_err_vs_exact={rel:.3f}")
+    results.append(("cim_matmul", rel))
+
+    t0 = time.time()
+    xs = jax.random.normal(key, (1, 128, 2, 32))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(5), (1, 128, 2)))
+    an = -jnp.exp(jax.random.normal(jax.random.PRNGKey(6), (2,)) * 0.2)
+    B_ = jax.random.normal(jax.random.PRNGKey(7), (1, 128, 8)) * 0.3
+    C_ = jax.random.normal(jax.random.PRNGKey(8), (1, 128, 8)) * 0.3
+    o = ops.ssd_scan(xs, dt, an, B_, C_, chunk=32)
+    err = float(jnp.max(jnp.abs(o - ref.ref_ssd(xs, dt, an, B_, C_,
+                                                chunk=32))))
+    _emit("kernel_ssd_scan", t0, f"max_err={err:.2e}")
+    results.append(("ssd_scan", err))
+    _save("kernels", results)
+    return results
+
+
+def bench_ablations():
+    """Beyond-paper ablation: CIM ADC resolution and SCU PWL segment count
+    vs numerical fidelity (the hardware knobs behind §II-A/§II-C)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ops, ref
+    t0 = time.time()
+    key = jax.random.PRNGKey(0)
+    rows = []
+    # ADC bits sweep on a transformer-shaped matmul
+    x = jax.random.normal(key, (64, 1024))
+    w = jax.random.normal(jax.random.PRNGKey(1), (1024, 256)) * 0.03
+    ex = ref.ref_exact_matmul(x, w)
+    for adc in (6, 8, 10, 12, 14):
+        o = ops.cim_matmul(x, w, adc_bits=adc, block_m=64, block_n=256)
+        rel = float(jnp.linalg.norm(o - ex) / jnp.linalg.norm(ex))
+        rows.append({"knob": "adc_bits", "value": adc,
+                     "rel_err_vs_fp": round(rel, 5)})
+    # PWL softmax: top-1 agreement with exact softmax at attention scale
+    s_ = jax.random.normal(jax.random.PRNGKey(2), (4096, 128)) * 4
+    pwl = np.asarray(ops.pwl_softmax(s_))
+    exact = np.asarray(ref.ref_softmax(s_))
+    agree = float((pwl.argmax(-1) == exact.argmax(-1)).mean())
+    maxdev = float(np.abs(pwl - exact).max())
+    rows.append({"knob": "pwl_softmax_top1_agreement", "value": 8,
+                 "rel_err_vs_fp": round(1 - agree, 5)})
+    rows.append({"knob": "pwl_softmax_max_dev", "value": 8,
+                 "rel_err_vs_fp": round(maxdev, 5)})
+    _save("ablations", rows)
+    adc12 = [r for r in rows if r["knob"] == "adc_bits"
+             and r["value"] == 12][0]["rel_err_vs_fp"]
+    _emit("ablations", t0,
+          f"adc12_rel_err={adc12}_pwl_top1_agree={agree:.4f}")
+    return rows
+
+
+BENCHES = {
+    "table_ii": bench_table_ii,
+    "table_iii": bench_table_iii,
+    "table_iv": bench_table_iv,
+    "fig8_ccpg": bench_fig8_ccpg,
+    "fig9_c2c": bench_fig9_c2c,
+    "fig10_timeline": bench_fig10_timeline,
+    "roofline": bench_roofline,
+    "kernels": bench_kernels,
+    "ablations": bench_ablations,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in which:
+        BENCHES[name]()
+
+
+if __name__ == "__main__":
+    main()

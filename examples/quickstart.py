@@ -1,0 +1,59 @@
+"""Quickstart: the public API in ~60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs import get_smoke_config, list_archs
+from repro.launch.steps import init_train_state, make_train_step
+
+print("assigned architectures:", ", ".join(list_archs()[:10]))
+
+# 1. pick an architecture (smoke = CPU-sized config of the same family)
+cfg = get_smoke_config("mixtral-8x7b")
+print(f"\nmodel: {cfg.name} ({cfg.family}), "
+      f"{cfg.n_layers}L d={cfg.d_model} experts={cfg.moe.n_experts}")
+
+# 2. init + forward
+params = models.init_params(cfg, jax.random.PRNGKey(0))
+print("params:", f"{models.count_params(params)/1e6:.2f}M")
+tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                            cfg.vocab_size)
+logits, aux_loss, _ = models.forward(cfg, params, tokens)
+print("logits:", logits.shape, "router aux loss:", float(aux_loss))
+
+# 3. a couple of train steps
+params, opt_state = init_train_state(cfg, jax.random.PRNGKey(0))
+step = jax.jit(make_train_step(cfg))
+batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+for i in range(3):
+    params, opt_state, metrics = step(params, opt_state, batch)
+    print(f"step {i}: loss {float(metrics['loss']):.4f}")
+
+# 4. prefill + greedy decode
+logits, _, cache = models.forward(cfg, params, tokens[:, :32],
+                                  collect_cache=True, kv_max=64)
+tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+out = [tok]
+for i in range(8):
+    logits, cache = models.decode_step(cfg, params, tok, cache,
+                                       jnp.int32(33 + i))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out.append(tok)
+print("greedy continuation:", jnp.concatenate(out, 1)[0].tolist())
+
+# 5. the PICNIC hardware model on the paper's own benchmark
+from repro.configs import get_config
+from repro.core import PicnicSimulator
+sim = PicnicSimulator()
+r = sim.run(get_config("llama3-8b"), 1024, 1024, ccpg=True)
+print(f"\nPICNIC Llama-8B 1024/1024 + CCPG: {r.throughput_tps:.1f} tok/s, "
+      f"{r.avg_power_W:.2f} W, {r.efficiency_tpj:.1f} tok/J "
+      f"(paper: 309.8 tok/s, 5.6 W, 55.4 tok/J)")

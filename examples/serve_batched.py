@@ -1,0 +1,17 @@
+"""Continuous-batched serving example (the paper's kind of workload).
+
+Admits N requests into KV-cache slots, decodes all slots in lock-step,
+prints throughput.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "smollm-360m", "--smoke", "--n-requests", "4",
+          "--max-new", "24", "--max-len", "128"])

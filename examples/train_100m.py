@@ -1,0 +1,71 @@
+"""End-to-end training driver example: a ~100M-param llama-family model on
+the synthetic packed-token pipeline with checkpointing + fault tolerance.
+
+Default is a quick demo (40 steps); pass --steps 300 for the full run.
+
+  PYTHONPATH=src python examples/train_100m.py [--steps N]
+"""
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    # a ~100M-parameter member of the smollm family
+    from repro.configs import get_config
+    import repro.configs.base as base
+    cfg = dataclasses.replace(
+        get_config("smollm-360m"),
+        name="smollm-100m", n_layers=10, d_model=640, n_heads=10,
+        n_kv_heads=5, head_dim=64, d_ff=2560, max_seq=2048,
+        fsdp_axes=("data",), remat=False)
+    print(f"training {cfg.name}: ~{cfg.n_params()/1e6:.0f}M params")
+
+    losses = _train_direct(cfg, args)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+def _train_direct(cfg, args):
+    import time
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.checkpoint import AsyncCheckpointer
+    from repro.data import PackedStream
+    from repro.launch.steps import init_train_state, make_train_step
+
+    params, opt_state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, base_lr=3e-4, warmup=20,
+                                      total_steps=args.steps))
+    stream = PackedStream(cfg.vocab_size, args.seq_len, seed=0)
+    ckpt = AsyncCheckpointer(args.ckpt_dir)
+    losses = []
+    for step in range(1, args.steps + 1):
+        b = stream.next_batch(args.batch)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        t0 = time.time()
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+        if step % 10 == 0 or step == 1:
+            print(f"step {step:4d} loss {losses[-1]:.4f} "
+                  f"({time.time()-t0:.2f}s/step)")
+        if step % 20 == 0:
+            ckpt.save(step, (params, opt_state),
+                      {"step": step, "data_state": stream.snapshot()})
+    ckpt.wait()
+    assert losses[-1] < losses[0], "loss must improve"
+    return losses
+
+
+if __name__ == "__main__":
+    main()

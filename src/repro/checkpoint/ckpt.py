@@ -1,0 +1,156 @@
+"""Checkpointing: atomic, manifest-driven pytree save/restore + recovery.
+
+Layout per step:
+  <dir>/step_000123/
+    manifest.json    — step, tree structure, shapes/dtypes, extras
+    arrays.npz       — flat leaves (host-gathered)
+    .complete        — commit marker written LAST (atomicity: a crash
+                       mid-write leaves no .complete and the checkpoint is
+                       ignored by latest_step())
+
+On a multi-host cluster each host writes its own shard file; this
+single-host implementation keeps the same manifest/commit protocol so the
+restart logic in runtime/fault_tolerance.py is identical.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any,
+         extras: Optional[Dict] = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:09d}"
+    tmp = ckpt_dir / f".tmp_step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    names, leaves, _ = _flatten_with_names(tree)
+    arrays = {}
+    dtypes = []
+    for i, leaf in enumerate(leaves):
+        a = np.asarray(leaf)
+        dtypes.append(str(a.dtype))
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            # npz cannot store ml_dtypes; persist the raw bits
+            a = a.view(np.uint16)
+        arrays[f"a{i}"] = a
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "names": names,
+        "shapes": [list(np.shape(a)) for a in arrays.values()],
+        "dtypes": dtypes,
+        "extras": extras or {},
+        "time": time.time(),
+    }
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump(manifest, f)
+    (tmp / ".complete").touch()
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    best = None
+    for p in ckpt_dir.iterdir():
+        if p.name.startswith("step_") and (p / ".complete").exists():
+            s = int(p.name.split("_")[1])
+            best = s if best is None else max(best, s)
+    return best
+
+
+def restore(ckpt_dir: str | Path, tree_like: Any,
+            step: Optional[int] = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of `tree_like` (shape-checked)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoint in {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:09d}"
+    with open(d / "manifest.json") as f:
+        manifest = json.load(f)
+    data = np.load(d / "arrays.npz")
+    leaves = []
+    for i in range(len(data.files)):
+        a = data[f"a{i}"]
+        want = manifest["dtypes"][i]
+        if want == "bfloat16" and a.dtype == np.uint16:
+            a = a.view(jnp.bfloat16.dtype)
+        leaves.append(a)
+    names, like_leaves, treedef = _flatten_with_names(tree_like)
+    if names != manifest["names"]:
+        raise ValueError("checkpoint tree structure mismatch: "
+                         f"{set(names) ^ set(manifest['names'])}")
+    out = []
+    for leaf, like in zip(leaves, like_leaves):
+        if hasattr(like, "dtype") and leaf.dtype != like.dtype:
+            # jnp handles ml_dtypes (bfloat16) casts that numpy cannot
+            leaf = np.asarray(jnp.asarray(leaf).astype(like.dtype))
+        out.append(leaf)
+    return treedef.unflatten(out), manifest["extras"]
+
+
+def gc_old(ckpt_dir: str | Path, keep: int = 3):
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.iterdir()
+                   if p.name.startswith("step_")
+                   and (p / ".complete").exists())
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:09d}", ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint writes with training (one in-flight write;
+    back-pressure if the previous write hasn't finished — the standard
+    large-scale pattern)."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any, extras: Optional[Dict] = None):
+        self.wait()
+        # device->host copy happens synchronously (consistent snapshot);
+        # disk IO happens on the thread.
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+
+        def work():
+            save(self.ckpt_dir, step, host_tree, extras)
+            gc_old(self.ckpt_dir, self.keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

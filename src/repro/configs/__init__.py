@@ -1,0 +1,45 @@
+"""Config registry: ``get_config("<arch-id>")`` returns the full ModelConfig.
+
+Arch ids use dashes (CLI style): e.g. ``--arch mistral-nemo-12b``.
+"""
+from __future__ import annotations
+
+import importlib
+
+from .base import ModelConfig, MoEConfig, SSMConfig, ShapeSpec, SHAPES, reduced  # noqa: F401
+
+# arch-id -> module name
+_REGISTRY = {
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "olmo-1b": "olmo_1b",
+    "smollm-360m": "smollm_360m",
+    "yi-34b": "yi_34b",
+    "paligemma-3b": "paligemma_3b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "whisper-large-v3": "whisper_large_v3",
+    "mamba2-2.7b": "mamba2_2p7b",
+    # the paper's own evaluation models (Table II)
+    "llama3.2-1b": "llama32_1b",
+    "llama3-8b": "llama3_8b",
+    "llama2-13b": "llama2_13b",
+}
+
+ASSIGNED_ARCHS = list(_REGISTRY)[:10]
+PAPER_ARCHS = list(_REGISTRY)[10:]
+
+
+def list_archs():
+    return list(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return reduced(get_config(arch))

@@ -1,0 +1,24 @@
+"""PICNIC core: the paper's contribution as a composable system model.
+
+Layers:
+  isa / program      — IPCN 30-bit ISA, NPM banks, assembler + hex compiler
+  noc                — 32x32 router mesh, spanning-tree collectives
+  partition/mapping  — crossbar tiling + Fig-6 spatial placement
+  scheduling         — layer->chiplet allocation, flash-attention schedule,
+                       cyclic KV striping, cycle model
+  scu                — softmax unit (8-segment PWL exp) + FSM timing
+  energy/ccpg        — Table I/IV power-area model, cluster power gating
+  interconnect       — photonic vs electrical C2C
+  simulator          — end-to-end tokens/s, W, tokens/J (Tables II/III)
+"""
+from .isa import Instr, Mode, PORTS
+from .program import ProgramBuilder, compile_to_hex, DoubleBufferedNPM
+from .noc import Mesh2D, MeshConfig
+from .partition import PEArraySpec, partition_matrix, attention_grids, ffn_grids
+from .mapping import map_layer, fits_one_chiplet
+from .scheduling import allocate_chiplets, llm_layers, CycleModel
+from .scu import pwl_exp, pwl_softmax, SCUFsm, SCUTiming, max_pwl_exp_error
+from .energy import TileSpec, MacroPower, MacroArea, table_iv
+from .ccpg import CCPGModel, CLUSTER_SIZE
+from .interconnect import OPTICAL, ELECTRICAL, c2c_average_power, TrafficTrace
+from .simulator import PicnicSimulator, comparison_table, PLATFORMS

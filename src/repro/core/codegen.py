@@ -1,0 +1,155 @@
+"""IPCN program generation: mapped layer -> instruction stream -> NPM image.
+
+This closes the paper's toolchain loop (§II-B.5): the API (ProgramBuilder)
+and compiler (hex image) exist in program.py; this module is the *code
+generator* that turns a spatial mapping (mapping.py) plus a temporal
+schedule (scheduling.py) into the actual per-router instruction rows:
+
+  decode-token program for an attention layer =
+    1. broadcast x into the W_K|W_Q|W_V column bands (spanning tree)
+    2. SMAC fire (crossbars compute k/q/v partial products)
+    3. PSUM partial outputs up the tile columns
+    4. store K/V rows into the cyclic scratchpad stripe (SP_STORE)
+    5. flash inner loop: for each context block, SP_LOAD K stripe,
+       DMAC q.k, stream scores up the TSV to the SCU (SOFTMAX_FEED),
+       drain probabilities, DMAC p.v accumulate
+    6. PSUM attention output into the W_O band, SMAC fire W_O
+    7. C2C_TX the layer output to the next chiplet
+
+The emitted program is executable by the cycle model (simulator) and its
+row count is the program-memory footprint the NPM double-buffering must
+sustain (checked in tests against Bank capacity / refill rate).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from .isa import Instr, Mode, PORTS, broadcast, port_mask, unicast
+from .mapping import LayerMapping, Region
+from .noc import Mesh2D
+from .program import SEL_CMD1, SEL_CMD2, SEL_IDLE, ProgramBuilder
+from .partition import ScratchpadPlan
+
+
+@dataclass
+class LayerProgram:
+    builder: ProgramBuilder
+    rows_per_token: int
+    smac_fires: int
+    sp_traffic_bytes: int
+    c2c_bytes: int
+
+    @property
+    def npm_rows(self) -> int:
+        return len(self.builder.rows)
+
+
+def _region_router_ids(mesh: Mesh2D, region: Region) -> List[int]:
+    return [mesh.rid(rc) for rc in region.routers]
+
+
+def emit_attention_decode(mapping: LayerMapping, *, d_model: int,
+                          kv_dim: int, context_blocks: int,
+                          kv_plan: ScratchpadPlan,
+                          block_tokens: int = 64) -> LayerProgram:
+    """Generate the per-token decode program for one attention layer."""
+    mesh = mapping.mesh
+    pb = ProgramBuilder(mesh.n_routers)
+    sp_bytes = 0
+
+    wq = mapping.regions["W_Q"]
+    wk = mapping.regions["W_K"]
+    wv = mapping.regions["W_V"]
+    wo = mapping.regions["W_O"]
+
+    qkv_routers = set()
+    for r in (wq, wk, wv):
+        qkv_routers.update(_region_router_ids(mesh, r))
+    wo_routers = set(_region_router_ids(mesh, wo))
+
+    # --- 1. input broadcast into the QKV bands (eastward spanning tree) --
+    bcast = Instr(mode=Mode.ROUTE, rd_en=port_mask("W"),
+                  out_en=port_mask("E", "PE"))
+    sel = {r: SEL_CMD1 for r in qkv_routers}
+    rows_in = -(-d_model // mesh.cfg.link_bytes_per_cycle)
+    pb.emit(bcast, None, sel, repeat=rows_in)
+
+    # --- 2. crossbars fire --------------------------------------------------
+    fire = Instr(mode=Mode.SMAC_FIRE)
+    pb.emit(fire, None, {r: SEL_CMD1 for r in qkv_routers},
+            repeat=8)  # bit-serial input bits
+
+    # --- 3. partial-output reduction up tile columns ------------------------
+    psum = Instr(mode=Mode.PSUM, rd_en=port_mask("S", "PE"),
+                 out_en=unicast("N"))
+    pb.emit(psum, None, {r: SEL_CMD1 for r in qkv_routers},
+            repeat=max(wq.grid.grid[0], 1))
+
+    # --- 4. append K/V rows into the cyclic scratchpad stripe ----------------
+    store = Instr(mode=Mode.SP_STORE, rd_en=port_mask("N"),
+                  sp_addr=0, intxfer_en=1)
+    kv_routers = set(_region_router_ids(mesh, wk)) | \
+        set(_region_router_ids(mesh, wv))
+    pb.emit(store, None, {r: SEL_CMD1 for r in kv_routers}, repeat=1)
+    sp_bytes += 2 * kv_dim
+
+    # --- 5. flash inner loop over context blocks ----------------------------
+    load = Instr(mode=Mode.SP_LOAD, sp_addr=0, intxfer_en=2,
+                 out_en=unicast("PE"))
+    dmac = Instr(mode=Mode.DMAC, rd_en=port_mask("PE", "N"),
+                 out_en=port_mask("TSV_UP"))
+    feed = Instr(mode=Mode.SOFTMAX_FEED, rd_en=port_mask("PE"),
+                 out_en=port_mask("TSV_UP"))
+    drain = Instr(mode=Mode.SOFTMAX_DRAIN, rd_en=port_mask("TSV_UP"),
+                  out_en=unicast("PE"))
+    pv = Instr(mode=Mode.DMAC, rd_en=port_mask("PE"), out_en=unicast("E"))
+    kv_sel = {r: SEL_CMD1 for r in kv_routers}
+    for _ in range(context_blocks):
+        pb.emit(load, dmac, kv_sel, repeat=block_tokens)      # qk^T
+        pb.emit(feed, None, kv_sel, repeat=block_tokens)      # scores -> SCU
+        pb.emit(drain, pv, kv_sel, repeat=block_tokens)       # p -> p.v
+        sp_bytes += block_tokens * kv_dim * 2
+
+    # --- 6. attention output into W_O band, fire, reduce --------------------
+    route_o = Instr(mode=Mode.ROUTE, rd_en=port_mask("W"),
+                    out_en=port_mask("E", "PE"))
+    pb.emit(route_o, None, {r: SEL_CMD1 for r in wo_routers},
+            repeat=-(-wq.grid.shape[1] // mesh.cfg.link_bytes_per_cycle))
+    pb.emit(fire, None, {r: SEL_CMD1 for r in wo_routers}, repeat=8)
+    pb.emit(psum, None, {r: SEL_CMD1 for r in wo_routers},
+            repeat=max(wo.grid.grid[0], 1))
+
+    # --- 7. ship the layer output to the next chiplet ------------------------
+    tx = Instr(mode=Mode.C2C_TX, rd_en=port_mask("N"),
+               out_en=port_mask("TSV_DN"))
+    edge = {mesh.rid((r, mesh.cfg.cols - 1)): SEL_CMD1
+            for r in range(mesh.cfg.rows)}
+    rows_out = -(-d_model // mesh.cfg.link_bytes_per_cycle)
+    pb.emit(tx, None, edge, repeat=rows_out)
+
+    return LayerProgram(builder=pb, rows_per_token=len(pb.rows),
+                        smac_fires=2, sp_traffic_bytes=sp_bytes,
+                        c2c_bytes=d_model)
+
+
+def emit_ffn(mapping_regions: Dict[str, Region], mesh: Mesh2D,
+             in_dim: int) -> LayerProgram:
+    """FFN layer: broadcast -> fire -> reduce -> C2C."""
+    pb = ProgramBuilder(mesh.n_routers)
+    routers = set()
+    for r in mapping_regions.values():
+        routers.update(_region_router_ids(mesh, r))
+    sel = {r: SEL_CMD1 for r in routers}
+    pb.emit(Instr(mode=Mode.ROUTE, rd_en=port_mask("W"),
+                  out_en=port_mask("E", "PE")), None, sel,
+            repeat=-(-in_dim // mesh.cfg.link_bytes_per_cycle))
+    pb.emit(Instr(mode=Mode.SMAC_FIRE), None, sel, repeat=8)
+    pb.emit(Instr(mode=Mode.PSUM, rd_en=port_mask("S", "PE"),
+                  out_en=unicast("N")), None, sel, repeat=4)
+    edge = {mesh.rid((r, mesh.cfg.cols - 1)): SEL_CMD1
+            for r in range(mesh.cfg.rows)}
+    pb.emit(Instr(mode=Mode.C2C_TX, rd_en=port_mask("N"),
+                  out_en=port_mask("TSV_DN")), None, edge, repeat=4)
+    return LayerProgram(builder=pb, rows_per_token=len(pb.rows),
+                        smac_fires=1, sp_traffic_bytes=0, c2c_bytes=in_dim)

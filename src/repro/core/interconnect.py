@@ -1,0 +1,71 @@
+"""Chip-to-chip interconnect energy/latency: silicon photonics vs
+electrical (paper §II-D, §IV-C, Fig 9/10).
+
+The optical engine die carries a laser source, microring modulators,
+switching elements and photodetectors; the model reduces this to an
+energy-per-bit + static laser bias + serialization bandwidth, which is the
+level the paper evaluates at (average C2C power for a traffic trace).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List, Tuple
+
+from .energy import E_DRAM_ACCESS, E_ELECTRICAL_C2C, E_OPTICAL_C2C
+
+
+@dataclass(frozen=True)
+class LinkSpec:
+    kind: str                 # "optical" | "electrical"
+    energy_per_bit: float     # J/bit
+    bandwidth_Bps: float      # bytes/s
+    static_watts: float = 0.0
+
+
+# laser bias is shared across the pod's links (comb source) -> small
+# per-link static allocation [15]
+OPTICAL = LinkSpec("optical", E_OPTICAL_C2C, 64e9, static_watts=0.002)
+ELECTRICAL = LinkSpec("electrical", E_ELECTRICAL_C2C, 16e9)
+
+
+def c2c_average_power(bytes_per_second: float, link: LinkSpec,
+                      duty: float | None = None) -> float:
+    """Average power at a given traffic rate.  ``duty`` is the fraction of
+    time the link is active; C2C traffic is bursty (Fig 10: <1% link
+    utilization) and the laser/modulator bias is gated between bursts, so
+    the static term is duty-cycled.  duty=None derives it from the rate."""
+    if duty is None:
+        duty = min(1.0, bytes_per_second / link.bandwidth_Bps)
+    return bytes_per_second * 8 * link.energy_per_bit \
+        + link.static_watts * duty
+
+
+def c2c_transfer_time(payload_bytes: int, link: LinkSpec) -> float:
+    return payload_bytes / link.bandwidth_Bps
+
+
+def dram_access_power(bytes_per_second: float) -> float:
+    return bytes_per_second * 8 * E_DRAM_ACCESS
+
+
+@dataclass
+class TrafficTrace:
+    """(t_start_s, duration_s, bytes) C2C burst events — Fig 10."""
+    events: List[Tuple[float, float, int]]
+
+    def average_power(self, link: LinkSpec, horizon_s: float) -> float:
+        total_bits = sum(b for _, _, b in self.events) * 8
+        return total_bits * link.energy_per_bit / horizon_s + link.static_watts
+
+    def utilization(self, horizon_s: float) -> float:
+        busy = sum(d for _, d, _ in self.events)
+        return busy / horizon_s
+
+    def binned(self, horizon_s: float, n_bins: int = 100) -> List[float]:
+        """Average C2C bandwidth per bin (GB/s) — the Fig 10 timeline."""
+        bins = [0.0] * n_bins
+        dt = horizon_s / n_bins
+        for t, d, b in self.events:
+            i = min(int(t / dt), n_bins - 1)
+            bins[i] += b
+        return [b / dt / 1e9 for b in bins]

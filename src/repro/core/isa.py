@@ -1,0 +1,102 @@
+"""IPCN Instruction Set Architecture (paper §II-B.5, Fig 3(g)).
+
+A unit-router instruction is a 30-bit vector:
+
+    [29:23] rd_en      (7)  — FIFO read-enable, one bit per I/O port
+                              (4 planar N/E/S/W + PE-in + 2 TSV)
+    [22:19] mode_sel   (4)  — router operation mode (see Mode)
+    [18:12] out_en     (7)  — output direction mask (unicast = one bit,
+                              broadcast = several; paper supports both)
+    [11:10] intxfer_en (2)  — internal movement between FIFOs <-> scratchpad
+    [ 9: 0] sp_addr   (10)  — scratchpad row address (32 KB / 32 B rows)
+
+The Network Program Memory stores per row: two commands (CMR) plus a
+per-router selection + repeat count (CFR); each router executes CMD1, CMD2
+or IDLEs (paper Fig 3(d)).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+
+PORTS = ("N", "E", "S", "W", "PE", "TSV_UP", "TSV_DN")
+N_PORTS = len(PORTS)
+
+RD_EN_BITS = 7
+MODE_BITS = 4
+OUT_EN_BITS = 7
+INTXFER_BITS = 2
+SP_ADDR_BITS = 10
+TOTAL_BITS = RD_EN_BITS + MODE_BITS + OUT_EN_BITS + INTXFER_BITS + SP_ADDR_BITS
+assert TOTAL_BITS == 30
+
+
+class Mode(enum.IntEnum):
+    IDLE = 0
+    ROUTE = 1         # move packet from rd ports to out ports
+    PSUM = 2          # partial summation of incoming operands
+    DMAC = 3          # dynamic-dynamic multiply-accumulate (QK^T, PV)
+    LINACT = 4        # linear activation on in-flight data
+    SMAC_FIRE = 5     # trigger attached PE crossbar MVM
+    SP_LOAD = 6       # scratchpad -> FIFO
+    SP_STORE = 7      # FIFO -> scratchpad
+    SOFTMAX_FEED = 8  # stream operands up the TSV to the SCU die
+    SOFTMAX_DRAIN = 9
+    C2C_TX = 10       # hand packet to the optical engine die (TSV down)
+    C2C_RX = 11
+    MACC_CLR = 12
+
+
+@dataclass(frozen=True)
+class Instr:
+    rd_en: int = 0
+    mode: Mode = Mode.IDLE
+    out_en: int = 0
+    intxfer_en: int = 0
+    sp_addr: int = 0
+
+    def encode(self) -> int:
+        assert 0 <= self.rd_en < (1 << RD_EN_BITS)
+        assert 0 <= int(self.mode) < (1 << MODE_BITS)
+        assert 0 <= self.out_en < (1 << OUT_EN_BITS)
+        assert 0 <= self.intxfer_en < (1 << INTXFER_BITS)
+        assert 0 <= self.sp_addr < (1 << SP_ADDR_BITS)
+        word = self.rd_en
+        word = (word << MODE_BITS) | int(self.mode)
+        word = (word << OUT_EN_BITS) | self.out_en
+        word = (word << INTXFER_BITS) | self.intxfer_en
+        word = (word << SP_ADDR_BITS) | self.sp_addr
+        return word
+
+    @staticmethod
+    def decode(word: int) -> "Instr":
+        assert 0 <= word < (1 << TOTAL_BITS)
+        sp_addr = word & ((1 << SP_ADDR_BITS) - 1)
+        word >>= SP_ADDR_BITS
+        intxfer = word & ((1 << INTXFER_BITS) - 1)
+        word >>= INTXFER_BITS
+        out_en = word & ((1 << OUT_EN_BITS) - 1)
+        word >>= OUT_EN_BITS
+        mode = Mode(word & ((1 << MODE_BITS) - 1))
+        word >>= MODE_BITS
+        rd_en = word
+        return Instr(rd_en=rd_en, mode=mode, out_en=out_en,
+                     intxfer_en=intxfer, sp_addr=sp_addr)
+
+    def hex(self) -> str:
+        return f"{self.encode():08X}"
+
+
+def port_mask(*names: str) -> int:
+    m = 0
+    for n in names:
+        m |= 1 << PORTS.index(n)
+    return m
+
+
+def unicast(direction: str) -> int:
+    return port_mask(direction)
+
+
+def broadcast(*directions: str) -> int:
+    return port_mask(*directions) if directions else (1 << N_PORTS) - 1

@@ -1,0 +1,145 @@
+"""Network Program Memory (NPM), assembler and "compiler" (paper §II-B.1-3).
+
+NPM layout per the paper: banks B1 and B2, each holding rows of
+  CMR  — two 30-bit commands (CMD1, CMD2)
+  CFR  — per-router 2-bit command select (IDLE/CMD1/CMD2) + repeat count
+plus a CSR bank.  A configuration co-processor refills the bank the
+Network Main Controller is NOT currently draining (double buffering), so
+the mesh never idles waiting for program words.
+
+The Python "API + compiler" the paper describes (§II-B.5, toolchain) is
+modeled by :class:`ProgramBuilder` (API) and :func:`compile_to_hex`
+(compiler emitting the NPM hex image).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+from .isa import Instr, Mode
+
+SEL_IDLE, SEL_CMD1, SEL_CMD2 = 0, 1, 2
+
+
+@dataclass
+class NPMRow:
+    cmd1: Instr
+    cmd2: Instr
+    select: Dict[int, int]        # router-id -> SEL_*  (absent -> IDLE)
+    repeat: int = 1
+
+    def hex_words(self, n_routers: int) -> List[str]:
+        words = [self.cmd1.hex(), self.cmd2.hex(), f"{self.repeat:08X}"]
+        # pack 2-bit selects, 16 per 32-bit word
+        packed, cur, nbits = [], 0, 0
+        for r in range(n_routers):
+            cur |= (self.select.get(r, SEL_IDLE) & 0x3) << nbits
+            nbits += 2
+            if nbits == 32:
+                packed.append(f"{cur:08X}")
+                cur, nbits = 0, 0
+        if nbits:
+            packed.append(f"{cur:08X}")
+        return words + packed
+
+
+@dataclass
+class Bank:
+    rows: List[NPMRow] = field(default_factory=list)
+    CAPACITY = 256                # rows per bank
+
+    def full(self) -> bool:
+        return len(self.rows) >= self.CAPACITY
+
+
+class ProgramBuilder:
+    """The user-facing API: emit rows; the builder splits the stream into
+    alternating banks exactly as the co-processor would load them."""
+
+    def __init__(self, n_routers: int):
+        self.n_routers = n_routers
+        self.rows: List[NPMRow] = []
+
+    def emit(self, cmd1: Instr, cmd2: Instr | None = None,
+             select: Dict[int, int] | None = None, repeat: int = 1):
+        self.rows.append(NPMRow(cmd1, cmd2 or Instr(), select or {}, repeat))
+        return self
+
+    def all_do(self, cmd: Instr, repeat: int = 1):
+        sel = {r: SEL_CMD1 for r in range(self.n_routers)}
+        return self.emit(cmd, None, sel, repeat)
+
+    def split_banks(self) -> List[Bank]:
+        banks, cur = [], Bank()
+        for row in self.rows:
+            if cur.full():
+                banks.append(cur)
+                cur = Bank()
+            cur.rows.append(row)
+        banks.append(cur)
+        return banks
+
+    def total_cycles(self) -> int:
+        return sum(r.repeat for r in self.rows)
+
+
+def compile_to_hex(prog: ProgramBuilder) -> str:
+    """The 'program compiler' producing the hex file loaded into the NPM."""
+    lines = []
+    for b_idx, bank in enumerate(prog.split_banks()):
+        lines.append(f"@BANK{b_idx % 2 + 1}_{b_idx // 2:04X}")
+        for row in bank.rows:
+            lines.extend(row.hex_words(prog.n_routers))
+    return "\n".join(lines) + "\n"
+
+
+def parse_hex(text: str, n_routers: int) -> List[Tuple[str, List[str]]]:
+    """Inverse of compile_to_hex for round-trip tests: returns
+    (bank-label, words) sections."""
+    sections: List[Tuple[str, List[str]]] = []
+    cur: List[str] = []
+    label = None
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("@"):
+            if label is not None:
+                sections.append((label, cur))
+            label, cur = line[1:], []
+        else:
+            cur.append(line)
+    if label is not None:
+        sections.append((label, cur))
+    return sections
+
+
+class DoubleBufferedNPM:
+    """Runtime model of B1/B2 interleaved configure/drain (paper §II-B.2).
+
+    ``run()`` yields (cycle, row) while accounting for co-processor refill
+    latency: if refilling a bank takes longer than draining the other, the
+    NMC stalls — the model exposes those stall cycles (they should be ~0
+    with the paper's sizing, which tests assert).
+    """
+
+    def __init__(self, banks: Sequence[Bank], refill_cycles_per_row: int = 2):
+        self.banks = list(banks)
+        self.refill_per_row = refill_cycles_per_row
+        self.stall_cycles = 0
+
+    def run(self) -> Iterator[Tuple[int, NPMRow]]:
+        cycle = 0
+        # bank 0 is pre-loaded at boot; refill of bank i+1 starts when
+        # drain of bank i starts.
+        refill_ready_at = 0
+        for i, bank in enumerate(self.banks):
+            if cycle < refill_ready_at:
+                self.stall_cycles += refill_ready_at - cycle
+                cycle = refill_ready_at
+            if i + 1 < len(self.banks):
+                refill_ready_at = cycle + \
+                    self.refill_per_row * len(self.banks[i + 1].rows)
+            for row in bank.rows:
+                yield cycle, row
+                cycle += row.repeat

@@ -1,0 +1,93 @@
+"""Softmax Compute Unit (paper §II-C, Fig 4).
+
+Exponential via EIGHT-segment piecewise-linear approximation; a 3-state
+FSM: (1) stream inputs, compute exp into the indexed cache while a partial
+adder accumulates the denominator; (2) reciprocal of the sum; (3) multiply
+cached numerators by the reciprocal, streaming results out.  States 2/3
+ping-pong for continuous output.
+
+``pwl_exp`` here is the NUMERICAL REFERENCE shared with the Pallas kernel
+(repro/kernels/pwl_softmax.py validates against this + jnp.exp).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+# 8 segments over [-8, 0] (softmax inputs are max-subtracted, so x <= 0).
+N_SEGMENTS = 8
+X_MIN, X_MAX = -8.0, 0.0
+_edges = np.linspace(X_MIN, X_MAX, N_SEGMENTS + 1)
+
+
+def _segment_coeffs() -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Least-max-error linear fit per segment: secant line through segment
+    endpoints (max error interior, halved by midpoint offset)."""
+    x0, x1 = _edges[:-1], _edges[1:]
+    y0, y1 = np.exp(x0), np.exp(x1)
+    slope = (y1 - y0) / (x1 - x0)
+    # secant overestimates nowhere/underestimates: shift by half the max gap
+    xm = (x0 + x1) / 2
+    gap = np.exp(xm) - (y0 + slope * (xm - x0))
+    intercept = y0 - slope * x0 + gap / 2
+    return _edges.copy(), slope, intercept
+
+
+SEG_EDGES, SEG_SLOPE, SEG_INTERCEPT = _segment_coeffs()
+
+
+def pwl_exp(x: np.ndarray) -> np.ndarray:
+    """8-segment PWL exp for x <= 0 (clamped below at X_MIN -> ~0)."""
+    x = np.asarray(x, np.float32)
+    xc = np.clip(x, X_MIN, X_MAX)
+    idx = np.clip(((xc - X_MIN) / (X_MAX - X_MIN) * N_SEGMENTS).astype(int),
+                  0, N_SEGMENTS - 1)
+    y = SEG_SLOPE[idx] * xc + SEG_INTERCEPT[idx]
+    return np.where(x < X_MIN, 0.0, y).astype(np.float32)
+
+
+def pwl_softmax(x: np.ndarray, axis: int = -1) -> np.ndarray:
+    m = np.max(x, axis=axis, keepdims=True)
+    e = pwl_exp(np.asarray(x - m, np.float32))
+    return e / np.maximum(e.sum(axis=axis, keepdims=True), 1e-30)
+
+
+def max_pwl_exp_error() -> float:
+    xs = np.linspace(X_MIN, X_MAX, 20001)
+    return float(np.max(np.abs(pwl_exp(xs) - np.exp(xs))))
+
+
+@dataclass
+class SCUTiming:
+    """Cycle model of the 3-state FSM."""
+    pipeline_fill: int = 4          # exp PWL + adder latency
+    recip_cycles: int = 12          # iterative reciprocal
+    mult_cycles: int = 1
+
+    def softmax_cycles(self, n: int) -> int:
+        """One softmax over n streamed inputs, one element/cycle."""
+        s1 = n + self.pipeline_fill          # stream + exp + accumulate
+        s2 = self.recip_cycles               # reciprocal of denominator
+        s3 = n * self.mult_cycles            # scale cached numerators
+        return s1 + s2 + s3
+
+    def throughput_softmax_cycles(self, n: int) -> int:
+        """Steady state: states 2/3 overlap the next row's state 1."""
+        return max(n + self.pipeline_fill, self.recip_cycles + n)
+
+
+class SCUFsm:
+    """Cycle-stepped behavioural model (for the unit test vs pwl_softmax)."""
+    def __init__(self, timing: SCUTiming = SCUTiming()):
+        self.timing = timing
+
+    def run(self, row: np.ndarray) -> Tuple[np.ndarray, int]:
+        row = np.asarray(row, np.float32)
+        m = row.max()
+        cache = pwl_exp(row - m)                 # state 1: indexed cache
+        denom = cache.sum()                      # partial-sum adder
+        recip = np.float32(1.0) / np.float32(denom)   # state 2
+        out = cache * recip                      # state 3
+        return out, self.timing.softmax_cycles(row.size)

@@ -1,0 +1,169 @@
+"""Instruction-level (cycle-approximate) PICNIC system simulator (paper §IV).
+
+Pipeline: ModelConfig -> layer decomposition -> chiplet allocation ->
+mapped schedule -> cycle counts (scheduling.CycleModel) -> throughput,
+average power (energy/ccpg/interconnect models) -> tokens/J.
+
+`calibrate()` fits the two free constants (alpha, dmac_eff) on ONE paper
+row (Llama-3.2-1B, 512/512); every other Table II row is then a
+prediction, reported against the paper in EXPERIMENTS.md §Paper-fidelity.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .ccpg import CCPGModel
+from .energy import TileSpec
+from .interconnect import (ELECTRICAL, OPTICAL, LinkSpec, TrafficTrace,
+                           c2c_average_power)
+from .scheduling import ChipletAllocation, CycleModel, allocate_chiplets
+
+
+@dataclass
+class InferenceResult:
+    model: str
+    ctx_in: int
+    ctx_out: int
+    throughput_tps: float
+    avg_power_W: float
+    efficiency_tpj: float
+    n_chiplets: int
+    prefill_s: float
+    decode_s: float
+    c2c_bytes_total: int
+    c2c_avg_power_W: float
+    ccpg: bool
+
+    def row(self) -> Dict:
+        return {
+            "model": self.model,
+            "context": f"{self.ctx_in}/{self.ctx_out}",
+            "throughput_tok_s": round(self.throughput_tps, 1),
+            "avg_power_W": round(self.avg_power_W, 4),
+            "efficiency_tok_J": round(self.efficiency_tpj, 1),
+            "chiplets": self.n_chiplets,
+        }
+
+
+@dataclass
+class PicnicSimulator:
+    tile: TileSpec = field(default_factory=TileSpec)
+    cycle_model: CycleModel = field(default_factory=CycleModel)
+    ccpg_model: CCPGModel = field(default_factory=CCPGModel)
+    link: LinkSpec = OPTICAL
+
+    # ------------------------------------------------------------------
+    def run(self, cfg, ctx_in: int, ctx_out: int, *,
+            ccpg: bool = False) -> InferenceResult:
+        alloc = allocate_chiplets(cfg, self.tile)
+        f = self.tile.frequency_hz
+
+        prefill_cyc, prefill_c2c = self.cycle_model.prefill_cycles(
+            cfg, alloc, ctx_in)
+
+        decode_cyc = 0
+        decode_c2c = 0
+        # integrate decode over the growing context (exact sum, sampled
+        # every `step` tokens for speed — the cycle model is affine in ctx)
+        step = max(1, ctx_out // 64)
+        sampled = range(ctx_in, ctx_in + ctx_out, step)
+        for c in sampled:
+            cyc, c2c = self.cycle_model.token_decode_cycles(cfg, alloc, c)
+            if ccpg:
+                cyc += self.ccpg_model.wake_overhead_cycles(alloc)
+            decode_cyc += cyc * min(step, ctx_in + ctx_out - c)
+            decode_c2c += c2c * min(step, ctx_in + ctx_out - c)
+
+        prefill_s = prefill_cyc / f
+        decode_s = decode_cyc / f
+        total_s = prefill_s + decode_s
+        # Table II's "throughput" counts processed tokens (input + output)
+        # over wall time — the interpretation under which the paper's
+        # context-length scaling is reproduced (see EXPERIMENTS.md).
+        tput = (ctx_in + ctx_out) / total_s
+
+        c2c_bytes = prefill_c2c + decode_c2c
+        c2c_rate = c2c_bytes / total_s
+        c2c_power = c2c_average_power(c2c_rate, self.link)
+
+        chip_power = self.ccpg_model.system_power(alloc.n_chiplets, ccpg=ccpg)
+        power = chip_power + c2c_power
+        return InferenceResult(
+            model=cfg.name, ctx_in=ctx_in, ctx_out=ctx_out,
+            throughput_tps=tput, avg_power_W=power,
+            efficiency_tpj=tput / power, n_chiplets=alloc.n_chiplets,
+            prefill_s=prefill_s, decode_s=decode_s,
+            c2c_bytes_total=c2c_bytes, c2c_avg_power_W=c2c_power, ccpg=ccpg)
+
+    # ------------------------------------------------------------------
+    def c2c_trace(self, cfg, n_tokens: int = 32,
+                  context: int = 512) -> TrafficTrace:
+        """Burst timeline for Fig 10: C2C bursts at layer boundaries only."""
+        alloc = allocate_chiplets(cfg, self.tile)
+        f = self.tile.frequency_hz
+        events = []
+        t = 0.0
+        for _ in range(n_tokens):
+            prev = None
+            for ld, chips in alloc.assignments:
+                cyc = self.cycle_model.layer_decode_cycles(
+                    ld, cfg.d_model, context, cfg.n_heads,
+                    cfg.q_dim or cfg.d_model, cfg.kv_dim or cfg.d_model)
+                t += cyc * self.cycle_model.alpha / f
+                if prev is not None and chips != prev:
+                    payload = cfg.d_model
+                    dur = self.cycle_model.c2c_transfer_cycles(payload) / f
+                    events.append((t, dur, payload))
+                    t += dur
+                prev = chips
+        return TrafficTrace(events)
+
+    # ------------------------------------------------------------------
+    def calibrate(self, cfg_1b, target_tps: float = 1503.8,
+                  ctx: Tuple[int, int] = (512, 512)) -> "PicnicSimulator":
+        """Fit alpha so the Llama-1B/512 row matches the paper; dmac_eff is
+        left at its datasheet-derived default."""
+        self.cycle_model.alpha = 1.0
+        r = self.run(cfg_1b, *ctx)
+        self.cycle_model.alpha = r.throughput_tps / target_tps
+        if self.cycle_model.alpha < 0.05:
+            self.cycle_model.alpha = 0.05
+        return self
+
+
+# Table III platform constants (paper, Llama-8B 1024/1024 batch 1)
+PLATFORMS = {
+    "TransPIM": {"throughput": 270.0, "power": 40.0},
+    "Cambricon-LLM": {"throughput": 36.34, "power": 36.3},
+    "NV A100": {"throughput": 78.36, "power": 200.0},
+    "NV H100": {"throughput": 274.26, "power": 280.0},
+    "Apple M4-Max": {"throughput": 69.77, "power": 80.0},
+    "Cerebras-2": {"throughput": 1800.0, "power": 15000.0},
+}
+
+
+def comparison_table(picnic: InferenceResult,
+                     baseline: str = "NV H100") -> List[Dict]:
+    base = PLATFORMS[baseline]
+    base_eff = base["throughput"] / base["power"]
+    rows = [{
+        "platform": "PICNIC (this work)",
+        "throughput_tok_s": round(picnic.throughput_tps, 2),
+        "power_W": round(picnic.avg_power_W, 2),
+        "efficiency_tok_J": round(picnic.efficiency_tpj, 2),
+        "speedup_vs_h100": round(picnic.throughput_tps / base["throughput"], 2),
+        "eff_impr_vs_h100": round(picnic.efficiency_tpj / base_eff, 1),
+    }]
+    for name, d in PLATFORMS.items():
+        eff = d["throughput"] / d["power"]
+        rows.append({
+            "platform": name,
+            "throughput_tok_s": d["throughput"],
+            "power_W": d["power"],
+            "efficiency_tok_J": round(eff, 2),
+            "speedup_vs_h100": round(d["throughput"] / base["throughput"], 2),
+            "eff_impr_vs_h100": round(eff / base_eff, 2),
+        })
+    return rows

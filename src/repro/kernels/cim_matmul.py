@@ -1,0 +1,100 @@
+"""RRAM-CIM matmul arithmetic model as a Pallas TPU kernel.
+
+The paper's PE is a 256x256 RRAM crossbar: 8-bit weights as conductances,
+activations DAC'd in, analog MACs, ADC readout with a feedback-calibrated
+scale that uses the full ADC input swing (paper §II-A).  Device physics
+does not transfer to TPU (DESIGN.md §3); what we keep is the ARITHMETIC:
+
+  * weights int8-quantized per 256-row tile with per-column scales,
+  * activations int8-quantized per 256-row input slice (DAC range),
+  * integer accumulate per tile (analog partial sum),
+  * ADC: partial sums quantized to `adc_bits` codes with a per-tile
+    calibration scale (the feedback loop maximizing ADC input swing),
+  * fp32 recombination with the calibration scales.
+
+The kernel walks a (M/bm, N/bn, K/256) grid; each K step is one crossbar's
+contribution, accumulated in a VMEM scratch buffer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_K = 256
+
+
+def quantize_weights(w, bits: int = 8):
+    """Symmetric int8 quantization per (crossbar-tile, column).
+    w: (K, N) -> (wq int8 (K, N), scales (K // TILE_K, N))."""
+    K, N = w.shape
+    kt = K // TILE_K
+    wt = w.reshape(kt, TILE_K, N).astype(jnp.float32)
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = (jnp.max(jnp.abs(wt), axis=1) + 1e-9) / qmax      # (kt, N)
+    wq = jnp.clip(jnp.round(wt / scale[:, None, :]), -qmax, qmax)
+    return wq.reshape(K, N).astype(jnp.int8), scale
+
+
+def _cim_kernel(x_ref, wq_ref, wscale_ref, o_ref, acc_ref, *,
+                kt, adc_bits, act_bits):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                   # (bm, TILE_K)
+    # DAC: per-row activation quantization to the input range
+    qmax_a = 2.0 ** (act_bits - 1) - 1
+    xs = (jnp.max(jnp.abs(x), axis=1, keepdims=True) + 1e-9) / qmax_a
+    xq = jnp.clip(jnp.round(x / xs), -qmax_a, qmax_a)
+    wq = wq_ref[...].astype(jnp.float32)                 # (TILE_K, bn)
+    # analog MAC: integer dot = one crossbar fire
+    psum = xq @ wq                                       # (bm, bn)
+    # ADC with feedback calibration to the observed swing (paper §II-A)
+    adc_max = 2.0 ** (adc_bits - 1) - 1
+    cal = jnp.maximum(jnp.max(jnp.abs(psum)), 1.0)
+    code = jnp.clip(jnp.round(psum / cal * adc_max), -adc_max, adc_max)
+    psum_q = code * (cal / adc_max)
+    # recombine with DAC + weight scales
+    wscale = wscale_ref[...].astype(jnp.float32)         # (1, bn)
+    acc_ref[...] += psum_q * xs * wscale
+
+    @pl.when(ki == kt - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "adc_bits", "act_bits", "interpret"))
+def cim_matmul(x, wq, wscale, *, block_m: int = 128, block_n: int = 256,
+               adc_bits: int = 12, act_bits: int = 8,
+               interpret: bool = True):
+    """x: (M, K) float; wq: (K, N) int8; wscale: (K//256, N) fp32.
+    Returns (M, N) float32 — the CIM-quantized product."""
+    M, K = x.shape
+    _, N = wq.shape
+    assert K % TILE_K == 0, "K must be a multiple of the crossbar rows"
+    kt = K // TILE_K
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    assert M % block_m == 0 and N % block_n == 0
+    grid = (M // block_m, N // block_n, kt)
+    return pl.pallas_call(
+        functools.partial(_cim_kernel, kt=kt, adc_bits=adc_bits,
+                          act_bits=act_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, TILE_K), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TILE_K, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, wq, wscale)

@@ -1,0 +1,108 @@
+"""FlashAttention Pallas TPU kernel with optional PWL-exp (SCU) softmax.
+
+The paper schedules FlashAttention's two-level nested loop over the IPCN
+mesh with DMAC routers doing QK^T/PV and the SCU die doing softmax.  The
+TPU adaptation tiles the loop for VMEM/MXU instead: the grid walks
+(batch*heads, q_blocks); the kernel body runs the kv loop with an online
+softmax carried in VMEM scratch.  MXU-aligned block sizes (multiples of
+128) are chosen by the wrapper.
+
+``use_pwl=True`` swaps jnp.exp for the SCU's 8-segment PWL approximation —
+the numerical-fidelity experiment for the paper's softmax unit lives in
+tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .pwl_softmax import _pwl_exp_vec
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_blocks, block_k,
+                  causal, use_pwl, scale):
+    # q_ref: (block_q, D); k_ref/v_ref: (S, D); o_ref: (block_q, D)
+    block_q, D = q_ref.shape
+    q = q_ref[...].astype(jnp.float32) * scale
+    qi = pl.program_id(1)
+
+    def exp_fn(x):
+        return _pwl_exp_vec(x) if use_pwl else jnp.exp(x)
+
+    def body(ki, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[pl.dslice(ki * block_k, block_k), :]
+        v = v_ref[pl.dslice(ki * block_k, block_k), :]
+        s = q @ k.astype(jnp.float32).T                     # (bq, bk)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = exp_fn(s - m_new[:, None])
+        l_cur = jnp.sum(p, axis=-1)
+        alpha = exp_fn(m_prev[:, None] - m_new[:, None])[:, 0]
+        l_new = l_prev * alpha + l_cur
+        acc = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    a0 = jnp.zeros((block_q, D), jnp.float32)
+    if causal:
+        # only kv blocks at or below this q block contribute
+        hi = jax.lax.min(jnp.int32(kv_blocks),
+                         (qi + 1) * block_q // block_k
+                         + jnp.int32(block_q % block_k != 0) + 1)
+        hi = jax.lax.min(hi, jnp.int32(kv_blocks))
+        m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    else:
+        m, l, acc = jax.lax.fori_loop(0, kv_blocks, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "use_pwl", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, use_pwl: bool = False,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """q: (B, Sq, H, D); k/v: (B, Skv, H, D) (same head count — the GQA
+    repeat happens in ops.py).  Returns (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = D ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0, "pad upstream"
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, D)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, Skv, D)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, Skv, D)
+
+    kv_blocks = Skv // block_k
+    grid = (B * H, Sq // block_q)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, kv_blocks=kv_blocks,
+                          block_k=block_k, causal=causal, use_pwl=use_pwl,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, Skv, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, Skv, D), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return jnp.moveaxis(out.reshape(B, H, Sq, D), 1, 2)

@@ -1,0 +1,69 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the Pallas kernels compile natively; everywhere else (this CPU
+container) they run in interpret mode, and the framework's default model
+paths use the pure-jnp implementations (models/attention.py etc.) which the
+kernels are validated against in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import cim_matmul as _cim
+from . import flash_attention as _fa
+from . import pwl_softmax as _ps
+from . import ssd_scan as _ssd
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not on_tpu()
+
+
+def pwl_softmax(x, **kw):
+    return _ps.pwl_softmax(x, interpret=_interp(), **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, use_pwl=False, **kw):
+    """GQA-aware wrapper: repeats K/V heads to match Q, pads seq to the
+    block size, then calls the kernel."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    block_q = kw.pop("block_q", 128)
+    block_k = kw.pop("block_k", 128)
+    bq = min(block_q, Sq)
+    pad_q = (-Sq) % bq
+    Skv = k.shape[1]
+    bk = min(block_k, Skv)
+    pad_k = (-Skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        # padded K rows must not win the softmax: rely on causal mask
+        # (padded q rows attend only within real rows for causal=True)
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    out = _fa.flash_attention(q, k, v, causal=causal, use_pwl=use_pwl,
+                              block_q=bq, block_k=bk,
+                              interpret=_interp(), **kw)
+    return out[:, :Sq]
+
+
+def cim_matmul(x, w, *, weight_bits=8, **kw):
+    """Quantize weights then run the CIM kernel."""
+    wq, wscale = _cim.quantize_weights(w, bits=weight_bits)
+    return _cim.cim_matmul(x, wq, wscale, interpret=_interp(), **kw)
+
+
+def ssd_scan(x, dt, a_neg, B, C, **kw):
+    return _ssd.ssd_scan(x, dt, a_neg, B, C, interpret=_interp(), **kw)

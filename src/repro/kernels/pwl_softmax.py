@@ -1,0 +1,68 @@
+"""SCU softmax as a Pallas TPU kernel (paper §II-C adapted to TPU).
+
+The paper's Softmax Compute Unit evaluates exp() with an 8-segment
+piecewise-linear approximation and streams: exp -> partial-sum -> reciprocal
+-> scale.  The TPU adaptation tiles rows into VMEM blocks; the PWL exp is a
+chain of vector selects (VPU-friendly — no transcendental unit needed,
+matching the SCU's motivation).
+
+Numerics match ``repro.core.scu.pwl_exp`` exactly (same segment coeffs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.scu import N_SEGMENTS, SEG_INTERCEPT, SEG_SLOPE, X_MAX, X_MIN
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _pwl_exp_vec(x):
+    """8-segment PWL exp for x <= 0 via select chain (vector-unit friendly)."""
+    xc = jnp.clip(x, X_MIN, X_MAX)
+    seg_w = (X_MAX - X_MIN) / N_SEGMENTS
+    y = jnp.zeros_like(xc)
+    for i in range(N_SEGMENTS):
+        lo = X_MIN + i * seg_w
+        sel = (xc >= lo) if i else jnp.ones_like(xc, bool)
+        y = jnp.where(sel, SEG_SLOPE[i] * xc + SEG_INTERCEPT[i], y)
+    return jnp.where(x < X_MIN, 0.0, y)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = _pwl_exp_vec(x - m)                      # state 1: exp + cache
+    s = jnp.sum(e, axis=-1, keepdims=True)       # state 1: partial sum
+    r = 1.0 / jnp.maximum(s, 1e-30)              # state 2: reciprocal
+    o_ref[...] = (e * r).astype(o_ref.dtype)     # state 3: scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def pwl_softmax(x, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                interpret: bool = True):
+    """Row softmax with PWL exp.  x: (..., n); softmax over the last dim."""
+    orig_shape = x.shape
+    n = orig_shape[-1]
+    rows = int(np.prod(orig_shape[:-1])) if len(orig_shape) > 1 else 1
+    x2 = x.reshape(rows, n)
+    br = min(block_rows, rows)
+    # pad rows to a multiple of the block
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // br,)
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2)
+    return out[:rows].reshape(orig_shape)

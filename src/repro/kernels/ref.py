@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scu import N_SEGMENTS, SEG_INTERCEPT, SEG_SLOPE, X_MAX, X_MIN
+from repro.models.attention import full_attention
+from repro.models.ssm import ssd_chunked
+from .cim_matmul import TILE_K
+
+
+def ref_pwl_exp(x):
+    x = jnp.asarray(x, jnp.float32)
+    xc = jnp.clip(x, X_MIN, X_MAX)
+    idx = jnp.clip(((xc - X_MIN) / (X_MAX - X_MIN) * N_SEGMENTS)
+                   .astype(jnp.int32), 0, N_SEGMENTS - 1)
+    y = jnp.asarray(SEG_SLOPE)[idx] * xc + jnp.asarray(SEG_INTERCEPT)[idx]
+    return jnp.where(x < X_MIN, 0.0, y)
+
+
+def ref_pwl_softmax(x, axis: int = -1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = ref_pwl_exp(x - m)
+    return (e / jnp.maximum(e.sum(axis=axis, keepdims=True), 1e-30)) \
+        .astype(x.dtype)
+
+
+def ref_softmax(x, axis: int = -1):
+    return jax.nn.softmax(x.astype(jnp.float32), axis=axis).astype(x.dtype)
+
+
+def ref_flash_attention(q, k, v, *, causal=True):
+    """Exact attention (same head count for q and k/v)."""
+    return full_attention(q, k, v, causal=causal)
+
+
+def ref_pwl_attention(q, k, v, *, causal=True):
+    """Attention with PWL-exp softmax (the SCU numerics, dense form)."""
+    B, Sq, H, D = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, k.shape[1]), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = ref_pwl_exp(s - m)
+    p = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_cim_matmul(x, wq, wscale, *, adc_bits=12, act_bits=8):
+    """Tile-exact oracle of kernels.cim_matmul (block_m = M, block_n = N)."""
+    M, K = x.shape
+    N = wq.shape[1]
+    kt = K // TILE_K
+    x32 = x.astype(jnp.float32).reshape(M, kt, TILE_K)
+    wq32 = wq.astype(jnp.float32).reshape(kt, TILE_K, N)
+    qmax_a = 2.0 ** (act_bits - 1) - 1
+    adc_max = 2.0 ** (adc_bits - 1) - 1
+    out = jnp.zeros((M, N), jnp.float32)
+    for ki in range(kt):
+        xk = x32[:, ki]
+        xs = (jnp.max(jnp.abs(xk), axis=1, keepdims=True) + 1e-9) / qmax_a
+        xqk = jnp.clip(jnp.round(xk / xs), -qmax_a, qmax_a)
+        psum = xqk @ wq32[ki]
+        cal = jnp.maximum(jnp.max(jnp.abs(psum)), 1.0)
+        code = jnp.clip(jnp.round(psum / cal * adc_max), -adc_max, adc_max)
+        psum_q = code * (cal / adc_max)
+        out = out + psum_q * xs * wscale[ki][None, :]
+    return out
+
+
+def ref_exact_matmul(x, w):
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)
+
+
+def ref_ssd(x, dt, a_neg, B, C, *, chunk=128):
+    y, _ = ssd_chunked(x, dt, a_neg, B, C, chunk)
+    return y
+
+
+def ref_ssd_recurrent(x, dt, a_neg, B, C):
+    """Step-by-step recurrence — the independent slow oracle."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    state = jnp.zeros((b, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        dtt = dt[:, t].astype(jnp.float32)                     # (b, H)
+        dA = jnp.exp(dtt * a_neg[None, :])
+        upd = jnp.einsum("bhp,bn,bh->bhpn", x[:, t].astype(jnp.float32),
+                         B[:, t].astype(jnp.float32), dtt)
+        state = state * dA[..., None, None] + upd
+        ys.append(jnp.einsum("bhpn,bn->bhp", state,
+                             C[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1)

@@ -1,0 +1,88 @@
+"""Mamba2 SSD chunk scan as a Pallas TPU kernel.
+
+The chunked SSD algorithm (models/ssm.py) has one serial dimension — the
+chunk index carrying the (P, N) state.  The kernel maps (batch*heads) to
+grid dim 0 and chunks to grid dim 1; TPU grid iterations run sequentially
+per core, so the inter-chunk state lives in a VMEM scratch that persists
+across the chunk dimension.  Intra-chunk work is MXU matmuls on (L, L) and
+(L, N) blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                nc):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xk = x_ref[...].astype(jnp.float32)          # (L, P)
+    dtk = dt_ref[...].astype(jnp.float32)        # (L, 1)
+    a = a_ref[0, 0]                              # scalar A (this head)
+    Bk = b_ref[...].astype(jnp.float32)          # (L, N)
+    Ck = c_ref[...].astype(jnp.float32)          # (L, N)
+    L = xk.shape[0]
+
+    dA = dtk[:, 0] * a                           # (L,)
+    cs = jnp.cumsum(dA)                          # (L,)
+    seg = cs[:, None] - cs[None, :]              # (L, L)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    Lmat = jnp.where(tri, jnp.exp(seg), 0.0)
+    att = (Ck @ Bk.T) * Lmat                     # (L, L)
+    xdt = xk * dtk                               # (L, P)
+    y = att @ xdt                                # intra-chunk
+    state = state_ref[...].astype(jnp.float32)   # (P, N)
+    y += jnp.exp(cs)[:, None] * (Ck @ state.T)   # inter-chunk contribution
+    decay = jnp.exp(cs[-1] - cs)                 # (L,)
+    new_state = (xk * dtk * decay[:, None]).T @ Bk      # (P, N)
+    state_ref[...] = jnp.exp(cs[-1]) * state + new_state
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_neg, B, C, *, chunk: int = 128,
+             interpret: bool = True):
+    """x: (b, S, H, P); dt: (b, S, H) (>0); a_neg: (H,) (<0);
+    B, C: (b, S, N).  Returns y: (b, S, H, P) float32.
+
+    Equivalent to models.ssm.ssd_chunked (the jnp oracle)."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+
+    # layout: fold (b, H) into grid dim 0; chunks into grid dim 1
+    xf = jnp.moveaxis(x, 2, 1).reshape(b * H, nc, L, P)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(b * H, nc, L, 1)
+    af = jnp.tile(a_neg[None, :], (b, 1)).reshape(b * H, 1, 1)
+    Bf = jnp.broadcast_to(B[:, None], (b, H, S, N)).reshape(b * H, nc, L, N)
+    Cf = jnp.broadcast_to(C[:, None], (b, H, S, N)).reshape(b * H, nc, L, N)
+
+    grid = (b * H, nc)
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, L, P), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((None, None, L, 1), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((None, 1, 1), lambda g, c: (g, 0, 0)),
+            pl.BlockSpec((None, None, L, N), lambda g, c: (g, c, 0, 0)),
+            pl.BlockSpec((None, None, L, N), lambda g, c: (g, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, L, P), lambda g, c: (g, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * H, nc, L, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, Bf, Cf)
+    return jnp.moveaxis(y.reshape(b, H, S, P), 1, 2)

@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the abstract args for the step function
+of the shape's kind:
+  train   -> batch {tokens, labels [, prefix_embeds | encoder_embeds]}
+  prefill -> batch {tokens [, ...stubs]}
+  decode  -> (token, cache, cache_len)
+Modality frontends are STUBS per the assignment: the vlm/audio entries get
+precomputed patch/frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs import ShapeSpec
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _stub_inputs(cfg, batch: int):
+    extra = {}
+    if cfg.n_prefix_tokens:
+        extra["prefix_embeds"] = SDS((batch, cfg.n_prefix_tokens, cfg.d_model),
+                                     jnp.dtype(cfg.dtype))
+    if cfg.is_encoder_decoder:
+        extra["encoder_embeds"] = SDS((batch, cfg.encoder_seq, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+    return extra
+
+
+def train_batch_specs(cfg, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((B, S), jnp.int32),
+             "labels": SDS((B, S), jnp.int32)}
+    batch.update(_stub_inputs(cfg, B))
+    return batch
+
+
+def prefill_batch_specs(cfg, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((B, S), jnp.int32)}
+    batch.update(_stub_inputs(cfg, B))
+    return batch
+
+
+def decode_arg_specs(cfg, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: models.init_cache(cfg, B, S))
+    token = SDS((B, 1), jnp.int32)
+    cache_len = SDS((), jnp.int32)
+    return token, cache, cache_len
+
+
+def params_shapes(cfg):
+    return jax.eval_shape(
+        lambda: models.init_params(cfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,242 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e-like, per assignment):
+  peak bf16 compute : 197 TFLOP/s per chip
+  HBM bandwidth     : 819 GB/s per chip
+  ICI               : ~50 GB/s per link; ring collectives use 2 links
+                      effectively (bidirectional ring) -> 100 GB/s wire BW.
+
+Terms (seconds, per step, per chip — cost_analysis of an SPMD-partitioned
+module is already per-partition):
+  compute    = HLO_FLOPs / peak
+  memory     = HLO_bytes_accessed / hbm_bw
+  collective = wire_bytes / ici_bw
+where wire_bytes follows the standard ring model per collective op:
+  all-gather      (g-1)/g * out_bytes
+  reduce-scatter  (g-1)/g * in_bytes
+  all-reduce      2 (g-1)/g * in_bytes
+  all-to-all      (g-1)/g * in_bytes
+  collective-permute  in_bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_LINK_BW = 50e9
+ICI_WIRE_BW = 2 * ICI_LINK_BW   # bidirectional ring
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\(|\w).*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> Dict[str, Dict]:
+    """Sum logical + ring-model wire bytes per collective type from
+    (partitioned) HLO text.  Shapes in the partitioned module are
+    per-device, so byte counts are per-chip."""
+    out: Dict[str, Dict] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        out_shape, op = m.group(1), m.group(2)
+        # operand types are not inlined in this HLO dialect; derive traffic
+        # from the (per-device) OUTPUT shape + the ring model.
+        out_bytes = _shape_bytes(out_shape)
+        g = total_devices
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm2 = _GROUPS_EXPL_RE.search(line)
+            if gm2:
+                g = len(gm2.group(1).split(","))
+        g = max(g, 1)
+        ring = (g - 1) / g
+        if op == "all-gather":          # out = g x in
+            wire = out_bytes * ring
+            logical = out_bytes
+        elif op == "all-reduce":        # out = in
+            wire = 2 * out_bytes * ring
+            logical = out_bytes
+        elif op == "reduce-scatter":    # in = g x out
+            wire = out_bytes * g * ring
+            logical = out_bytes * g
+        elif op == "all-to-all":        # in = out
+            wire = out_bytes * ring
+            logical = out_bytes
+        else:  # collective-permute
+            wire = out_bytes
+            logical = out_bytes
+        d = out.setdefault(op, {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += logical
+        d["wire_bytes"] += wire
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float):
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": hbm_bytes / HBM_BW,
+        "collective_s": wire_bytes / ICI_WIRE_BW,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM traffic (per chip, per step)
+#
+# The HLO-parsed byte count is structurally inflated on the CPU backend
+# (bf16->f32 converts, CPU fusion boundaries that a TPU would fuse away),
+# so the memory roofline term uses this first-principles model; the parsed
+# number is recorded alongside as an upper bound.
+# ---------------------------------------------------------------------------
+
+def analytic_memory_bytes(cfg, shape, mesh_shape: dict, mode: str) -> float:
+    """Per-chip HBM bytes touched per step."""
+    nchips = 1
+    for v in mesh_shape.values():
+        nchips *= v
+    model_div = mesh_shape.get("model", 1)
+    N = cfg.n_params(include_embeddings=True)
+    P = 2.0 * N                              # bf16 weight bytes
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    tokens_local = B * S / nchips
+
+    if mode == "train":
+        # params: fwd + remat-fwd + bwd weight reads (gathered per layer,
+        # each chip streams the full gathered weights from HBM per pass)
+        w = 3.0 * P
+        # grads (bf16 w+r) + AdamW moments (fp32 r+w each), ZeRO-sharded
+        opt = (4.0 * N + 16.0 * N) / nchips if cfg.optimizer == "adamw" \
+            else (4.0 * N) / nchips
+        # activations: ~12 tensor r/w per layer per token (remat keeps the
+        # working set at one layer)
+        layers = cfg.n_layers + (cfg.n_encoder_layers if cfg.is_encoder_decoder else 0)
+        act = 12.0 * layers * tokens_local * d * 2.0
+        logits = 6.0 * tokens_local * cfg.vocab_size  # fp32 r/w + bf16
+        return w + opt + act + logits
+    if mode == "prefill":
+        w = 1.0 * P
+        layers = cfg.n_layers + (cfg.n_encoder_layers if cfg.is_encoder_decoder else 0)
+        act = 8.0 * layers * tokens_local * d * 2.0
+        cache = 2.0 * _cache_bytes(cfg, B, S) / nchips
+        return w + act + cache
+    # decode: every (TP-sharded) weight shard is read once per token;
+    # the KV cache shard is read (+appended) once.
+    if cfg.moe:
+        # only the routed experts' weights are streamed from HBM per token
+        # (with batch > experts all experts are usually hit; keep the
+        # active-param bound, which is what a well-scheduled kernel reads)
+        w = 2.0 * cfg.active_params(True) / max(model_div, 1)
+    else:
+        w = P / max(model_div, 1)
+    cache = _cache_bytes(cfg, B, S) / nchips
+    act = 30.0 * cfg.n_layers * (B / max(nchips / model_div, 1)) * d * 2.0
+    return w + cache + act
+
+
+def _cache_bytes(cfg, B: int, S: int) -> float:
+    """Global KV/state cache bytes."""
+    kinds_attn = 0
+    if cfg.family in ("dense", "moe", "vlm"):
+        kinds_attn = cfg.n_layers
+    elif cfg.family == "hybrid":
+        kinds_attn = cfg.n_layers // max(cfg.attn_every, 1)
+    elif cfg.family == "audio":
+        kinds_attn = cfg.n_layers
+    kv = 2.0 * kinds_attn * B * S * cfg.kv_dim * 2.0
+    if cfg.is_encoder_decoder:
+        kv += 2.0 * cfg.n_layers * B * cfg.encoder_seq * cfg.kv_dim * 2.0
+    ssm = 0.0
+    if cfg.ssm is not None:
+        n_ssm = cfg.n_layers if cfg.family == "ssm" else \
+            cfg.n_layers - cfg.n_layers // max(cfg.attn_every, 1) \
+            if cfg.family == "hybrid" else 0
+        di = cfg.ssm.expand * cfg.d_model
+        H = di // cfg.ssm.head_dim
+        ssm = n_ssm * B * (H * cfg.ssm.head_dim * cfg.ssm.d_state * 4.0
+                           + (cfg.ssm.conv_width - 1) * (di + 2 * cfg.ssm.d_state) * 2.0)
+    return kv + ssm
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (global, whole step)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape) -> float:
+    """Useful-math FLOPs for the step: 6·N·D train / 2·N·D inference
+    (N = active non-embedding params + lm head), plus exact attention terms.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    N = cfg.active_params(include_embeddings=False)
+    head = cfg.d_model * cfg.vocab_size          # logits matmul params
+    n_attn_layers = _attn_layer_count(cfg)
+    if shape.kind == "train":
+        tokens = B * S
+        mm = 6.0 * (N + head) * tokens
+        attn = 3 * 2 * 2 * B * n_attn_layers * cfg.q_dim * _causal_pairs(cfg, S)
+        return mm + attn
+    if shape.kind == "prefill":
+        tokens = B * S
+        mm = 2.0 * (N + head) * tokens
+        attn = 2 * 2 * B * n_attn_layers * cfg.q_dim * _causal_pairs(cfg, S)
+        if cfg.is_encoder_decoder:
+            mm += 2.0 * N * B * cfg.encoder_seq   # encoder pass (approx)
+        return mm + attn
+    # decode: one token against an S-long cache
+    mm = 2.0 * (N + head) * B
+    kv_span = S if cfg.sliding_window is None else min(S, cfg.sliding_window)
+    attn = 2 * 2 * B * n_attn_layers * cfg.q_dim * kv_span
+    return mm + attn
+
+
+def _attn_layer_count(cfg) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    if cfg.is_encoder_decoder:
+        return cfg.n_layers + cfg.n_encoder_layers
+    return cfg.n_layers
+
+
+def _causal_pairs(cfg, S: int) -> float:
+    if cfg.sliding_window is not None and S > cfg.sliding_window:
+        w = cfg.sliding_window
+        return w * (w + 1) / 2 + (S - w) * w
+    return S * (S + 1) / 2

@@ -1,0 +1,6 @@
+from .model import (decode_step, forward, group_layout, init_cache,
+                    init_params)
+from .common import count_params, tree_bytes
+
+__all__ = ["decode_step", "forward", "group_layout", "init_cache",
+           "init_params", "count_params", "tree_bytes"]

@@ -1,0 +1,38 @@
+"""Feed-forward sublayers: SwiGLU / GeGLU / plain GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACTS, dense_init, dtype_of
+from repro.sharding.ctx import shard_hint
+
+
+def init_mlp(cfg, key, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], (d, d_ff), dt),
+            "w_up": dense_init(ks[1], (d, d_ff), dt),
+            "w_down": dense_init(ks[2], (d_ff, d), dt),
+        }
+    return {  # plain 2-matrix MLP (whisper)
+        "w_up": dense_init(ks[0], (d, d_ff), dt),
+        "w_down": dense_init(ks[1], (d_ff, d), dt),
+        "b_up": jnp.zeros((d_ff,), dt),
+        "b_down": jnp.zeros((d,), dt),
+    }
+
+
+def mlp_sublayer(cfg, p, x):
+    act = ACTS[cfg.mlp]
+    if cfg.mlp in ("swiglu", "geglu"):
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = shard_hint(h, "act_ffn")
+        return h @ p["w_down"]
+    h = act(x @ p["w_up"] + p["b_up"])
+    h = shard_hint(h, "act_ffn")
+    return h @ p["w_down"] + p["b_down"]

@@ -1,0 +1,188 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked for long sequences.
+
+The chunked SSD algorithm follows the Mamba2 paper: within a chunk the
+recurrence is computed in its dual quadratic-attention form (MXU-friendly
+matmuls); across chunks a ``lax.scan`` carries the (H, P, N) state.  All
+per-chunk work happens inside the scan body so peak memory is
+O(chunk^2 * H), never O(S^2).
+
+Decode is the O(1) recurrent update — this is why the SSM/hybrid archs run
+the 500k-context shape (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, dtype_of, rmsnorm, silu
+from repro.sharding.ctx import shard_hint
+
+
+def d_inner_of(cfg) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def n_ssm_heads(cfg) -> int:
+    return d_inner_of(cfg) // cfg.ssm.head_dim
+
+
+def conv_dim_of(cfg) -> int:
+    return d_inner_of(cfg) + 2 * cfg.ssm.d_state
+
+
+def init_mamba(cfg, key):
+    ssm = cfg.ssm
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    di = d_inner_of(cfg)
+    H = n_ssm_heads(cfg)
+    N = ssm.d_state
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z di | x di | B N | C N | dt H]
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + H), dt),
+        "conv_w": dense_init(ks[1], (ssm.conv_width, di + 2 * N), dt, scale=0.5),
+        "conv_b": jnp.zeros((di + 2 * N,), dt),
+        "a_log": jnp.zeros((H,), jnp.float32),     # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dt),
+        "out_proj": dense_init(ks[2], (di, d), dt),
+    }
+
+
+def _split_in_proj(cfg, zxbcdt):
+    di = d_inner_of(cfg)
+    N = cfg.ssm.d_state
+    H = n_ssm_heads(cfg)
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, width):
+    """Depthwise causal conv via shifted adds.  xBC: (B, S, Cd); w: (W, Cd)."""
+    out = xBC * w[width - 1]
+    for i in range(1, width):
+        shifted = jnp.pad(xBC, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[width - 1 - i]
+    return silu(out + b)
+
+
+def ssd_chunked(x, dt, a_neg, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x: (b, S, H, P) — *not* yet multiplied by dt;
+    dt: (b, S, H) positive; a_neg: (H,) negative; B, C: (b, S, N).
+    Returns y: (b, S, H, P) fp32 and final state (b, H, P, N).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    L = min(chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(b, nc, L, H, P).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, L, H).astype(jnp.float32)
+    Bc = B.reshape(b, nc, L, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, L, N).astype(jnp.float32)
+
+    def chunk_step(state, inp):
+        xk, dtk, Bk, Ck = inp                     # (b,L,H,P),(b,L,H),(b,L,N)
+        dA = dtk * a_neg                          # (b,L,H) negative
+        cs = jnp.cumsum(dA, axis=1)               # (b,L,H)
+        # intra-chunk (dual quadratic form)
+        seg = cs[:, :, None, :] - cs[:, None, :, :]          # (b,L,L,H)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        Lmat = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        att = jnp.einsum("bln,bmn->blm", Ck, Bk)             # (b,L,L)
+        xdt = xk * dtk[..., None]                            # (b,L,H,P)
+        y_diag = jnp.einsum("blm,blmh,bmhp->blhp", att, Lmat, xdt)
+        # contribution of incoming state
+        state_decay = jnp.exp(cs)                            # (b,L,H)
+        y_off = jnp.einsum("bln,bhpn,blh->blhp", Ck, state, state_decay)
+        # update state
+        decay_states = jnp.exp(cs[:, -1:, :] - cs)           # (b,L,H)
+        new_state = jnp.einsum("bln,blh,blhp->bhpn", Bk, decay_states * dtk, xk)
+        chunk_decay = jnp.exp(cs[:, -1, :])                  # (b,H)
+        state = state * chunk_decay[:, :, None, None] + new_state
+        return state, y_diag + y_off
+
+    state0 = jnp.zeros((b, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    state, ys = jax.lax.scan(chunk_step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * L, H, P)
+    return y[:, :S], state
+
+
+def mamba_sublayer(cfg, p, x, *, return_state: bool = False):
+    """Full Mamba2 block: in_proj -> conv -> SSD -> gate -> out_proj.
+
+    x: (B, S, d).  Returns (y, (conv_state, ssm_state)) if return_state.
+    """
+    ssm = cfg.ssm
+    H, P, N = n_ssm_heads(cfg), ssm.head_dim, ssm.d_state
+    di = d_inner_of(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt_raw = _split_in_proj(cfg, zxbcdt)
+    xBC_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], ssm.conv_width)
+    xs = xBC_conv[..., :di]
+    Bmat = xBC_conv[..., di:di + N]
+    Cmat = xBC_conv[..., di + N:]
+    Bsz, S = x.shape[:2]
+    xh = xs.reshape(Bsz, S, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["a_log"])
+    xh = shard_hint(xh, "ssm_heads")
+    y, state = ssd_chunked(xh, dt, a_neg, Bmat, Cmat, ssm.chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = rmsnorm(y * silu(z), p["norm_scale"])
+    out = y @ p["out_proj"]
+    if return_state:
+        w = ssm.conv_width
+        conv_state = jnp.pad(xBC, ((0, 0), (w - 1, 0), (0, 0)))[:, S:S + w - 1]
+        if S >= w - 1:
+            conv_state = xBC[:, S - (w - 1):]
+        return out, (conv_state, state)
+    return out
+
+
+def mamba_decode_sublayer(cfg, p, x, conv_state, ssm_state):
+    """One-token recurrent update.  x: (B, 1, d).
+    conv_state: (B, W-1, conv_dim); ssm_state: (B, H, P, N) fp32."""
+    ssm = cfg.ssm
+    H, P, N = n_ssm_heads(cfg), ssm.head_dim, ssm.d_state
+    di = d_inner_of(cfg)
+    W = ssm.conv_width
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt_raw = _split_in_proj(cfg, zxbcdt)
+    xBC_t = xBC[:, 0]                                   # (B, conv_dim)
+    # conv: window = [conv_state, x_t]
+    win = jnp.concatenate([conv_state, xBC_t[:, None]], axis=1)   # (B,W,Cd)
+    conv_out = silu(jnp.einsum("bwc,wc->bc", win, p["conv_w"]) + p["conv_b"])
+    new_conv_state = win[:, 1:]
+    xs = conv_out[:, :di]
+    Bmat = conv_out[:, di:di + N].astype(jnp.float32)
+    Cmat = conv_out[:, di + N:].astype(jnp.float32)
+    xh = xs.reshape(-1, H, P).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a_neg = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt * a_neg)                            # (B,H)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xh, Bmat, dt)
+    ssm_state = ssm_state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, Cmat)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = rmsnorm(y * silu(z), p["norm_scale"])
+    return y @ p["out_proj"], new_conv_state, ssm_state

@@ -1,0 +1,16 @@
+from .adamw import adamw_init, adamw_update
+from .adafactor import adafactor_init, adafactor_update
+from .schedule import cosine_schedule, linear_warmup_cosine
+from .clip import global_norm, clip_by_global_norm
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+           "cosine_schedule", "linear_warmup_cosine", "global_norm",
+           "clip_by_global_norm"]
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(name)

@@ -1,0 +1,65 @@
+"""Adafactor (factored second moment, no momentum) — O(params/d) state.
+
+Used for the 400B llama4 config where AdamW's 8 bytes/param of fp32 moments
+cannot fit the per-chip HBM budget even fully sharded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {
+        "v": jax.tree_util.tree_map(init, params,
+                                    is_leaf=lambda x: hasattr(x, "shape")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, *, lr, b2=0.999, eps=1e-30,
+                     weight_decay=0.0, clip_threshold=1.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2t = 1.0 - t ** -0.8
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if _factored(p.shape):
+            vr = beta2t * s["vr"] + (1 - beta2t) * jnp.mean(g2, axis=-1)
+            vc = beta2t * s["vc"] + (1 - beta2t) * jnp.mean(g2, axis=-2)
+            rfac = (vr / jnp.mean(vr, axis=-1, keepdims=True))[..., None]
+            u = g32 * jax.lax.rsqrt(rfac * vc[..., None, :] + eps)
+            news = {"vr": vr, "vc": vc}
+        else:
+            v = beta2t * s["v"] + (1 - beta2t) * g2
+            u = g32 * jax.lax.rsqrt(v + eps)
+            news = {"v": v}
+        # update clipping (RMS <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        newp = p.astype(jnp.float32) - lr * u
+        if weight_decay:
+            newp -= lr * weight_decay * p.astype(jnp.float32)
+        return newp.astype(p.dtype), news
+
+    is_state_leaf = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = jax.tree_util.tree_leaves(state["v"], is_leaf=is_state_leaf)
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    return new_p, {"v": new_v, "step": step}

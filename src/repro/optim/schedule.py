@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of step)."""
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr, total_steps, final_frac=0.1):
+    frac = jnp.clip(step / total_steps, 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return base_lr * (final_frac + (1 - final_frac) * cos)
+
+
+def linear_warmup_cosine(step, *, base_lr, warmup_steps, total_steps,
+                         final_frac=0.1):
+    warm = base_lr * jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+    post = cosine_schedule(jnp.maximum(step - warmup_steps, 0),
+                           base_lr=base_lr,
+                           total_steps=jnp.maximum(total_steps - warmup_steps, 1),
+                           final_frac=final_frac)
+    return jnp.where(step < warmup_steps, warm, post)

@@ -1,0 +1,80 @@
+"""Global sharding context.
+
+Model code is mesh-agnostic: it calls ``shard_hint(x, role)`` at activation
+boundaries.  When a launcher has installed a :class:`ShardingCtx` (mesh +
+role->PartitionSpec rules), the hint becomes a
+``jax.lax.with_sharding_constraint``; otherwise it is a no-op (CPU smoke
+tests, single-device examples).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, rules: Dict[str, P],
+                 options: Optional[Dict[str, object]] = None):
+        self.mesh = mesh
+        self.rules = dict(rules)
+        # feature flags consumed by model code:
+        #   sp_attention : shard_map ring-lite attention over the model
+        #                  axis (seq-parallel) for train/prefill
+        #   picnic_decode: shard_map partial-softmax decode over the
+        #                  sequence-sharded KV cache (the PICNIC
+        #                  distributed-scratchpad + in-network reduction)
+        #   seq_axes     : mesh axes carrying the sequence dim
+        #   dp_axes      : mesh axes carrying the batch dim
+        self.options = dict(options or {})
+
+    def spec(self, role: str) -> Optional[P]:
+        return self.rules.get(role)
+
+    def opt(self, name: str, default=None):
+        return self.options.get(name, default)
+
+
+def current() -> Optional[ShardingCtx]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: Optional[ShardingCtx]):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _state.ctx = prev
+
+
+def shard_hint(x, role: str):
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = ctx.spec(role)
+    if spec is None:
+        return x
+    # Rank-adapt: drop trailing spec entries beyond x.ndim, pad with None.
+    entries = list(spec)[: x.ndim]
+    entries += [None] * (x.ndim - len(entries))
+    # Drop axis entries that do not divide the dimension evenly.
+    mesh = ctx.mesh
+    fixed = []
+    for dim, e in zip(x.shape, entries):
+        if e is None:
+            fixed.append(None)
+            continue
+        names = e if isinstance(e, tuple) else (e,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        fixed.append(e if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

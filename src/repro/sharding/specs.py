@@ -1,0 +1,310 @@
+"""PartitionSpec inference for params / optimizer state / caches / batches.
+
+Three modes (DESIGN.md §5):
+  * ``train`` / ``prefill``: ZeRO-3/FSDP — every weight sharded on its
+    largest evenly-divisible dim over ``cfg.fsdp_axes``; the per-layer
+    all-gather happens inside the layer scan (the CCPG analogue).
+  * ``decode``: weights persistently TP-sharded on their largest dim over
+    ``model`` (Megatron pairing falls out: for (d, f) the f/output dim is
+    sharded, for (f, d) the f/input dim — one psum per block).  MoE experts
+    are EP-sharded (expert dim over ``model``, falling back to expert dim
+    over ``data`` + inner dim over ``model`` for 400B-class models).
+  * KV caches are SEQUENCE-sharded over ``model`` (PICNIC distributed-
+    scratchpad scheme) — over ("data","model") for the 500k single-batch
+    shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from jax.tree_util import tree_flatten_with_path, tree_unflatten, DictKey
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, DictKey):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def _best_dim(shape, skip_dims, divisor) -> int:
+    """Largest dim (by size) not in skip_dims divisible by divisor; -1 if none."""
+    best, best_size = -1, 0
+    for i, s in enumerate(shape):
+        if i in skip_dims:
+            continue
+        if s % divisor == 0 and s >= divisor and s > best_size:
+            best, best_size = i, s
+    return best
+
+
+def _spec_with(ndim, assignments: Dict[int, Any]) -> P:
+    entries = [assignments.get(i) for i in range(ndim)]
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg, params_shapes, mesh: Mesh, mode: str,
+                mlp_tp: bool = False):
+    """Pytree of PartitionSpec matching params_shapes.
+
+    mlp_tp: Megatron-style tensor parallelism for the MLP weights in
+    training (d_ff dim over "model") — their grads then come out locally
+    sharded instead of being all-reduced at full width inside the layer
+    scan (EXPERIMENTS.md §Perf, train iteration 3)."""
+    flat, treedef = tree_flatten_with_path(params_shapes)
+    fsdp = tuple(a for a in cfg.fsdp_axes if a in mesh.shape)
+    fsdp_div = _axes_size(mesh, fsdp)
+    model_div = mesh.shape.get("model", 1)
+    data_div = mesh.shape.get("data", 1)
+
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        shape = leaf.shape
+        stacked = ("layers" in ps) and len(shape) >= 2
+        skip = {0} if stacked else set()
+
+        if len(shape) <= 1:
+            specs.append(P())
+            continue
+
+        is_expert = ("moe" in ps and "router" not in ps and
+                     len(shape) - (1 if stacked else 0) >= 3)
+        leaf_name = ps.split("/")[-1].strip("'[]")
+
+        if mode == "train" and mlp_tp and leaf_name in (
+                "w_gate", "w_up", "w_down") and not is_expert:
+            off = 1 if stacked else 0
+            # w_gate/w_up: (..., d, f) -> shard f (last); w_down: (..., f, d)
+            ff_dim = len(shape) - 1 if leaf_name in ("w_gate", "w_up") else off
+            if shape[ff_dim] % model_div == 0:
+                a = {ff_dim: ("model",)}
+                # shard the other big dim over "data" (ZeRO-ish)
+                other = off if ff_dim != off else len(shape) - 1
+                if shape[other] % data_div == 0:
+                    a[other] = ("data",)
+                specs.append(_spec_with(len(shape), a))
+                continue
+
+        if mode in ("train", "prefill"):
+            if is_expert:
+                # shard expert dim over fsdp axes if divisible, else inner
+                e_dim = 1 if stacked else 0
+                E = shape[e_dim]
+                if E % fsdp_div == 0:
+                    specs.append(_spec_with(len(shape), {e_dim: fsdp}))
+                    continue
+                d = _best_dim(shape, skip | {e_dim}, fsdp_div)
+                if d >= 0:
+                    specs.append(_spec_with(len(shape), {d: fsdp}))
+                    continue
+            d = _best_dim(shape, skip, fsdp_div)
+            if d >= 0:
+                specs.append(_spec_with(len(shape), {d: fsdp}))
+                continue
+            d = _best_dim(shape, skip, model_div)
+            if d >= 0:
+                specs.append(_spec_with(len(shape), {d: ("model",)}))
+                continue
+            specs.append(P())
+            continue
+
+        # mode == "decode": persistent TP / EP
+        if is_expert:
+            e_dim = 1 if stacked else 0
+            E = shape[e_dim]
+            # prefer the MOST sharding: a 400B expert stack needs both axes
+            if E % (data_div * model_div) == 0:
+                specs.append(_spec_with(len(shape),
+                                        {e_dim: ("data", "model")}))
+                continue
+            if E % data_div == 0:
+                inner = _best_dim(shape, skip | {e_dim}, model_div)
+                a = {e_dim: ("data",)}
+                if inner >= 0:
+                    a[inner] = ("model",)
+                specs.append(_spec_with(len(shape), a))
+                continue
+            if E % model_div == 0:
+                specs.append(_spec_with(len(shape), {e_dim: ("model",)}))
+                continue
+        d = _best_dim(shape, skip, model_div)
+        if d >= 0:
+            specs.append(_spec_with(len(shape), {d: ("model",)}))
+            continue
+        specs.append(P())
+
+    return tree_unflatten(treedef, specs)
+
+
+def opt_state_specs(cfg, opt_shapes, params_specs, mesh: Mesh,
+                    opt_axes: Tuple[str, ...] = ("data", "model")):
+    """Optimizer-state specs: always ZeRO-sharded over `opt_axes` (the
+    fp32 moments must spread over as many chips as possible regardless of
+    how the bf16 params themselves are sharded — a 34B AdamW state is
+    17 GB/chip at 16-way but 1 GB/chip at 256-way)."""
+    flat, treedef = tree_flatten_with_path(opt_shapes)
+    axes = tuple(a for a in opt_axes if a in mesh.shape)
+    div = _axes_size(mesh, axes)
+    model_div = mesh.shape.get("model", 1)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        if len(leaf.shape) <= 1:
+            specs.append(P())
+            continue
+        stacked = "layers" in ps and len(leaf.shape) >= 2
+        skip = {0} if stacked else set()
+        d = _best_dim(leaf.shape, skip, div)
+        if d >= 0:
+            specs.append(_spec_with(len(leaf.shape), {d: axes}))
+            continue
+        d = _best_dim(leaf.shape, skip, model_div)
+        specs.append(_spec_with(len(leaf.shape), {d: ("model",)})
+                     if d >= 0 else P())
+    return tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Cache / batch specs
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg, cache_shapes, mesh: Mesh, *, long_context: bool = False):
+    """Cache leaves: k/v (G,B,S,H,D) seq-sharded over model (PICNIC
+    distributed scratchpad), (data,model) for the 500k batch-1 shape."""
+    dp = dp_axes(mesh)
+    dpsize = _axes_size(mesh, dp)
+    model_div = mesh.shape.get("model", 1)
+    seq_axes = ("data", "model") if long_context else ("model",)
+    seq_div = _axes_size(mesh, seq_axes)
+
+    flat, treedef = tree_flatten_with_path(cache_shapes)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        name = ps.split("/")[-1]
+        shape = leaf.shape
+        a: Dict[int, Any] = {}
+        B = shape[1] if len(shape) >= 2 else 0
+        if B and B % dpsize == 0:
+            a[1] = dp
+        elif B and B % mesh.shape.get("data", 1) == 0:
+            a[1] = ("data",)
+        if name in ("k", "v"):
+            if shape[2] % seq_div == 0:
+                a[2] = seq_axes
+            elif shape[2] % model_div == 0:
+                a[2] = ("model",)
+        elif name in ("cross_k", "cross_v"):
+            if shape[3] % model_div == 0:   # heads (20 not div 16 -> skip)
+                a[3] = ("model",)
+        elif name == "ssm":
+            if shape[2] % model_div == 0:   # heads
+                a[2] = ("model",)
+        elif name == "conv":
+            if shape[3] % model_div == 0:   # conv channels
+                a[3] = ("model",)
+        specs.append(_spec_with(len(shape), a))
+    return tree_unflatten(treedef, specs)
+
+
+def batch_specs(cfg, batch_shapes, mesh: Mesh):
+    dp = dp_axes(mesh)
+    dpsize = _axes_size(mesh, dp)
+    flat, treedef = tree_flatten_with_path(batch_shapes)
+    specs = []
+    for path, leaf in flat:
+        shape = leaf.shape
+        a: Dict[int, Any] = {}
+        if len(shape) >= 1 and shape[0] % dpsize == 0:
+            a[0] = dp
+        elif len(shape) >= 1 and shape[0] % mesh.shape.get("data", 1) == 0:
+            a[0] = ("data",)
+        specs.append(_spec_with(len(shape), a))
+    return tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Activation rules (consumed by shard_hint via ShardingCtx)
+# ---------------------------------------------------------------------------
+
+def activation_rules(cfg, mesh: Mesh, mode: str, *,
+                     long_context: bool = False) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    seq_axes = ("data", "model") if long_context else ("model",)
+    model_div = mesh.shape.get("model", 1)
+    # MoE dispatch buffers (B, E, C, d): shard E over "model" when it
+    # divides, else the capacity dim — without this the (B,E,C,d) buffer
+    # of a 128-expert model is 80+ GB/device at train shapes.
+    if cfg.moe and cfg.moe.n_experts % model_div == 0:
+        moe_buf = P(dp, ("model",))
+    else:
+        moe_buf = P(dp, None, ("model",))
+    if mode == "train":
+        # Sequence-parallel training: batch over dp, seq over "model".
+        # Without the seq split every device in a model row would repeat
+        # identical full-width matmuls on the same batch shard (16x wasted
+        # FLOPs — caught by the trip-count-corrected dry-run accounting,
+        # see EXPERIMENTS.md §Perf).
+        return {
+            "act_btd": P(dp, ("model",)),
+            "act_ffn": P(dp, ("model",)),
+            "act_heads": P(dp, ("model",)),      # q stays seq-sharded
+            "act_kv_heads": P(dp),               # k/v gathered (GQA-small)
+            "logits": P(dp, ("model",)),
+            "moe_buffer": moe_buf,
+            "moe_ffn": P(dp, None, None, ("model",)),
+            "ssm_heads": P(dp),
+        }
+    if mode == "prefill":
+        return {
+            "act_btd": P(dp, ("model",)),        # sequence parallel
+            "act_ffn": P(dp, ("model",)),
+            "act_heads": P(dp, ("model",)),      # q stays seq-sharded
+            "act_kv_heads": P(dp),               # k/v gathered (GQA-small)
+            "logits": P(dp, ("model",)),
+            "moe_buffer": moe_buf,
+            "moe_ffn": P(dp, None, None, ("model",)),
+            "ssm_heads": P(dp),
+        }
+    # decode
+    return {
+        "act_btd": P(dp),
+        "act_ffn": P(dp, None, ("model",)),
+        "act_heads": P(dp),
+        "act_kv_heads": P(dp),
+        "kv_cache": P(None, dp, seq_axes),
+        "logits": P(dp, None, ("model",)),
+        "moe_buffer": P(dp, ("model",)) if (cfg.moe and
+            cfg.moe.n_experts % mesh.shape.get("model", 1) == 0) else P(dp),
+        "moe_ffn": P(dp),
+        "ssm_heads": P(dp, None, ("model",)),
+    }
+
+
+def to_named(tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))

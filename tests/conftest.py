@@ -1,0 +1,16 @@
+import os
+import sys
+from pathlib import Path
+
+# make src importable regardless of how pytest is invoked
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see the real
+# (single-CPU) device.  Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves.
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

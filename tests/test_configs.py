@@ -1,0 +1,61 @@
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config,
+                           get_smoke_config, list_archs)
+
+EXPECTED_PARAMS_B = {  # arch -> (lo, hi) plausible total params
+    "mistral-nemo-12b": (11.5, 13.0),
+    "olmo-1b": (1.0, 1.4),
+    "smollm-360m": (0.3, 0.45),
+    "yi-34b": (33.0, 35.5),
+    "paligemma-3b": (2.0, 3.2),
+    "zamba2-2.7b": (2.1, 3.0),
+    "llama4-maverick-400b-a17b": (380.0, 410.0),
+    "mixtral-8x7b": (45.0, 48.0),
+    "whisper-large-v3": (1.4, 1.8),
+    "mamba2-2.7b": (2.4, 3.1),
+}
+
+
+def test_registry_has_all_assigned():
+    assert len(ASSIGNED_ARCHS) == 10
+    for a in ASSIGNED_ARCHS:
+        assert get_config(a).name == a
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED_PARAMS_B))
+def test_param_counts(arch):
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = get_config(arch).n_params() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    assert cfg.active_params(True) < 0.06 * cfg.n_params(True)
+    mix = get_config("mixtral-8x7b")
+    assert 11e9 < mix.active_params(True) < 15e9
+
+
+def test_long_context_support_flags():
+    runs = {a for a in ASSIGNED_ARCHS
+            if get_config(a).supports_long_context}
+    assert runs == {"zamba2-2.7b", "mixtral-8x7b", "mamba2-2.7b"}
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].kind == "train"
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_configs_are_small(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model <= 256
+    assert cfg.n_params() < 30e6
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("nope-7b")

@@ -1,0 +1,188 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis, each against the
+ref.py pure-jnp oracle (interpret=True executes kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.cim_matmul import quantize_weights
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# pwl_softmax (SCU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,n", [(8, 64), (32, 300), (256, 128), (5, 1000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pwl_softmax_shapes(rows, n, dtype):
+    x = (jax.random.normal(KEY, (rows, n)) * 3).astype(dtype)
+    o = ops.pwl_softmax(x)
+    r = ref.ref_pwl_softmax(x)
+    tol = 1e-6 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+def test_pwl_softmax_sums_to_one():
+    x = jax.random.normal(KEY, (16, 77)) * 5
+    o = ops.pwl_softmax(x)
+    np.testing.assert_allclose(np.asarray(o.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_pwl_exp_error_bound():
+    """SCU 8-segment PWL with uniform segments on [-8, 0]: the worst
+    segment is [-1, 0] where the secant-with-midpoint-offset fit has
+    max error exp-curvature/8 ~= 0.039."""
+    from repro.core.scu import max_pwl_exp_error
+    assert max_pwl_exp_error() < 0.04
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 64), n=st.integers(2, 257),
+       scale=st.floats(0.1, 20))
+def test_pwl_softmax_property(rows, n, scale):
+    x = jax.random.normal(jax.random.PRNGKey(rows * n), (rows, n)) * scale
+    o = np.asarray(ops.pwl_softmax(x))
+    assert (o >= 0).all()
+    np.testing.assert_allclose(o.sum(-1), 1.0, atol=1e-4)
+    # PWL softmax approximates the exact one
+    ex = np.asarray(ref.ref_softmax(x))
+    assert np.abs(o - ex).max() < 0.05
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,hkv,d", [(128, 4, 4, 32), (256, 4, 2, 64),
+                                       (128, 8, 1, 128), (384, 2, 2, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_kernel_vs_oracle(s, h, hkv, d, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, s, h, d))
+    k = jax.random.normal(ks[1], (2, s, hkv, d))
+    v = jax.random.normal(ks[2], (2, s, hkv, d))
+    o = ops.flash_attention(q, k, v, causal=causal)
+    kf = jnp.repeat(k, h // hkv, 2)
+    vf = jnp.repeat(v, h // hkv, 2)
+    r = ref.ref_flash_attention(q, kf, vf, causal=causal)
+    assert float(jnp.max(jnp.abs(o - r))) < 2e-4
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_dtypes(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 32)).astype(dtype)
+    o = ops.flash_attention(q, k, v)
+    r = ref.ref_flash_attention(q, k, v)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    assert float(jnp.max(jnp.abs(o.astype(jnp.float32)
+                                 - r.astype(jnp.float32)))) < tol
+
+
+def test_flash_kernel_pwl_matches_dense_pwl_single_block():
+    """With one KV pass per row the kernel's PWL softmax is exactly the
+    SCU (dense) semantics; multi-block online rescaling adds a small
+    composition error (documented)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    o = ops.flash_attention(q, k, v, use_pwl=True, block_k=128)
+    r = ref.ref_pwl_attention(q, k, v)
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-4
+
+
+def test_flash_kernel_nonmultiple_seq_padding():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 200, 2, 32))
+    k = jax.random.normal(ks[1], (1, 200, 2, 32))
+    v = jax.random.normal(ks[2], (1, 200, 2, 32))
+    o = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    r = ref.ref_flash_attention(q, k, v, causal=True)
+    assert float(jnp.max(jnp.abs(o - r))) < 2e-4
+
+
+# ---------------------------------------------------------------------------
+# cim matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(64, 256, 128), (128, 512, 256),
+                                   (32, 1024, 64)])
+def test_cim_kernel_vs_oracle(m, k, n):
+    x = jax.random.normal(KEY, (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
+    wq, ws = quantize_weights(w)
+    o = ops.cim_matmul(x, w, block_m=min(64, m), block_n=min(128, n))
+    r = ref.ref_cim_matmul(x, wq, ws)
+    # NOTE: the kernel's ADC calibration is per (block, tile); the oracle's
+    # is per tile over the full M — identical when block_m == M, else the
+    # quantization error bound below is the contract.
+    ex = ref.ref_exact_matmul(x, w)
+    rel = float(jnp.linalg.norm(o - ex) / jnp.linalg.norm(ex))
+    assert rel < 0.03, rel
+
+
+def test_cim_kernel_exact_match_when_unblocked():
+    x = jax.random.normal(KEY, (64, 512))
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 128)) * 0.05
+    wq, ws = quantize_weights(w)
+    o = ops.cim_matmul(x, w, block_m=64, block_n=128)
+    r = ref.ref_cim_matmul(x, wq, ws)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(adc=st.sampled_from([8, 10, 12, 14]))
+def test_cim_adc_bits_monotone(adc):
+    """More ADC bits -> lower error vs exact (the calibration story)."""
+    x = jax.random.normal(KEY, (32, 512))
+    w = jax.random.normal(jax.random.PRNGKey(2), (512, 64)) * 0.05
+    ex = ref.ref_exact_matmul(x, w)
+    o = ops.cim_matmul(x, w, adc_bits=adc, block_m=32, block_n=64)
+    rel = float(jnp.linalg.norm(o - ex) / jnp.linalg.norm(ex))
+    o16 = ops.cim_matmul(x, w, adc_bits=16, block_m=32, block_n=64)
+    rel16 = float(jnp.linalg.norm(o16 - ex) / jnp.linalg.norm(ex))
+    assert rel16 <= rel + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,p,n,chunk", [(128, 2, 32, 16, 32),
+                                           (256, 4, 16, 8, 64),
+                                           (64, 1, 64, 32, 64)])
+def test_ssd_kernel_vs_oracles(s, h, p, n, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (2, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.2)
+    B_ = jax.random.normal(ks[3], (2, s, n)) * 0.3
+    C_ = jax.random.normal(ks[4], (2, s, n)) * 0.3
+    o = ops.ssd_scan(x, dt, a, B_, C_, chunk=chunk)
+    r = ref.ref_ssd(x, dt, a, B_, C_, chunk=chunk)
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-4
+    r2 = ref.ref_ssd_recurrent(x, dt, a, B_, C_)
+    assert float(jnp.max(jnp.abs(o - r2))) < 1e-3
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_ssd_kernel_property_random(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    s, h, p, n = 64, 2, 16, 8
+    x = jax.random.normal(ks[0], (1, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, s, h)) - 1)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (1, s, n)) * 0.5
+    C_ = jax.random.normal(ks[4], (1, s, n)) * 0.5
+    o = ops.ssd_scan(x, dt, a, B_, C_, chunk=16)
+    r = ref.ref_ssd_recurrent(x, dt, a, B_, C_)
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-3

@@ -1,0 +1,88 @@
+"""Sharding-spec validity: for every assigned arch x mode, every inferred
+PartitionSpec must evenly divide its tensor on the production mesh (a spec
+that doesn't divide would fail or silently pad at scale)."""
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
+from repro.launch import input_specs as ispec
+from repro.optim import make_optimizer
+from repro.sharding import specs as sp
+
+
+class FakeMesh:
+    """Shape-only stand-in for the 16x16 / 2x16x16 production meshes (the
+    spec engine only reads mesh.shape)."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+POD1 = FakeMesh({"data": 16, "model": 16})
+POD2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _check_divides(tree_shapes, tree_specs, mesh, what):
+    flat_sh = jax.tree_util.tree_leaves(tree_shapes)
+    flat_sp = jax.tree_util.tree_leaves(
+        tree_specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_sh) == len(flat_sp)
+    for leaf, spec in zip(flat_sh, flat_sp):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            div = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % div == 0, \
+                f"{what}: dim {dim} not divisible by {axes}={div} " \
+                f"(leaf {leaf.shape}, spec {spec})"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("mesh", [POD1, POD2], ids=["pod1", "pod2"])
+@pytest.mark.parametrize("mode", ["train", "prefill", "decode"])
+def test_param_specs_divide(arch, mesh, mode):
+    cfg = get_config(arch)
+    pshapes = ispec.params_shapes(cfg)
+    pspecs = sp.param_specs(cfg, pshapes, mesh, mode)
+    _check_divides(pshapes, pspecs, mesh, f"{arch}/{mode}/params")
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_opt_state_specs_divide(arch):
+    cfg = get_config(arch)
+    pshapes = ispec.params_shapes(cfg)
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    oshapes = jax.eval_shape(opt_init, pshapes)
+    ospecs = sp.opt_state_specs(cfg, oshapes, None, POD1)
+    _check_divides(oshapes, ospecs, POD1, f"{arch}/opt")
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divide(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        pytest.skip("full-attention arch skips long_500k")
+    _, cshapes, _ = ispec.decode_arg_specs(cfg, shape)
+    cspecs = sp.cache_specs(cfg, cshapes, POD1,
+                            long_context=shape_name == "long_500k")
+    _check_divides(cshapes, cspecs, POD1, f"{arch}/{shape_name}/cache")
+
+
+@pytest.mark.parametrize("mode", ["train", "prefill", "decode"])
+def test_activation_rules_have_core_roles(mode):
+    cfg = get_config("mixtral-8x7b")
+    rules = sp.activation_rules(cfg, POD1, mode)
+    for role in ("act_btd", "act_ffn", "logits", "moe_buffer"):
+        assert role in rules
+
+
+def test_fsdp16_override_used_by_smollm():
+    """smollm d_model=960 is not divisible by 256 — its config must pin
+    fsdp_axes=("model",) and the resulting specs stay valid."""
+    cfg = get_config("smollm-360m")
+    assert cfg.fsdp_axes == ("model",)

@@ -1,0 +1,100 @@
+"""End-to-end PICNIC simulator vs the paper's published numbers."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import PLATFORMS, PicnicSimulator, comparison_table
+
+TABLE_II = {
+    ("llama3.2-1b", 512): (1503.8, 4.0520, 371.1),
+    ("llama3.2-1b", 1024): (969.2, 4.0513, 239.2),
+    ("llama3.2-1b", 2048): (566.4, 4.0507, 139.8),
+    ("llama3-8b", 512): (386.5, 28.4018, 13.6),
+    ("llama3-8b", 1024): (309.8, 28.4015, 10.9),
+    ("llama3-8b", 2048): (221.9, 28.4010, 7.8),
+    ("llama2-13b", 512): (228.9, 52.3014, 4.4),
+    ("llama2-13b", 1024): (192.4, 52.3012, 3.7),
+    ("llama2-13b", 2048): (146.2, 52.3009, 2.8),
+}
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return PicnicSimulator()
+
+
+@pytest.mark.parametrize("arch,ctx", list(TABLE_II))
+def test_table_ii_throughput(sim, arch, ctx):
+    tput, power, eff = TABLE_II[(arch, ctx)]
+    r = sim.run(get_config(arch), ctx, ctx)
+    assert abs(r.throughput_tps / tput - 1) < 0.10, \
+        f"{arch}/{ctx}: {r.throughput_tps:.1f} vs {tput}"
+    assert abs(r.avg_power_W / power - 1) < 0.05
+    assert abs(r.efficiency_tpj / eff - 1) < 0.12
+
+
+def test_ccpg_8b_matches_table_iii(sim):
+    """With CCPG: ~5.6 W, ~55 tokens/J, 57x over H100, ~80% power saved."""
+    cfg = get_config("llama3-8b")
+    r = sim.run(cfg, 1024, 1024, ccpg=True)
+    r0 = sim.run(cfg, 1024, 1024, ccpg=False)
+    assert abs(r.avg_power_W / 5.6 - 1) < 0.08
+    assert abs(r.efficiency_tpj / 55.38 - 1) < 0.08
+    h100 = PLATFORMS["NV H100"]
+    impr = r.efficiency_tpj / (h100["throughput"] / h100["power"])
+    assert 52 < impr < 62                      # paper: 57x
+    saving = 1 - r.avg_power_W / r0.avg_power_W
+    assert 0.75 < saving < 0.85                # paper: ~80%
+    # "similar throughput": CCPG costs < 3% throughput
+    assert r.throughput_tps > 0.97 * r0.throughput_tps
+
+
+def test_headline_vs_a100(sim):
+    """3.95x speedup and 30x efficiency over A100 (paper abstract),
+    reproduced within 15%."""
+    cfg = get_config("llama3-8b")
+    r = sim.run(cfg, 1024, 1024)
+    a100 = PLATFORMS["NV A100"]
+    speedup = r.throughput_tps / a100["throughput"]
+    eff_impr = r.efficiency_tpj / (a100["throughput"] / a100["power"])
+    assert abs(speedup / 3.95 - 1) < 0.15
+    assert abs(eff_impr / 30.0 - 1) < 0.15
+
+
+def test_throughput_decreases_with_context(sim):
+    cfg = get_config("llama3.2-1b")
+    t = [sim.run(cfg, c, c).throughput_tps for c in (512, 1024, 2048)]
+    assert t[0] > t[1] > t[2]
+
+
+def test_power_nearly_flat_with_context(sim):
+    """Paper: average power reduces slightly with context length."""
+    cfg = get_config("llama3-8b")
+    p = [sim.run(cfg, c, c).avg_power_W for c in (512, 2048)]
+    assert abs(p[0] - p[1]) / p[0] < 0.01
+    assert p[1] <= p[0] + 1e-6
+
+
+def test_comparison_table_ratios(sim):
+    r = sim.run(get_config("llama3-8b"), 1024, 1024, ccpg=True)
+    rows = comparison_table(r)
+    ours = rows[0]
+    assert ours["eff_impr_vs_h100"] > 50
+    cerebras = [x for x in rows if x["platform"] == "Cerebras-2"][0]
+    assert cerebras["speedup_vs_h100"] == pytest.approx(6.57, abs=0.05)
+
+
+def test_c2c_trace_is_bursty(sim):
+    """Fig 10: C2C transfers happen in bursts at layer boundaries; the
+    link is idle most of the time."""
+    trace = sim.c2c_trace(get_config("llama3.2-1b"), n_tokens=4)
+    horizon = max(t + d for t, d, _ in trace.events) * 1.01
+    assert trace.utilization(horizon) < 0.05
+    bins = trace.binned(horizon, 50)
+    assert max(bins) > 0 and min(bins) == 0.0
+
+
+def test_optical_beats_electrical(sim):
+    from repro.core import ELECTRICAL, OPTICAL, c2c_average_power
+    rate = 200e6  # bytes/s
+    assert c2c_average_power(rate, OPTICAL) < \
+        c2c_average_power(rate, ELECTRICAL)
