@@ -168,6 +168,29 @@ def bench_fig10_timeline():
     return out
 
 
+def bench_serving():
+    """Continuous-batching serving engine: the same 64-request Poisson
+    trace (Llama-1B 512/64) served 1-at-a-time vs batch-8, ccpg off/on.
+    Headline: batched decode throughput at batch 8 vs sequential."""
+    from repro.configs import get_config
+    from repro.launch.serving_engine import poisson_trace, serve_trace
+    t0 = time.time()
+    cfg = get_config("llama3.2-1b")
+    rows = []
+    tput = {}
+    for batch in (1, 8):
+        for ccpg in (False, True):
+            trace = poisson_trace(64, rate_rps=40, seed=0,
+                                  prompt_len=512, max_new=64)
+            rep = serve_trace(cfg, trace, max_batch=batch, ccpg=ccpg)
+            tput[(batch, ccpg)] = rep.tokens_per_s
+            rows.append({"max_batch": batch, **rep.row()})
+    speedup = tput[(8, False)] / tput[(1, False)]
+    _save("serving", rows)
+    _emit("serving", t0, f"batch8_vs_1at_a_time_tput={speedup:.2f}x")
+    return rows
+
+
 def bench_roofline():
     """The dry-run roofline table (reads artifacts/dryrun/*.json)."""
     t0 = time.time()
@@ -285,6 +308,7 @@ BENCHES = {
     "fig8_ccpg": bench_fig8_ccpg,
     "fig9_c2c": bench_fig9_c2c,
     "fig10_timeline": bench_fig10_timeline,
+    "serving": bench_serving,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
     "ablations": bench_ablations,

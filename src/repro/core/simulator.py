@@ -98,6 +98,35 @@ class PicnicSimulator:
             c2c_bytes_total=c2c_bytes, c2c_avg_power_W=c2c_power, ccpg=ccpg)
 
     # ------------------------------------------------------------------
+    # Serving-engine hooks (launch/serving_engine.py): per-iteration costs
+    # in SECONDS, so the discrete-event loop never touches cycle math.
+    # ------------------------------------------------------------------
+    def prefill_seconds(self, cfg, alloc: ChipletAllocation,
+                        prompt_len: int, *,
+                        ccpg: bool = False) -> Tuple[float, int]:
+        """(seconds, c2c_bytes) to prefill one request's prompt.  Prefill
+        streams the prompt through every layer chain, so with CCPG it pays
+        one full cluster walk of wake residue."""
+        cyc, c2c = self.cycle_model.prefill_cycles(cfg, alloc, prompt_len)
+        if ccpg:
+            cyc += self.ccpg_model.wake_overhead_cycles(alloc)
+        return cyc / self.tile.frequency_hz, c2c
+
+    def decode_iteration_seconds(self, cfg, alloc: ChipletAllocation,
+                                 contexts: List[int], *,
+                                 ccpg: bool = False) -> Tuple[float, int]:
+        """(seconds, c2c_bytes) for one batched decode iteration advancing
+        every request in ``contexts`` by one token.  CCPG wake overhead is
+        charged once per iteration — co-batched requests share the active
+        cluster (cluster residency), not once per request."""
+        cyc, c2c = self.cycle_model.batched_token_decode_cycles(
+            cfg, alloc, contexts)
+        if ccpg:
+            cyc += self.ccpg_model.wake_overhead_cycles_batched(
+                alloc, len(contexts))
+        return cyc / self.tile.frequency_hz, c2c
+
+    # ------------------------------------------------------------------
     def c2c_trace(self, cfg, n_tokens: int = 32,
                   context: int = 512) -> TrafficTrace:
         """Burst timeline for Fig 10: C2C bursts at layer boundaries only."""

@@ -1,0 +1,6 @@
+"""Launch layer: meshes, train/serve steps, dry-run costing, serving.
+
+Submodules are imported lazily by callers (several pull in JAX at import
+time); the analytic serving stack (``scheduler``, ``serving_engine``)
+stays JAX-free so traffic simulations run instantly on any host.
+"""

@@ -29,6 +29,19 @@ class EventKind(str, Enum):
     DECODE = "decode"
     FINISH = "finish"
     REJECT = "reject"
+    IDLE = "idle"        # used by launch/serving_engine (gap to next arrival)
+
+
+def deadline_at_risk(head: Optional["Request"], clock: float,
+                     prefill_eta_s: float) -> bool:
+    """Shared TTFT-deadline test: would admitting the queue head now,
+    at the given prefill cost, still miss its deadline?  Used by both
+    ContinuousBatchScheduler (fixed CostModel pricing) and
+    launch/serving_engine (cycle-model pricing) so the admission
+    semantics cannot drift apart."""
+    if head is None or head.deadline_ttft is None:
+        return False
+    return clock + prefill_eta_s >= head.arrival + head.deadline_ttft
 
 
 @dataclasses.dataclass(order=True)
@@ -54,6 +67,29 @@ class CostModel:
     decode_round_s: float = 0.010
     prefill_s_per_token: float = 0.0005
     prefill_fixed_s: float = 0.005
+
+    @classmethod
+    def from_simulator(cls, sim, cfg, *, context: int = 512,
+                       prompt_len: int = 512) -> "CostModel":
+        """Calibrate the abstract engine-iteration costs from the mapped
+        PICNIC cycle model (core/simulator.PicnicSimulator), so this
+        policy layer and launch/serving_engine agree on time.  The decode
+        round is priced at ``context``; prefill is linearized by a secant
+        through prompt lengths 1 and ``prompt_len``.  The cycle model's
+        prefill has a quadratic attention term, so the secant is exact at
+        the two fit points and UNDERESTIMATES longer prompts (~-15% at
+        2x ``prompt_len``) — calibrate at your workload's prompt scale,
+        especially if TTFT deadlines matter."""
+        from repro.core.scheduling import allocate_chiplets
+        alloc = allocate_chiplets(cfg, sim.tile)
+        f = sim.tile.frequency_hz
+        dec_cyc, _ = sim.cycle_model.token_decode_cycles(cfg, alloc, context)
+        p1, _ = sim.cycle_model.prefill_cycles(cfg, alloc, 1)
+        pn, _ = sim.cycle_model.prefill_cycles(cfg, alloc, prompt_len)
+        per_tok = max(0.0, (pn - p1) / max(prompt_len - 1, 1) / f)
+        return cls(decode_round_s=dec_cyc / f,
+                   prefill_s_per_token=per_tok,
+                   prefill_fixed_s=p1 / f)
 
 
 @dataclasses.dataclass
@@ -94,14 +130,10 @@ class ContinuousBatchScheduler:
         return None
 
     def _deadline_at_risk(self) -> bool:
-        if not self.queue:
-            return False
-        head = self.queue[0]
-        if head.deadline_ttft is None:
-            return False
-        eta = self.clock + self.cost.prefill_fixed_s \
-            + head.prompt_len * self.cost.prefill_s_per_token
-        return eta >= head.arrival + head.deadline_ttft
+        head = self.queue[0] if self.queue else None
+        eta = self.cost.prefill_fixed_s \
+            + (head.prompt_len if head else 0) * self.cost.prefill_s_per_token
+        return deadline_at_risk(head, self.clock, eta)
 
     # ------------------------------------------------------------------
     def step(self) -> EventKind:

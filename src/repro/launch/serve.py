@@ -1,9 +1,15 @@
-"""Serving driver: continuous-batched prefill + decode.
+"""Serving driver: continuous-batched prefill + decode (JAX execution).
 
 A minimal production-shaped server loop: requests arrive with prompts,
 are prefetched into the (distributed, sequence-sharded) KV cache, and the
 decode step advances ALL active slots one token per iteration (continuous
 batching with slot recycling).  Greedy sampling.
+
+This module EXECUTES tokens on the host; the matching *capacity* question
+(what batching + CCPG do to latency/throughput/tokens-per-J on PICNIC
+hardware under multi-user traffic) is answered by the discrete-event
+engine in ``repro.launch.serving_engine``, which shares this module's
+admission semantics but prices iterations with the mapped cycle model.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
       --n-requests 4 --max-new 16

@@ -1,0 +1,137 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+CI images for this repo have no network access, so ``hypothesis`` may be
+absent.  Rather than erroring at collection time, the five property-test
+modules degrade to *seeded-example* tests: ``install()`` (called from
+``conftest.py``) registers stub ``hypothesis`` / ``hypothesis.strategies``
+modules implementing exactly the subset this suite uses —
+
+  * ``@given(kw=strategy, ...)`` with keyword strategies
+  * ``@settings(max_examples=..., deadline=...)``
+  * ``st.integers(lo, hi)``, ``st.floats(lo, hi)``, ``st.booleans()``,
+    ``st.sampled_from(seq)``
+
+Each ``@given`` test then runs a fixed set of examples: first every
+strategy pinned at its lower bound (the classic edge case), then
+pseudo-random draws from a per-test seeded RNG, so failures are exactly
+reproducible across runs and machines.  This is NOT a property-based
+explorer — no shrinking, no coverage guidance.  Install the real thing
+(``pip install -e .[test]``) to get those back; when ``hypothesis`` is
+importable this module is a no-op.
+
+``HYP_COMPAT_MAX_EXAMPLES`` caps the per-test example count (default 10)
+so the fallback stays fast even for tests that request ``max_examples=100``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import sys
+import types
+
+_DEFAULT_EXAMPLES = 10
+
+
+class SearchStrategy:
+    """A value generator: a lower-bound example plus a seeded draw."""
+
+    def __init__(self, lo_example, draw):
+        self._lo_example = lo_example
+        self._draw = draw
+
+    def lo(self):
+        return self._lo_example
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int = 0, max_value: int = 1 << 16) -> SearchStrategy:
+    return SearchStrategy(min_value,
+                          lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_kw) -> SearchStrategy:
+    return SearchStrategy(float(min_value),
+                          lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(False, lambda rng: bool(rng.getrandbits(1)))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    seq = list(elements)
+    if not seq:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(seq[0], lambda rng: seq[rng.randrange(len(seq))])
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None,
+             **_kw):
+    """Applied OUTSIDE @given in this suite, so it decorates the @given
+    wrapper and just annotates it with the requested example count."""
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    if not strategies:
+        raise TypeError("hyp-compat given() supports keyword strategies only")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cap = int(os.environ.get("HYP_COMPAT_MAX_EXAMPLES",
+                                     str(_DEFAULT_EXAMPLES)))
+            n = min(getattr(wrapper, "_hyp_max_examples", _DEFAULT_EXAMPLES),
+                    max(cap, 1))
+            # example 0: all strategies at their lower bound
+            fn(*args, **dict(kwargs,
+                             **{k: s.lo() for k, s in strategies.items()}))
+            rng = random.Random(
+                f"hyp-compat::{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n - 1):
+                fn(*args, **dict(kwargs,
+                                 **{k: s.draw(rng)
+                                    for k, s in strategies.items()}))
+        # pytest must not see the strategy kwargs as fixtures: expose only
+        # the non-strategy parameters (if any) of the original function
+        params = [p for name, p in
+                  inspect.signature(fn).parameters.items()
+                  if name not in strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        del wrapper.__wrapped__
+        wrapper.hypothesis_compat_fallback = True
+        return wrapper
+    return deco
+
+
+def install() -> bool:
+    """Register the stub as ``hypothesis`` in sys.modules if (and only if)
+    the real package is unavailable.  Returns True if the stub was used."""
+    if "hypothesis" in sys.modules:
+        return getattr(sys.modules["hypothesis"], "_compat_fallback", False)
+    try:
+        import hypothesis  # noqa: F401  (real package wins)
+        return False
+    except ImportError:
+        pass
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from"):
+        setattr(strat, name, globals()[name])
+    strat.SearchStrategy = SearchStrategy
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    hyp._compat_fallback = True
+    hyp.__version__ = "0.0.0+compat"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat
+    return True

@@ -7,6 +7,14 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
+# hypothesis is optional (CI has no network): fall back to the seeded
+# example runner in tests/_hyp_compat.py so property-test modules still
+# collect and run.  No-op when the real package is installed.
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+import _hyp_compat  # noqa: E402
+
+_hyp_compat.install()
+
 # NOTE: no XLA_FLAGS here on purpose — smoke tests must see the real
 # (single-CPU) device.  Multi-device tests spawn subprocesses that set
 # --xla_force_host_platform_device_count themselves.

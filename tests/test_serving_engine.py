@@ -1,0 +1,253 @@
+"""Continuous-batching serving engine: batched cost path, admission,
+preemption-free decode, CCPG wake accounting under batch."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import CCPGModel, CycleModel, PicnicSimulator
+from repro.core.scheduling import allocate_chiplets
+from repro.launch.scheduler import CostModel
+from repro.launch.serving_engine import (ContinuousBatchingEngine,
+                                         EngineConfig, EventKind,
+                                         poisson_trace, replay_trace,
+                                         serve_trace)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama3.2-1b")
+
+
+@pytest.fixture(scope="module")
+def alloc(cfg):
+    return allocate_chiplets(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Batched cost path (CycleModel)
+# ---------------------------------------------------------------------------
+
+def test_batch_of_one_matches_single_stream(cfg, alloc):
+    """b=1 must reproduce the calibrated Table II decode path exactly."""
+    cm = CycleModel()
+    for ctx in (64, 512, 2048):
+        single = cm.token_decode_cycles(cfg, alloc, ctx)
+        batched = cm.batched_token_decode_cycles(cfg, alloc, [ctx])
+        assert batched == single
+
+
+def test_batched_decode_is_sublinear(cfg, alloc):
+    """Weight-stationary amortization: one batch-8 iteration costs less
+    than 8 single-stream iterations, but more than one."""
+    cm = CycleModel()
+    one, _ = cm.token_decode_cycles(cfg, alloc, 512)
+    eight, _ = cm.batched_token_decode_cycles(cfg, alloc, [512] * 8)
+    assert one < eight < 8 * one
+
+
+def test_batched_c2c_and_kv_traffic_per_request(cfg, alloc):
+    """C2C activation bytes do NOT amortize: every co-batched request
+    ships its own activation vector across each chiplet boundary."""
+    cm = CycleModel()
+    _, c2c_1 = cm.token_decode_cycles(cfg, alloc, 512)
+    _, c2c_8 = cm.batched_token_decode_cycles(cfg, alloc, [512] * 8)
+    assert c2c_8 == 8 * c2c_1
+    # KV reads are per-request too: mixed contexts charge sum(contexts)
+    a, _ = cm.batched_token_decode_cycles(cfg, alloc, [100, 900])
+    b, _ = cm.batched_token_decode_cycles(cfg, alloc, [500, 500])
+    assert a == b
+
+
+def test_empty_batch_is_free(cfg, alloc):
+    assert CycleModel().batched_token_decode_cycles(cfg, alloc, []) == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# CCPG accounting under batch
+# ---------------------------------------------------------------------------
+
+def test_ccpg_wake_charged_once_per_iteration(cfg, alloc):
+    """Cluster residency: the wake residue for a batch-8 iteration equals
+    the single-stream one (shared cluster walk), so the per-TOKEN CCPG
+    overhead shrinks with batch size."""
+    m = CCPGModel()
+    assert m.wake_overhead_cycles_batched(alloc, 8) \
+        == m.wake_overhead_cycles_batched(alloc, 1) \
+        == m.wake_overhead_cycles(alloc)
+    assert m.wake_overhead_cycles_batched(alloc, 0) == 0
+    sim = PicnicSimulator()
+    for b in (1, 8):
+        plain, _ = sim.decode_iteration_seconds(cfg, alloc, [512] * b)
+        gated, _ = sim.decode_iteration_seconds(cfg, alloc, [512] * b,
+                                                ccpg=True)
+        overhead_s = m.wake_overhead_cycles(alloc) / sim.tile.frequency_hz
+        assert gated - plain == pytest.approx(overhead_s, rel=1e-9)
+
+
+def test_ccpg_idle_power_is_retention_only(alloc):
+    m = CCPGModel()
+    n = alloc.n_chiplets
+    assert m.idle_power(n, ccpg=True) == pytest.approx(
+        n * m.tile.tile_power_sleep)
+    assert m.idle_power(n, ccpg=False) == pytest.approx(
+        m.system_power(n, ccpg=False))
+    assert m.idle_power(n, ccpg=True) < m.idle_power(n, ccpg=False)
+
+
+def test_ccpg_improves_tokens_per_joule_under_load(cfg):
+    """Same trace: CCPG must raise tokens/J substantially while keeping
+    throughput 'similar' (paper §IV-B: small wake residue)."""
+    kw = dict(rate_rps=40, seed=0, prompt_len=512, max_new=32)
+    r0 = serve_trace(cfg, poisson_trace(32, **kw), max_batch=8, ccpg=False)
+    r1 = serve_trace(cfg, poisson_trace(32, **kw), max_batch=8, ccpg=True)
+    assert r1.tokens_per_J > 1.5 * r0.tokens_per_J
+    assert r1.tokens_per_s > 0.95 * r0.tokens_per_s
+
+
+# ---------------------------------------------------------------------------
+# Engine: admission, scheduling, reporting
+# ---------------------------------------------------------------------------
+
+def test_all_requests_finish_and_tokens_conserved(cfg):
+    trace = poisson_trace(24, rate_rps=100, seed=1, prompt_len=128,
+                          max_new=16)
+    rep = serve_trace(cfg, trace, max_batch=4)
+    assert rep.finished == 24 and rep.rejected == 0
+    assert rep.tokens_generated == sum(r.max_new for r in trace)
+    assert rep.tokens_prefilled == sum(r.prompt_len for r in trace)
+    assert rep.p50_latency_s <= rep.p99_latency_s
+    assert rep.p50_ttft_s <= rep.p99_ttft_s
+    assert 1.0 <= rep.mean_batch_occupancy <= 4.0
+
+
+def test_admission_respects_queue_limit(cfg):
+    """A tiny queue + burst arrivals must shed load, and every request is
+    accounted for as finished or rejected."""
+    trace = replay_trace([(0.0, 64, 256) for _ in range(20)])
+    rep = serve_trace(cfg, trace, max_batch=2, queue_limit=4)
+    assert rep.rejected > 0
+    assert rep.finished + rep.rejected == 20
+
+
+def test_no_admission_before_arrival(cfg):
+    """The engine may not prefill a request before it arrives."""
+    trace = replay_trace([(0.5 * i, 64, 4) for i in range(6)])
+    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(max_batch=4))
+    eng.run(trace)
+    prefills = {rid: t for t, k, rid in eng.events
+                if k == EventKind.PREFILL}
+    for r in trace:
+        assert prefills[r.request_id] >= r.arrival
+
+
+def test_decode_is_preemption_free(cfg):
+    """Once admitted, a request decodes to completion: exactly one
+    PREFILL and one FINISH per request, monotone context growth, and
+    generated == max_new at finish."""
+    trace = poisson_trace(16, rate_rps=200, seed=2, prompt_len=64,
+                          max_new=12)
+    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(max_batch=4))
+    eng.run(trace)
+    for r in trace:
+        kinds = [k for _, k, rid in eng.events if rid == r.request_id]
+        assert kinds.count(EventKind.PREFILL) == 1
+        assert kinds.count(EventKind.FINISH) == 1
+        assert r.generated == r.max_new
+        assert r.context == r.prompt_len + r.max_new
+        assert r.finished_at >= r.first_token_at >= r.arrival
+
+
+def test_batch8_beats_one_at_a_time(cfg):
+    """The acceptance headline: batched decode throughput at batch 8
+    exceeds 1-at-a-time serving on the same trace."""
+    kw = dict(rate_rps=40, seed=0, prompt_len=512, max_new=32)
+    seq = serve_trace(cfg, poisson_trace(32, **kw), max_batch=1)
+    bat = serve_trace(cfg, poisson_trace(32, **kw), max_batch=8)
+    assert bat.tokens_per_s > 1.2 * seq.tokens_per_s
+    assert bat.p99_latency_s < seq.p99_latency_s
+
+
+def test_ttft_deadline_forces_early_prefill(cfg):
+    """A tight TTFT deadline overrides the decode quantum (same policy as
+    launch/scheduler.py, priced by the cycle model)."""
+    rows = [{"arrival_s": 0.0, "prompt_len": 256, "max_new": 512},
+            {"arrival_s": 0.01, "prompt_len": 64, "max_new": 4,
+             "deadline_ttft": 0.02}]
+    trace = replay_trace(rows)
+    eng = ContinuousBatchingEngine(
+        cfg, engine=EngineConfig(max_batch=4, decode_quantum=10 ** 6))
+    eng.run(trace)
+    # the at-risk check fires between iterations, so the deadline can slip
+    # by at most one decode round; without the override the quantum would
+    # hold the prefill back for request 0's full 512-token decode (~0.6 s)
+    sim = PicnicSimulator()
+    alloc = allocate_chiplets(cfg, sim.tile)
+    round_s, _ = sim.decode_iteration_seconds(cfg, alloc, [512])
+    assert trace[1].ttft is not None
+    assert trace[1].ttft <= 0.02 + 2 * round_s
+
+
+def test_idle_gaps_charged_at_idle_power(cfg):
+    """Sparse arrivals leave idle time; with CCPG the idle energy is
+    scratchpad-retention only, so sparse-traffic tokens/J stays high."""
+    trace_kw = dict(rows=[(0.5 * i, 32, 4) for i in range(4)])
+    r0 = serve_trace(cfg, replay_trace(**trace_kw), max_batch=2, ccpg=False)
+    r1 = serve_trace(cfg, replay_trace(**trace_kw), max_batch=2, ccpg=True)
+    assert r0.idle_s > 1.0 and r1.idle_s > 1.0
+    assert r1.energy_J < 0.5 * r0.energy_J
+
+
+def test_cost_model_calibrates_from_simulator(cfg):
+    """launch/scheduler's abstract CostModel can be derived from the
+    mapped cycle model — the two serving layers agree on time."""
+    sim = PicnicSimulator()
+    alloc = allocate_chiplets(cfg, sim.tile)
+    f = sim.tile.frequency_hz
+    cm = CostModel.from_simulator(sim, cfg, prompt_len=512)
+    dec_cyc, _ = sim.cycle_model.token_decode_cycles(cfg, alloc, 512)
+    assert cm.decode_round_s == pytest.approx(dec_cyc / f)
+    # the prefill secant is a linearization of a quadratic: held-out
+    # prompt lengths must land in the right ballpark but the calibration
+    # point must move with prompt_len (i.e. the fit is not a constant)
+    p2048, _ = sim.cycle_model.prefill_cycles(cfg, alloc, 2048)
+    est = cm.prefill_fixed_s + 2047 * cm.prefill_s_per_token
+    assert est == pytest.approx(p2048 / f, rel=0.30)
+    assert est < p2048 / f   # secant underestimates past the fit point
+    cm_long = CostModel.from_simulator(sim, cfg, prompt_len=2048)
+    est_long = cm_long.prefill_fixed_s + 2047 * cm_long.prefill_s_per_token
+    assert est_long == pytest.approx(p2048 / f, rel=1e-6)
+    assert cm_long.prefill_s_per_token > cm.prefill_s_per_token
+
+
+def test_no_finishes_reports_nan_percentiles(cfg):
+    """An all-rejected run must not masquerade as zero-latency."""
+    rep = serve_trace(cfg, replay_trace([(0.0, 16, 4)]), max_batch=1,
+                      queue_limit=0)
+    assert rep.finished == 0 and rep.rejected == 1
+    assert np.isnan(rep.p50_latency_s) and np.isnan(rep.p99_latency_s)
+    assert np.isnan(rep.p50_ttft_s) and np.isnan(rep.p99_ttft_s)
+
+
+def test_prefill_only_request_generates_nothing(cfg):
+    """max_new == 0 (scoring / prefill-only) must not emit a token."""
+    rep = serve_trace(cfg, replay_trace([(0.0, 16, 0), (0.0, 16, 4)]),
+                      max_batch=2)
+    assert rep.finished == 2
+    assert rep.tokens_generated == 4
+    assert rep.tokens_prefilled == 32
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 24), batch=st.integers(1, 8),
+       quantum=st.integers(1, 8), seed=st.integers(0, 99))
+def test_engine_drains_any_load(n, batch, quantum, seed):
+    """Starvation-freedom under the cycle-model costs: every admitted
+    request finishes for any load/slots/quantum mix."""
+    cfg = get_config("llama3.2-1b")
+    rng = np.random.default_rng(seed)
+    rows = [(float(rng.uniform(0, 0.2)), int(rng.integers(1, 256)),
+             int(rng.integers(1, 16))) for _ in range(n)]
+    rep = serve_trace(cfg, replay_trace(rows), max_batch=batch,
+                      decode_quantum=quantum, queue_limit=1000)
+    assert rep.finished == n and rep.rejected == 0
