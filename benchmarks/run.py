@@ -191,6 +191,64 @@ def bench_serving():
     return rows
 
 
+def bench_distributed():
+    """Measured HLO collectives -> photonic cost model (ISSUE 2 tentpole).
+
+    Lowers the sharded llama-1B prefill + decode cells (picnic variant:
+    shard_map SP attention / partial-softmax decode) on a forced 8-host-
+    device 1x8 (data x model) mesh in a subprocess, extracts per-collective
+    wire bytes from the compiled HLO, and feeds them into the simulator as
+    the photonic C2C traffic term — next to the default analytic path,
+    which must keep reproducing the calibrated Table II row exactly."""
+    from repro.configs import get_config
+    from repro.core import PicnicSimulator
+    from repro.launch.collective_capture import (capture_in_subprocess,
+                                                 to_measured_traffic)
+    t0 = time.time()
+    arch, ctx = "llama3.2-1b", 512
+    recs = capture_in_subprocess(arch, modes=("prefill", "decode"),
+                                 seq_len=ctx, batch=1, mesh="1x8",
+                                 variant="picnic")
+    pre = next(r for r in recs if r["mode"] == "prefill")
+    dec = next(r for r in recs if r["mode"] == "decode")
+    mt = to_measured_traffic(pre, dec)
+
+    sim = PicnicSimulator()
+    cfg = get_config(arch)
+    r_an = sim.run(cfg, ctx, ctx)                      # default: analytic
+    r_me = sim.run(cfg, ctx, ctx, measured_c2c=mt)     # measured traffic
+    # guard: the default b=1 path must still hit the calibrated Table II row
+    paper_tput = PAPER_TABLE_II[(arch, ctx)][0]
+    tput_err = abs(r_an.throughput_tps / paper_tput - 1)
+    assert tput_err < 0.07, (r_an.throughput_tps, paper_tput)
+    assert r_me.throughput_tps == r_an.throughput_tps  # traffic != timing
+
+    out = {
+        "arch": arch, "ctx": ctx, "mesh": dec["mesh"],
+        "per_collective_decode": dec["collectives"],
+        "per_collective_prefill": pre["collectives"],
+        "measured": {
+            "prefill_bytes": mt.prefill_bytes,
+            "decode_bytes_per_token": mt.decode_bytes_per_token,
+            "c2c_bytes_total": r_me.c2c_bytes_total,
+            "c2c_power_W": r_me.c2c_avg_power_W,
+            "c2c_source": r_me.c2c_source,
+        },
+        "analytic": {
+            "c2c_bytes_total": r_an.c2c_bytes_total,
+            "c2c_power_W": r_an.c2c_avg_power_W,
+            "tput_err_vs_paper_%": round(100 * tput_err, 2),
+        },
+    }
+    _save("distributed", out)
+    ratio = r_me.c2c_bytes_total / max(r_an.c2c_bytes_total, 1)
+    _emit("distributed", t0,
+          f"measured_B_per_tok={mt.decode_bytes_per_token:.0f}_"
+          f"measured_vs_analytic_c2c={ratio:.2f}x_tableII_err_pct="
+          f"{100 * tput_err:.2f}")
+    return out
+
+
 def bench_roofline():
     """The dry-run roofline table (reads artifacts/dryrun/*.json)."""
     t0 = time.time()
@@ -309,6 +367,7 @@ BENCHES = {
     "fig9_c2c": bench_fig9_c2c,
     "fig10_timeline": bench_fig10_timeline,
     "serving": bench_serving,
+    "distributed": bench_distributed,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
     "ablations": bench_ablations,

@@ -1,0 +1,127 @@
+"""JAX version-portability helpers.
+
+The repo targets a span of JAX versions (0.4.37 → current):
+
+* ``shard_map`` moved from ``jax.experimental.shard_map.shard_map`` to
+  ``jax.shard_map``, renaming ``check_rep`` → ``check_vma`` and replacing
+  the partial-manual ``auto={automatic axes}`` kwarg with
+  ``axis_names={manual axes}`` (complementary sets over the mesh axes).
+* ``Compiled.cost_analysis()`` returned ``[dict]`` (one dict per program)
+  on older JAX and returns a plain ``dict`` on newer JAX.
+
+This module resolves both seams once; call sites import from here (or the
+higher-level :mod:`repro.sharding.shmap`) and never touch ``jax.*``
+directly for these APIs.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+from typing import Any, Callable, Dict, FrozenSet, Mapping, Optional
+
+
+def force_host_devices(n: int) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS,
+    preserving whatever other flags are already set.  An existing
+    device-count flag wins (the caller opted out).  Must run before JAX
+    initializes — import this module, not jax, first."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (flags + " " if flags else "") + \
+        f"--xla_force_host_platform_device_count={n}"
+
+
+def resolve_shard_map() -> Callable:
+    """The native shard_map entry point, wherever this JAX puts it."""
+    import jax
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map as legacy
+    return legacy
+
+
+def shard_map_param_names(fn: Optional[Callable] = None) -> FrozenSet[str]:
+    """Keyword names accepted by the native shard_map (drives translation)."""
+    fn = fn or resolve_shard_map()
+    try:
+        return frozenset(inspect.signature(fn).parameters)
+    except (TypeError, ValueError):  # C-accelerated / exotic wrappers
+        return frozenset({"mesh", "in_specs", "out_specs", "check_rep",
+                          "auto"})
+
+
+def translate_shard_map_kwargs(param_names: FrozenSet[str],
+                               mesh_axis_names,
+                               *,
+                               check_vma: Optional[bool] = None,
+                               check_rep: Optional[bool] = None,
+                               axis_names=None,
+                               auto=None) -> Dict[str, Any]:
+    """Map the caller's (either-era) kwargs onto what this JAX accepts.
+
+    ``check_vma`` ⇄ ``check_rep`` are the same boolean under two names.
+    ``axis_names`` (the MANUAL axes, new API) and ``auto`` (the AUTOMATIC
+    axes, old API) are complementary subsets of the mesh axes; omitting
+    both means fully manual (the shared default).
+    """
+    if check_vma is not None and check_rep is not None \
+            and check_vma != check_rep:
+        raise ValueError("check_vma and check_rep are aliases; got "
+                         f"conflicting values {check_vma} != {check_rep}")
+    if axis_names is not None and auto is not None:
+        both = frozenset(axis_names) | frozenset(auto)
+        if frozenset(axis_names) & frozenset(auto) or \
+                both != frozenset(mesh_axis_names):
+            raise ValueError(
+                "axis_names (manual) and auto (automatic) must partition "
+                f"the mesh axes {tuple(mesh_axis_names)}; got "
+                f"axis_names={axis_names} auto={auto}")
+
+    kw: Dict[str, Any] = {}
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None:
+        if "check_vma" in param_names:
+            kw["check_vma"] = check
+        elif "check_rep" in param_names:
+            kw["check_rep"] = check
+
+    manual = None
+    if axis_names is not None:
+        manual = frozenset(axis_names)
+    elif auto is not None:
+        manual = frozenset(mesh_axis_names) - frozenset(auto)
+    if manual is not None and manual != frozenset(mesh_axis_names):
+        if "axis_names" in param_names:
+            kw["axis_names"] = manual
+        elif "auto" in param_names:
+            kw["auto"] = frozenset(mesh_axis_names) - manual
+        else:
+            raise NotImplementedError(
+                "this JAX's shard_map supports neither axis_names nor auto; "
+                "partial-manual shard_map is unavailable")
+    return kw
+
+
+def cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` as a flat dict on every JAX version.
+
+    Older JAX returns ``[dict]`` (one per program; ours are single-program),
+    newer JAX returns ``dict``, and some backends return ``None``.  Indexing
+    the old list with a string key is the seed-era
+    ``TypeError: list indices must be integers or slices, not str``.
+    """
+    c = compiled.cost_analysis()
+    if c is None:
+        return {}
+    if isinstance(c, (list, tuple)):
+        if not c:
+            return {}
+        merged: Dict[str, float] = {}
+        for prog in c:
+            if isinstance(prog, Mapping):
+                for k, v in prog.items():
+                    merged[k] = merged.get(k, 0.0) + float(v)
+        return merged
+    return dict(c)

@@ -20,5 +20,6 @@ from .scheduling import allocate_chiplets, llm_layers, CycleModel
 from .scu import pwl_exp, pwl_softmax, SCUFsm, SCUTiming, max_pwl_exp_error
 from .energy import TileSpec, MacroPower, MacroArea, table_iv
 from .ccpg import CCPGModel, CLUSTER_SIZE
-from .interconnect import OPTICAL, ELECTRICAL, c2c_average_power, TrafficTrace
+from .interconnect import (OPTICAL, ELECTRICAL, MeasuredTraffic,
+                           c2c_average_power, TrafficTrace)
 from .simulator import PicnicSimulator, comparison_table, PLATFORMS

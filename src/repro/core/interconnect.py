@@ -8,8 +8,8 @@ level the paper evaluates at (average C2C power for a traffic trace).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Iterable, List, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Mapping, Tuple
 
 from .energy import E_DRAM_ACCESS, E_ELECTRICAL_C2C, E_OPTICAL_C2C
 
@@ -46,6 +46,30 @@ def c2c_transfer_time(payload_bytes: int, link: LinkSpec) -> float:
 
 def dram_access_power(bytes_per_second: float) -> float:
     return bytes_per_second * 8 * E_DRAM_ACCESS
+
+
+@dataclass(frozen=True)
+class MeasuredTraffic:
+    """Photonic-link traffic measured from compiled (SPMD-partitioned) HLO.
+
+    Produced by ``launch/collective_capture.py``: the TP×SP×PP cells are
+    lowered, ``hlo_cost.analyze`` extracts per-collective ring-model wire
+    bytes, and the totals land here — the measured replacement for the
+    cycle model's analytic layer-boundary C2C estimate (the same
+    measured-traffic methodology as Photonic Fabric, arXiv:2507.14000).
+
+    ``prefill_bytes``: total link bytes for one prefill of the prompt.
+    ``decode_bytes_per_token``: total link bytes per generated token
+    (one sharded decode step, normalized per request).
+    ``per_collective``: op -> {count, bytes, wire_bytes} per chip per step,
+    as reported by ``hlo_cost.Cost.coll`` — kept for reporting.
+    """
+    prefill_bytes: float
+    decode_bytes_per_token: float
+    per_collective: Mapping[str, Mapping[str, float]] = \
+        field(default_factory=dict)
+    n_devices: int = 1
+    source: str = "hlo"
 
 
 @dataclass

@@ -16,8 +16,8 @@ from typing import Dict, List, Optional, Tuple
 
 from .ccpg import CCPGModel
 from .energy import TileSpec
-from .interconnect import (ELECTRICAL, OPTICAL, LinkSpec, TrafficTrace,
-                           c2c_average_power)
+from .interconnect import (ELECTRICAL, OPTICAL, LinkSpec, MeasuredTraffic,
+                           TrafficTrace, c2c_average_power)
 from .scheduling import ChipletAllocation, CycleModel, allocate_chiplets
 
 
@@ -35,6 +35,7 @@ class InferenceResult:
     c2c_bytes_total: int
     c2c_avg_power_W: float
     ccpg: bool
+    c2c_source: str = "analytic"
 
     def row(self) -> Dict:
         return {
@@ -56,7 +57,12 @@ class PicnicSimulator:
 
     # ------------------------------------------------------------------
     def run(self, cfg, ctx_in: int, ctx_out: int, *,
-            ccpg: bool = False) -> InferenceResult:
+            ccpg: bool = False,
+            measured_c2c: Optional[MeasuredTraffic] = None) -> InferenceResult:
+        """``measured_c2c`` switches the photonic-link traffic term from the
+        cycle model's analytic layer-boundary estimate to per-collective
+        wire bytes measured on compiled HLO (collective_capture.py).  The
+        default (None) is the calibrated Table II path, byte-for-byte."""
         alloc = allocate_chiplets(cfg, self.tile)
         f = self.tile.frequency_hz
 
@@ -84,6 +90,11 @@ class PicnicSimulator:
         # context-length scaling is reproduced (see EXPERIMENTS.md).
         tput = (ctx_in + ctx_out) / total_s
 
+        if measured_c2c is not None:
+            # timing stays with the cycle model; only the traffic term
+            # (bytes -> link power) is replaced by the HLO measurement
+            prefill_c2c = int(measured_c2c.prefill_bytes)
+            decode_c2c = int(measured_c2c.decode_bytes_per_token * ctx_out)
         c2c_bytes = prefill_c2c + decode_c2c
         c2c_rate = c2c_bytes / total_s
         c2c_power = c2c_average_power(c2c_rate, self.link)
@@ -95,7 +106,9 @@ class PicnicSimulator:
             throughput_tps=tput, avg_power_W=power,
             efficiency_tpj=tput / power, n_chiplets=alloc.n_chiplets,
             prefill_s=prefill_s, decode_s=decode_s,
-            c2c_bytes_total=c2c_bytes, c2c_avg_power_W=c2c_power, ccpg=ccpg)
+            c2c_bytes_total=c2c_bytes, c2c_avg_power_W=c2c_power, ccpg=ccpg,
+            c2c_source="analytic" if measured_c2c is None
+            else measured_c2c.source)
 
     # ------------------------------------------------------------------
     # Serving-engine hooks (launch/serving_engine.py): per-iteration costs

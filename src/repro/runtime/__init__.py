@@ -2,14 +2,14 @@ from .fault_tolerance import (HeartbeatMonitor, RestartPolicy,
                               TrainingSupervisor, Worker, WorkerFailure,
                               WorkerState, plan_elastic_mesh)
 from .straggler import BackupInputRunner, StragglerDetector, StragglerReport
-from .compression import (compress_with_feedback, compressed_psum,
-                          decompress, dequantize_int8, init_error_state,
-                          quantize_int8)
+from .compression import (compress_with_feedback, compressed_allreduce,
+                          compressed_psum, decompress, dequantize_int8,
+                          init_error_state, quantize_int8)
 
 __all__ = [
     "HeartbeatMonitor", "RestartPolicy", "TrainingSupervisor", "Worker",
     "WorkerFailure", "WorkerState", "plan_elastic_mesh",
     "BackupInputRunner", "StragglerDetector", "StragglerReport",
-    "compress_with_feedback", "compressed_psum", "decompress",
-    "dequantize_int8", "init_error_state", "quantize_int8",
+    "compress_with_feedback", "compressed_allreduce", "compressed_psum",
+    "decompress", "dequantize_int8", "init_error_state", "quantize_int8",
 ]

@@ -70,3 +70,24 @@ def compressed_psum(grads, error_state, axis_name: str):
     flat_e = treedef.flatten_up_to(error_state)
     outs, errs = zip(*[one(g, e) for g, e in zip(flat_g, flat_e)])
     return treedef.unflatten(list(outs)), treedef.unflatten(list(errs))
+
+
+def compressed_allreduce(grads, error_state, mesh, axis_name: str):
+    """:func:`compressed_psum` wrapped in a (version-portable) shard_map.
+
+    ``grads``/``error_state``: pytrees whose leaves are sharded on their
+    leading dim over ``axis_name``.  Returns (reduced grads, new error
+    state) with the same sharding.  This is the standalone entry point the
+    DP hillclimb and the distributed tests drive; inside a larger
+    shard_map call :func:`compressed_psum` directly.
+    """
+    from repro.sharding.shmap import shard_map
+
+    spec = jax.sharding.PartitionSpec(axis_name)
+
+    def body(g, e):
+        return compressed_psum(g, e, axis_name)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                   out_specs=(spec, spec), check_vma=False)
+    return fn(grads, error_state)

@@ -1,0 +1,40 @@
+"""Version-portable ``shard_map``.
+
+Every shard_map in the repo (SP ring-lite attention, partial-softmax PICNIC
+decode, GPipe pipeline, compressed psum) goes through :func:`shard_map`
+below, written against the NEW JAX surface (``check_vma`` +
+``axis_names``-are-the-manual-axes) and translated at call time onto
+whatever this JAX provides:
+
+* JAX ≥ 0.6-era: ``jax.shard_map(..., check_vma=..., axis_names=...)``
+  — passed through unchanged.
+* JAX 0.4.x: ``jax.experimental.shard_map.shard_map(..., check_rep=...,
+  auto=...)`` — ``check_vma`` renamed to ``check_rep``; the manual-axes
+  set is complemented into ``auto`` (the axes GSPMD keeps automatic).
+
+Callers may use either era's spelling (``check_rep``/``auto`` are accepted
+as aliases); :mod:`repro.compat` holds the translation table.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro import compat
+
+
+def shard_map(f: Callable, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None,
+              check_rep: Optional[bool] = None,
+              axis_names=None, auto=None) -> Callable:
+    """Portable shard_map.
+
+    Parameters mirror ``jax.shard_map``; ``check_rep`` and ``auto`` are
+    accepted as the legacy aliases of ``check_vma`` and the complement of
+    ``axis_names``.  ``axis_names``/``auto`` omitted → fully manual.
+    """
+    native = compat.resolve_shard_map()
+    kw = compat.translate_shard_map_kwargs(
+        compat.shard_map_param_names(native), mesh.axis_names,
+        check_vma=check_vma, check_rep=check_rep,
+        axis_names=axis_names, auto=auto)
+    return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -1,0 +1,187 @@
+"""Shim coverage (ISSUE 2 satellite): kwarg translation across the JAX
+shard_map API generations, and the cost_analysis list-vs-dict normalizer.
+
+Fast lane — no subprocesses, no multi-device meshes, no slow marker."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.sharding import shmap
+
+AXES = ("pod", "data", "model")
+LEGACY = frozenset({"f", "mesh", "in_specs", "out_specs",
+                    "check_rep", "auto"})
+MODERN = frozenset({"f", "mesh", "in_specs", "out_specs",
+                    "check_vma", "axis_names"})
+
+
+# ---------------------------------------------------------------------------
+# kwarg translation
+# ---------------------------------------------------------------------------
+
+def test_check_vma_maps_to_check_rep_on_legacy():
+    kw = compat.translate_shard_map_kwargs(LEGACY, AXES, check_vma=False)
+    assert kw == {"check_rep": False}
+
+
+def test_check_rep_alias_accepted_on_modern():
+    kw = compat.translate_shard_map_kwargs(MODERN, AXES, check_rep=False)
+    assert kw == {"check_vma": False}
+
+
+def test_check_flag_omitted_when_unset():
+    assert compat.translate_shard_map_kwargs(LEGACY, AXES) == {}
+
+
+def test_conflicting_check_flags_raise():
+    with pytest.raises(ValueError):
+        compat.translate_shard_map_kwargs(LEGACY, AXES, check_vma=True,
+                                          check_rep=False)
+
+
+def test_axis_names_complemented_into_auto_on_legacy():
+    kw = compat.translate_shard_map_kwargs(
+        LEGACY, AXES, axis_names=frozenset({"pod"}))
+    assert kw == {"auto": frozenset({"data", "model"})}
+
+
+def test_auto_complemented_into_axis_names_on_modern():
+    kw = compat.translate_shard_map_kwargs(
+        MODERN, AXES, auto=frozenset({"data", "model"}))
+    assert kw == {"axis_names": frozenset({"pod"})}
+
+
+def test_fully_manual_passes_no_partial_kwarg():
+    kw = compat.translate_shard_map_kwargs(
+        LEGACY, AXES, axis_names=frozenset(AXES))
+    assert kw == {}
+
+
+def test_non_partitioning_axis_sets_raise():
+    with pytest.raises(ValueError):
+        compat.translate_shard_map_kwargs(
+            LEGACY, AXES, axis_names=frozenset({"pod"}),
+            auto=frozenset({"pod", "data"}))
+
+
+def test_partial_manual_unsupported_signature_raises():
+    bare = frozenset({"f", "mesh", "in_specs", "out_specs"})
+    with pytest.raises(NotImplementedError):
+        compat.translate_shard_map_kwargs(
+            bare, AXES, axis_names=frozenset({"pod"}))
+
+
+# ---------------------------------------------------------------------------
+# shim -> native plumbing (mocked native fn)
+# ---------------------------------------------------------------------------
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+
+
+def test_shim_translates_for_this_jax(monkeypatch):
+    seen = {}
+
+    def fake_native(f, *, mesh, in_specs, out_specs, check_rep=True,
+                    auto=frozenset()):
+        seen.update(mesh=mesh, check_rep=check_rep, auto=auto)
+        return f
+
+    monkeypatch.setattr(compat, "resolve_shard_map", lambda: fake_native)
+    out = shmap.shard_map(lambda x: x, mesh=_FakeMesh(), in_specs=P(),
+                          out_specs=P(), check_vma=False,
+                          axis_names=frozenset({"model"}))
+    assert out(3) == 3
+    assert seen["check_rep"] is False
+    assert seen["auto"] == frozenset({"data"})
+
+
+def test_resolve_shard_map_finds_a_callable():
+    fn = compat.resolve_shard_map()
+    assert callable(fn)
+    names = compat.shard_map_param_names(fn)
+    # every supported JAX spells one of each pair
+    assert {"check_rep", "check_vma"} & names
+    assert {"auto", "axis_names"} & names
+
+
+def test_shim_runs_on_single_device_mesh():
+    mesh = jax.make_mesh((1,), ("model",))
+    fn = shmap.shard_map(
+        lambda x: jax.lax.psum(x, "model"), mesh=mesh,
+        in_specs=P(), out_specs=P(), check_vma=False)
+    assert float(jax.jit(fn)(jnp.float32(2.0))) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# cost_analysis normalizer
+# ---------------------------------------------------------------------------
+
+class _FakeCompiled:
+    def __init__(self, ret):
+        self._ret = ret
+
+    def cost_analysis(self):
+        return self._ret
+
+
+def test_cost_analysis_list_shape():
+    c = compat.cost_analysis(_FakeCompiled([{"flops": 5.0, "bytes": 2.0}]))
+    assert c["flops"] == 5.0 and c["bytes"] == 2.0
+
+
+def test_cost_analysis_dict_shape():
+    assert compat.cost_analysis(_FakeCompiled({"flops": 7.0}))["flops"] == 7.0
+
+
+def test_cost_analysis_none_and_empty():
+    assert compat.cost_analysis(_FakeCompiled(None)) == {}
+    assert compat.cost_analysis(_FakeCompiled([])) == {}
+
+
+def test_cost_analysis_merges_multi_program():
+    c = compat.cost_analysis(
+        _FakeCompiled([{"flops": 5.0}, {"flops": 3.0, "bytes": 1.0}]))
+    assert c["flops"] == 8.0 and c["bytes"] == 1.0
+
+
+def test_cost_analysis_on_real_compiled():
+    f = jax.jit(lambda x: x @ x)
+    c = f.lower(jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
+    d = compat.cost_analysis(c)
+    assert isinstance(d, dict) and d.get("flops", 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# XLA_FLAGS helper
+# ---------------------------------------------------------------------------
+
+def test_force_host_devices_appends(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+    compat.force_host_devices(8)
+    import os
+    assert os.environ["XLA_FLAGS"] == (
+        "--xla_cpu_multi_thread_eigen=false "
+        "--xla_force_host_platform_device_count=8")
+
+
+def test_force_host_devices_respects_existing_count(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS",
+                       "--xla_force_host_platform_device_count=4")
+    compat.force_host_devices(8)
+    import os
+    assert os.environ["XLA_FLAGS"] == \
+        "--xla_force_host_platform_device_count=4"
+
+
+def test_force_host_devices_sets_when_unset(monkeypatch):
+    # setenv first so monkeypatch records the pre-test state (delenv on an
+    # absent var records nothing and the write below would leak)
+    monkeypatch.setenv("XLA_FLAGS", "sentinel")
+    monkeypatch.delenv("XLA_FLAGS")
+    compat.force_host_devices(8)
+    import os
+    assert os.environ["XLA_FLAGS"] == \
+        "--xla_force_host_platform_device_count=8"
