@@ -2,10 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of the
 producing computation on this host; derived = the headline quantity the
-paper's table/figure reports).  Detailed tables go to artifacts/bench/.
+paper's table/figure reports).  Detailed tables go to artifacts/bench/;
+headline benches additionally write ``BENCH_<name>.json`` artifacts
+(throughput, tok/J, p50/p99 in one stable schema) so the perf trajectory
+stays machine-readable across PRs (uploaded by CI).
 
   PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run table_ii   # one
+  PYTHONPATH=src python -m benchmarks.run table_ii   # one (alias: table2)
+  python benchmarks/run.py table2 --trace-out /tmp/t.json   # + chrome trace
 """
 from __future__ import annotations
 
@@ -45,6 +49,17 @@ def _save(name, obj):
         json.dump(obj, f, indent=1, default=str)
 
 
+def _bench_artifact(name, metrics, rows=None):
+    """BENCH_<name>.json — one stable schema per bench across PRs so the
+    perf trajectory is machine-diffable (CI uploads these)."""
+    ART.mkdir(parents=True, exist_ok=True)
+    doc = {"bench": name, "schema": 1, "metrics": metrics}
+    if rows is not None:
+        doc["rows"] = rows
+    with open(ART / f"BENCH_{name}.json", "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True, default=str)
+
+
 # ---------------------------------------------------------------------------
 
 def bench_table_ii():
@@ -62,6 +77,13 @@ def bench_table_ii():
                      "paper_eff": eff, "tput_err_%": round(100 * err, 1)})
     mean_err = 100 * float(np.mean(errs))
     _save("table_ii", rows)
+    _bench_artifact("table_ii", {
+        "mean_abs_tput_err_pct": round(mean_err, 3),
+        "throughput_tok_s": {f"{r['model']}/{r['context']}":
+                             r["throughput_tok_s"] for r in rows},
+        "efficiency_tok_J": {f"{r['model']}/{r['context']}":
+                             r["efficiency_tok_J"] for r in rows},
+    }, rows=rows)
     _emit("table_ii", t0, f"mean_abs_tput_err_pct={mean_err:.2f}")
     return rows
 
@@ -75,6 +97,12 @@ def bench_table_iii():
     r = sim.run(get_config("llama3-8b"), 1024, 1024, ccpg=True)
     rows = comparison_table(r)
     _save("table_iii", rows)
+    _bench_artifact("table_iii", {
+        "throughput_tok_s": rows[0]["throughput_tok_s"],
+        "efficiency_tok_J": rows[0]["efficiency_tok_J"],
+        "eff_impr_vs_h100": rows[0]["eff_impr_vs_h100"],
+        "speedup_vs_h100": rows[0]["speedup_vs_h100"],
+    })
     _emit("table_iii", t0,
           f"eff_impr_vs_h100={rows[0]['eff_impr_vs_h100']}x_paper=57x")
     return rows
@@ -187,6 +215,17 @@ def bench_serving():
             rows.append({"max_batch": batch, **rep.row()})
     speedup = tput[(8, False)] / tput[(1, False)]
     _save("serving", rows)
+    _bench_artifact("serving", {
+        "batch8_vs_1_speedup": round(speedup, 3),
+        "tokens_per_s": {f"b{r['max_batch']}_ccpg{int(r['ccpg'])}":
+                         r["tokens_per_s"] for r in rows},
+        "tokens_per_J": {f"b{r['max_batch']}_ccpg{int(r['ccpg'])}":
+                         r["tokens_per_J"] for r in rows},
+        "p50_latency_s": {f"b{r['max_batch']}_ccpg{int(r['ccpg'])}":
+                          r["p50_latency_s"] for r in rows},
+        "p99_latency_s": {f"b{r['max_batch']}_ccpg{int(r['ccpg'])}":
+                          r["p99_latency_s"] for r in rows},
+    }, rows=rows)
     _emit("serving", t0, f"batch8_vs_1at_a_time_tput={speedup:.2f}x")
     return rows
 
@@ -359,6 +398,22 @@ def bench_ablations():
     return rows
 
 
+def export_trace(path):
+    """--trace-out: export a chrome://tracing JSON of one dynamic-CCPG
+    Llama-1B 512/64 walk — every TimelineIR category (ComputeSpan,
+    C2CTransfer, ClusterWake, ClusterSleep, EnergySample, TokenEmit) in
+    one trace.  Open with chrome://tracing or ui.perfetto.dev."""
+    from repro.configs import get_config
+    from repro.core import PicnicSimulator, Timeline
+    t0 = time.time()
+    tl = Timeline()
+    sim = PicnicSimulator()
+    sim.run(get_config("llama3.2-1b"), 512, 64, ccpg=True,
+            dynamic_ccpg=True, timeline=tl)
+    tl.save_chrome_trace(path)
+    _emit("trace_export", t0, f"events={len(tl.events)}_path={path}")
+
+
 BENCHES = {
     "table_ii": bench_table_ii,
     "table_iii": bench_table_iii,
@@ -374,11 +429,26 @@ BENCHES = {
 }
 
 
+# short CLI aliases for the paper-table benches
+ALIASES = {"table2": "table_ii", "table3": "table_iii", "table4": "table_iv"}
+
+
 def main() -> None:
-    which = sys.argv[1:] or list(BENCHES)
+    argv = sys.argv[1:]
+    trace_out = None
+    if "--trace-out" in argv:
+        i = argv.index("--trace-out")
+        try:
+            trace_out = argv[i + 1]
+        except IndexError:
+            raise SystemExit("--trace-out requires a path argument")
+        del argv[i:i + 2]
+    which = [ALIASES.get(a, a) for a in argv] or list(BENCHES)
     print("name,us_per_call,derived")
     for name in which:
         BENCHES[name]()
+    if trace_out is not None:
+        export_trace(trace_out)
 
 
 if __name__ == "__main__":

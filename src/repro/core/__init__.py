@@ -9,6 +9,9 @@ Layers:
   scu                — softmax unit (8-segment PWL exp) + FSM timing
   energy/ccpg        — Table I/IV power-area model, cluster power gating
   interconnect       — photonic vs electrical C2C
+  timeline           — TimelineIR: typed event stream + span-integrated
+                       energy, shared by simulator/serving/CCPG, with a
+                       chrome://tracing exporter
   simulator          — end-to-end tokens/s, W, tokens/J (Tables II/III)
 """
 from .isa import Instr, Mode, PORTS
@@ -22,4 +25,7 @@ from .energy import TileSpec, MacroPower, MacroArea, table_iv
 from .ccpg import CCPGModel, CLUSTER_SIZE
 from .interconnect import (OPTICAL, ELECTRICAL, MeasuredTraffic,
                            c2c_average_power, TrafficTrace)
+from .timeline import (Timeline, ComputeSpan, C2CTransfer, ClusterWake,
+                       ClusterSleep, EnergySample, TokenEmit,
+                       EVENT_CATEGORIES)
 from .simulator import PicnicSimulator, comparison_table, PLATFORMS

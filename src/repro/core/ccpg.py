@@ -25,18 +25,26 @@ class CCPGModel:
     wake_cycles: int = 1000          # cluster power-up (regulator settle)
     dram_hub_watts: float = 0.25     # DRAM hub + IO (external comms, §II)
     optical_base_watts: float = 0.05  # laser bias per active link
+    # Table II excludes the DRAM hub (weights live in RRAM, embeddings are
+    # streamed once); opt in when modelling the full package
+    include_dram_hub: bool = False
 
     def system_power(self, n_chiplets: int, *, ccpg: bool) -> float:
         if not ccpg:
-            return (n_chiplets * self.tile.tile_power_active
-                    + self.dram_hub_watts * 0.0)  # Table II excludes DRAM hub
-        n_sleep = max(0, n_chiplets - CLUSTER_SIZE)
-        n_active = min(n_chiplets, CLUSTER_SIZE)
-        return (n_active * self.tile.tile_power_active
-                + n_sleep * self.tile.tile_power_sleep)
+            p = n_chiplets * self.tile.tile_power_active
+        else:
+            n_sleep = max(0, n_chiplets - CLUSTER_SIZE)
+            n_active = min(n_chiplets, CLUSTER_SIZE)
+            p = (n_active * self.tile.tile_power_active
+                 + n_sleep * self.tile.tile_power_sleep)
+        if self.include_dram_hub:
+            p += self.dram_hub_watts
+        return p
 
     def power_saving_frac(self, n_chiplets: int) -> float:
         p0 = self.system_power(n_chiplets, ccpg=False)
+        if p0 <= 0.0:
+            return 0.0               # nothing to gate on an empty system
         p1 = self.system_power(n_chiplets, ccpg=True)
         return 1.0 - p1 / p0
 
@@ -47,6 +55,15 @@ class CCPGModel:
         n_transitions = max(0, alloc.n_clusters - 1)
         exposed = max(0, self.wake_cycles - 2000)   # pre-wake hides ~2us
         return n_transitions * exposed + n_transitions * 16  # ctrl overhead
+
+    def wake_latency_cycles(self, alloc: ChipletAllocation) -> int:
+        """Dynamic mode: the FULL regulator-settle latency (`wake_cycles`)
+        is exposed on every cluster transition — no pre-wake overlap.
+        This is what the timeline layer emits as real `ClusterWake`
+        events; the static path above keeps only the folded-in residue,
+        which leaves `wake_cycles` dead state at its default value."""
+        n_transitions = max(0, alloc.n_clusters - 1)
+        return n_transitions * (self.wake_cycles + 16)  # settle + ctrl
 
     def wake_overhead_cycles_batched(self, alloc: ChipletAllocation,
                                      batch_size: int) -> int:
@@ -65,7 +82,10 @@ class CCPGModel:
         without it the chiplets have no gating path and burn active power.
         """
         if ccpg:
-            return n_chiplets * self.tile.tile_power_sleep
+            p = n_chiplets * self.tile.tile_power_sleep
+            if self.include_dram_hub:
+                p += self.dram_hub_watts   # the hub has no gating path
+            return p
         return self.system_power(n_chiplets, ccpg=False)
 
     def scaling_table(self, chiplet_counts: List[int]) -> List[dict]:

@@ -77,6 +77,16 @@ class TrafficTrace:
     """(t_start_s, duration_s, bytes) C2C burst events — Fig 10."""
     events: List[Tuple[float, float, int]]
 
+    @classmethod
+    def from_timeline(cls, timeline) -> "TrafficTrace":
+        """Build the Fig-10 burst trace from a TimelineIR event stream
+        (core/timeline.Timeline): every C2CTransfer event becomes one
+        burst.  Duck-typed on ``nbytes`` to keep interconnect free of a
+        timeline import."""
+        events = [(e.t0, e.dur_s, e.nbytes) for e in timeline.events
+                  if hasattr(e, "nbytes")]
+        return cls(events)
+
     def average_power(self, link: LinkSpec, horizon_s: float) -> float:
         total_bits = sum(b for _, _, b in self.events) * 8
         return total_bits * link.energy_per_bit / horizon_s + link.static_watts

@@ -203,13 +203,15 @@ class CycleModel:
         return self.c2c_latency + int(payload_bytes / self.c2c_bytes_per_cycle)
 
     def token_decode_cycles(self, cfg, alloc: ChipletAllocation,
-                            context: int) -> Tuple[int, int]:
+                            context: int, *,
+                            overlap: float = 0.0) -> Tuple[int, int]:
         """(cycles, c2c_bytes) for one decode token end to end."""
-        return self.batched_token_decode_cycles(cfg, alloc, [context])
+        return self.batched_token_decode_cycles(cfg, alloc, [context],
+                                                overlap=overlap)
 
     def batched_token_decode_cycles(
             self, cfg, alloc: ChipletAllocation,
-            contexts: List[int]) -> Tuple[int, int]:
+            contexts: List[int], *, overlap: float = 0.0) -> Tuple[int, int]:
         """(cycles, c2c_bytes) for ONE engine iteration that advances a
         co-scheduled batch of requests by one token each.
 
@@ -226,25 +228,49 @@ class CycleModel:
           * C2C: per-request activation vectors cross chiplet boundaries
             together in one burst of ``b * d_model`` bytes.
 
-        ``b == 1`` reproduces :meth:`token_decode_cycles`'s single-stream
-        cost exactly (the calibrated Table II path is unchanged).
+        ``overlap`` (0..1) hides that fraction of the C2C transfer
+        cycles under the next layer's compute wave (double-buffered
+        activation forwarding); the default 0.0 serializes them — the
+        calibrated Table II interpretation.
+
+        ``b == 1`` at ``overlap == 0`` reproduces
+        :meth:`token_decode_cycles`'s single-stream cost exactly (the
+        calibrated Table II path is unchanged).
         """
+        if not 0.0 <= overlap <= 1.0:
+            raise ValueError(f"overlap must be in [0, 1], got {overlap}")
+        compute_cyc, c2c_cyc, c2c_bytes = \
+            self.batched_token_decode_cycles_split(cfg, alloc, contexts)
+        if overlap:
+            cyc = compute_cyc + (1.0 - overlap) * c2c_cyc
+        else:
+            cyc = compute_cyc + c2c_cyc   # exact int sum: legacy path
+        return int(cyc * self.alpha), c2c_bytes
+
+    def batched_token_decode_cycles_split(
+            self, cfg, alloc: ChipletAllocation,
+            contexts: List[int]) -> Tuple[int, int, int]:
+        """(compute_cycles, c2c_cycles, c2c_bytes) — the pre-``alpha``
+        decomposition of one batched decode iteration, separating the
+        layer compute wave from the chiplet-boundary C2C transfers so
+        the timeline layer can model compute/C2C overlap explicitly."""
         b = len(contexts)
         if b == 0:
-            return 0, 0
-        cyc = 0
+            return 0, 0, 0
+        compute_cyc = 0
+        c2c_cyc = 0
         c2c_bytes = 0
         d = cfg.d_model
         ctx_sum = sum(contexts)
         prev_chips: Optional[List[int]] = None
         for ld, chips in alloc.assignments:
-            cyc += self.layer_decode_cycles_batched(ld, ctx_sum, b)
+            compute_cyc += self.layer_decode_cycles_batched(ld, ctx_sum, b)
             if prev_chips is not None and chips != prev_chips:
                 payload = d * b  # 8-bit activations, one per request
-                cyc += self.c2c_transfer_cycles(payload)
+                c2c_cyc += self.c2c_transfer_cycles(payload)
                 c2c_bytes += payload
             prev_chips = chips
-        return int(cyc * self.alpha), c2c_bytes
+        return compute_cyc, c2c_cyc, c2c_bytes
 
     def prefill_cycles(self, cfg, alloc: ChipletAllocation,
                        seq: int) -> Tuple[int, int]:

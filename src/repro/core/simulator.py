@@ -14,11 +14,12 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from .ccpg import CCPGModel
+from .ccpg import CCPGModel, CLUSTER_SIZE
 from .energy import TileSpec
 from .interconnect import (ELECTRICAL, OPTICAL, LinkSpec, MeasuredTraffic,
                            TrafficTrace, c2c_average_power)
 from .scheduling import ChipletAllocation, CycleModel, allocate_chiplets
+from .timeline import ClusterWake, ComputeSpan, Timeline
 
 
 @dataclass
@@ -58,48 +59,103 @@ class PicnicSimulator:
     # ------------------------------------------------------------------
     def run(self, cfg, ctx_in: int, ctx_out: int, *,
             ccpg: bool = False,
-            measured_c2c: Optional[MeasuredTraffic] = None) -> InferenceResult:
-        """``measured_c2c`` switches the photonic-link traffic term from the
+            measured_c2c: Optional[MeasuredTraffic] = None,
+            overlap: float = 0.0,
+            dynamic_ccpg: bool = False,
+            timeline: Optional[Timeline] = None) -> InferenceResult:
+        """Emit the analytic prefill/decode walk as TimelineIR events and
+        derive the `InferenceResult` from the timeline (exact integer
+        cycle sums — the default no-overlap, static-CCPG configuration is
+        byte-identical to the calibrated Table II closed form, locked by
+        tests/test_timeline.py's golden regression).
+
+        ``measured_c2c`` switches the photonic-link traffic term from the
         cycle model's analytic layer-boundary estimate to per-collective
-        wire bytes measured on compiled HLO (collective_capture.py).  The
-        default (None) is the calibrated Table II path, byte-for-byte."""
+        wire bytes measured on compiled HLO (collective_capture.py).
+        ``overlap`` (0..1) hides that fraction of decode C2C transfer
+        cycles under the compute wave.  ``dynamic_ccpg`` charges the FULL
+        cluster wake latency per transition as `ClusterWake` events
+        instead of the pre-wake residue.  Pass a fresh ``timeline`` to
+        collect the event stream (Chrome-trace export, Fig-10 analysis).
+        """
+        tl = timeline if timeline is not None else Timeline(link=self.link)
+        n0 = len(tl.events)
+        t_start = tl.now      # cursor-relative anchors: a shared timeline
+        #                       may already hold earlier runs' events
         alloc = allocate_chiplets(cfg, self.tile)
         f = self.tile.frequency_hz
+        chip_power = self.ccpg_model.system_power(alloc.n_chiplets, ccpg=ccpg)
 
         prefill_cyc, prefill_c2c = self.cycle_model.prefill_cycles(
             cfg, alloc, ctx_in)
+        tl.compute(prefill_cyc / f, kind="prefill", power_W=chip_power,
+                   cycles=prefill_cyc, name=f"prefill[{ctx_in}]")
+        if measured_c2c is None:
+            tl.c2c(prefill_c2c, phase="prefill", t0=t_start,
+                   dur_s=prefill_c2c / self.link.bandwidth_Bps)
+        tl.token(ctx_in)      # processed-token accounting (see below)
 
-        decode_cyc = 0
-        decode_c2c = 0
         # integrate decode over the growing context (exact sum, sampled
         # every `step` tokens for speed — the cycle model is affine in ctx)
         step = max(1, ctx_out // 64)
-        sampled = range(ctx_in, ctx_in + ctx_out, step)
-        for c in sampled:
-            cyc, c2c = self.cycle_model.token_decode_cycles(cfg, alloc, c)
+        for c in range(ctx_in, ctx_in + ctx_out, step):
+            mult = min(step, ctx_in + ctx_out - c)
+            cyc, c2c = self.cycle_model.token_decode_cycles(
+                cfg, alloc, c, overlap=overlap)
+            t0 = tl.now
+            tl.compute(cyc * mult / f, kind="decode", power_W=chip_power,
+                       cycles=cyc * mult, batch=1,
+                       name=f"decode[ctx={c}]x{mult}")
+            if measured_c2c is None and c2c:
+                # bursts ride under the compute wave: anchor at span start
+                tl.c2c(c2c * mult, phase="decode", t0=t0,
+                       dur_s=c2c * mult / self.link.bandwidth_Bps)
             if ccpg:
-                cyc += self.ccpg_model.wake_overhead_cycles(alloc)
-            decode_cyc += cyc * min(step, ctx_in + ctx_out - c)
-            decode_c2c += c2c * min(step, ctx_in + ctx_out - c)
+                w = (self.ccpg_model.wake_latency_cycles(alloc)
+                     if dynamic_ccpg
+                     else self.ccpg_model.wake_overhead_cycles(alloc))
+                if w:
+                    tl.wake(w * mult / f, power_W=chip_power,
+                            cycles=w * mult)
+            tl.token(mult)
 
-        prefill_s = prefill_cyc / f
-        decode_s = decode_cyc / f
+        if measured_c2c is not None:
+            # timing stays with the cycle model; only the traffic term
+            # (bytes -> link power) is replaced by the HLO measurement
+            tl.c2c(int(measured_c2c.prefill_bytes), phase="prefill",
+                   t0=t_start, source=measured_c2c.source)
+            tl.c2c(int(measured_c2c.decode_bytes_per_token * ctx_out),
+                   phase="decode", t0=t_start + prefill_cyc / f,
+                   source=measured_c2c.source)
+        if ccpg:
+            # background sleepers: annotation concurrent with this run
+            # only (their retention power is inside chip_power already)
+            n_sleep = max(0, alloc.n_chiplets - CLUSTER_SIZE)
+            if n_sleep:
+                tl.sleep(tl.now - t_start, t0=t_start, advance=False,
+                         power_W=n_sleep * self.tile.tile_power_sleep)
+
+        # ---- derive the result FROM the timeline -----------------------
+        evs = tl.events[n0:]
+        prefill_cyc_t = sum(e.cycles for e in evs
+                            if isinstance(e, ComputeSpan)
+                            and e.kind == "prefill")
+        decode_cyc_t = (sum(e.cycles for e in evs
+                            if isinstance(e, ComputeSpan)
+                            and e.kind == "decode")
+                        + sum(e.cycles for e in evs
+                              if isinstance(e, ClusterWake)))
+        prefill_s = prefill_cyc_t / f
+        decode_s = decode_cyc_t / f
         total_s = prefill_s + decode_s
         # Table II's "throughput" counts processed tokens (input + output)
         # over wall time — the interpretation under which the paper's
         # context-length scaling is reproduced (see EXPERIMENTS.md).
         tput = (ctx_in + ctx_out) / total_s
 
-        if measured_c2c is not None:
-            # timing stays with the cycle model; only the traffic term
-            # (bytes -> link power) is replaced by the HLO measurement
-            prefill_c2c = int(measured_c2c.prefill_bytes)
-            decode_c2c = int(measured_c2c.decode_bytes_per_token * ctx_out)
-        c2c_bytes = prefill_c2c + decode_c2c
+        c2c_bytes = sum(e.nbytes for e in evs if hasattr(e, "nbytes"))
         c2c_rate = c2c_bytes / total_s
         c2c_power = c2c_average_power(c2c_rate, self.link)
-
-        chip_power = self.ccpg_model.system_power(alloc.n_chiplets, ccpg=ccpg)
         power = chip_power + c2c_power
         return InferenceResult(
             model=cfg.name, ctx_in=ctx_in, ctx_out=ctx_out,
@@ -127,40 +183,52 @@ class PicnicSimulator:
 
     def decode_iteration_seconds(self, cfg, alloc: ChipletAllocation,
                                  contexts: List[int], *,
-                                 ccpg: bool = False) -> Tuple[float, int]:
+                                 ccpg: bool = False,
+                                 overlap: float = 0.0) -> Tuple[float, int]:
         """(seconds, c2c_bytes) for one batched decode iteration advancing
         every request in ``contexts`` by one token.  CCPG wake overhead is
         charged once per iteration — co-batched requests share the active
-        cluster (cluster residency), not once per request."""
+        cluster (cluster residency), not once per request.  ``overlap``
+        hides that fraction of C2C transfer cycles under compute."""
         cyc, c2c = self.cycle_model.batched_token_decode_cycles(
-            cfg, alloc, contexts)
+            cfg, alloc, contexts, overlap=overlap)
         if ccpg:
             cyc += self.ccpg_model.wake_overhead_cycles_batched(
                 alloc, len(contexts))
         return cyc / self.tile.frequency_hz, c2c
 
+    def wake_seconds(self, alloc: ChipletAllocation) -> Tuple[float, int]:
+        """Dynamic-CCPG: (seconds, cycles) of the FULL exposed cluster-walk
+        wake latency for one iteration — what the serving engine emits as
+        a real `ClusterWake` timeline event per round instead of folding
+        the pre-wake residue into the decode cost."""
+        cyc = self.ccpg_model.wake_latency_cycles(alloc)
+        return cyc / self.tile.frequency_hz, cyc
+
     # ------------------------------------------------------------------
-    def c2c_trace(self, cfg, n_tokens: int = 32,
-                  context: int = 512) -> TrafficTrace:
-        """Burst timeline for Fig 10: C2C bursts at layer boundaries only."""
+    def c2c_trace(self, cfg, n_tokens: int = 32, context: int = 512,
+                  timeline: Optional[Timeline] = None) -> TrafficTrace:
+        """Burst timeline for Fig 10: C2C bursts at layer boundaries only.
+        Emitted through TimelineIR (per-layer ComputeSpans + serialized
+        C2CTransfers); pass ``timeline`` to keep the full event stream."""
         alloc = allocate_chiplets(cfg, self.tile)
         f = self.tile.frequency_hz
-        events = []
-        t = 0.0
-        for _ in range(n_tokens):
+        tl = timeline if timeline is not None else Timeline(link=self.link)
+        for tok in range(n_tokens):
             prev = None
             for ld, chips in alloc.assignments:
                 cyc = self.cycle_model.layer_decode_cycles(
                     ld, cfg.d_model, context, cfg.n_heads,
                     cfg.q_dim or cfg.d_model, cfg.kv_dim or cfg.d_model)
-                t += cyc * self.cycle_model.alpha / f
+                tl.compute(cyc * self.cycle_model.alpha / f, kind="decode",
+                           cycles=cyc, name=ld.name)
                 if prev is not None and chips != prev:
                     payload = cfg.d_model
                     dur = self.cycle_model.c2c_transfer_cycles(payload) / f
-                    events.append((t, dur, payload))
-                    t += dur
+                    tl.c2c(payload, dur_s=dur, phase="decode", advance=True)
                 prev = chips
-        return TrafficTrace(events)
+            tl.token(1)
+        return TrafficTrace.from_timeline(tl)
 
     # ------------------------------------------------------------------
     def calibrate(self, cfg_1b, target_tps: float = 1503.8,

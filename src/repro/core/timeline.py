@@ -1,0 +1,290 @@
+"""Unified event-timeline simulation core — TimelineIR.
+
+Every cost producer in the repo appends typed events to ONE `Timeline`:
+
+  * ``PicnicSimulator.run``            — analytic prefill/decode/C2C spans
+    (or `MeasuredTraffic`-sourced C2C transfers),
+  * ``ContinuousBatchingEngine``       — per-round prefill/decode spans,
+    idle (`ClusterSleep`) gaps, per-token `TokenEmit`s,
+  * ``CCPGModel`` (dynamic mode)       — real `ClusterWake` latency on
+    cluster transitions instead of a folded-in residue constant.
+
+Every consumer derives its numbers from the same event stream:
+`InferenceResult` (cycle/byte sums), `ServingReport` (percentiles,
+tok/s, tok/J via the span-integrated energy), and the Chrome-trace
+exporter (`chrome://tracing` / Perfetto JSON).
+
+Energy is INTEGRATED over spans — ``sum(duration * power)`` in append
+order — instead of multiplying one average power by the wall clock.
+The paper's CCPG and interconnect claims are time-resolved effects
+(cluster wake-up, bursty C2C, idle retention) that average-power models
+cannot show; see PAPERS.md on CIM power-gating surveys.
+
+Cursor semantics: *advancing* appends (`compute` / `wake` / `sleep`)
+move ``now`` and integrate energy; *concurrent* appends (`c2c` /
+`token` / `sample`, or any append with ``advance=False``) annotate the
+stream at a given instant without advancing time — C2C bursts overlap
+compute, token emits are instantaneous.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Type, Union
+
+from .interconnect import LinkSpec, OPTICAL, c2c_average_power
+
+
+# ---------------------------------------------------------------------------
+# Event taxonomy
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ComputeSpan:
+    """A busy span of the active cluster(s): one prefill, one (batched)
+    decode iteration, or one sampled chunk of the analytic decode walk."""
+    t0: float
+    dur_s: float
+    kind: str                # "prefill" | "decode"
+    power_W: float = 0.0
+    cycles: int = 0          # exact cycle count (ints sum losslessly)
+    batch: int = 1           # co-scheduled requests riding this span
+    name: str = ""
+
+
+@dataclass(frozen=True)
+class C2CTransfer:
+    """Photonic/electrical chip-to-chip burst.  Concurrent with compute
+    (the link runs under the compute wave unless `overlap` < 1 exposes
+    part of it — the exposed part is inside the owning ComputeSpan)."""
+    t0: float
+    dur_s: float
+    nbytes: int
+    phase: str = ""          # "prefill" | "decode"
+    source: str = "analytic"  # "analytic" | MeasuredTraffic.source
+
+
+@dataclass(frozen=True)
+class ClusterWake:
+    """Exposed cluster power-up latency (CCPG).  Static mode folds the
+    pre-wake residue into decode cycles; dynamic mode emits the full
+    regulator-settle walk as real timeline latency."""
+    t0: float
+    dur_s: float
+    cycles: int = 0
+    cluster: int = -1        # -1: aggregate walk over all transitions
+
+
+@dataclass(frozen=True)
+class ClusterSleep:
+    """Idle/retention span: scratchpads only (CCPG) or full active burn
+    (no gating path).  ``advance=False`` appends mark background sleepers
+    concurrent with compute (their power is already inside the span's
+    aggregate) and carry no energy of their own."""
+    t0: float
+    dur_s: float
+    power_W: float = 0.0
+
+
+@dataclass(frozen=True)
+class EnergySample:
+    """Instantaneous power sample (W) — the Fig-8-style power trace.
+    Emitted automatically at every advancing span start; contributes no
+    energy (spans carry the integral)."""
+    t0: float
+    power_W: float
+
+
+@dataclass(frozen=True)
+class TokenEmit:
+    """``n`` tokens produced at instant ``t0`` (request_id -1: aggregate
+    analytic walk, otherwise the serving engine's per-request emits)."""
+    t0: float
+    n: int = 1
+    request_id: int = -1
+
+
+Event = Union[ComputeSpan, C2CTransfer, ClusterWake, ClusterSleep,
+              EnergySample, TokenEmit]
+
+EVENT_CATEGORIES: Tuple[Type, ...] = (
+    ComputeSpan, C2CTransfer, ClusterWake, ClusterSleep, EnergySample,
+    TokenEmit)
+
+
+# ---------------------------------------------------------------------------
+# Accumulator
+# ---------------------------------------------------------------------------
+
+class Timeline:
+    """Append-only event stream with a time cursor and running integrals.
+
+    The integrals (`energy_J`, `busy_s`, `idle_s`, `occupancy_s`) are
+    accumulated in append order with one multiply-add per span, so a
+    producer that previously charged ``energy += dt * power`` inline
+    reproduces its floats bit-for-bit by appending the same spans in the
+    same order.
+    """
+
+    def __init__(self, link: LinkSpec = OPTICAL):
+        self.link = link
+        self.events: List[Event] = []
+        self.now = 0.0
+        self.energy_J = 0.0        # span-integrated chip energy
+        self.busy_s = 0.0
+        self.idle_s = 0.0
+        self.c2c_bytes = 0
+        self.tokens = 0
+        self.occupancy_s = 0.0     # integral of batch occupancy over busy
+
+    # -- advancing producers ------------------------------------------
+    def compute(self, dur_s: float, *, kind: str, power_W: float = 0.0,
+                cycles: int = 0, batch: int = 1, name: str = "") -> float:
+        self.events.append(ComputeSpan(self.now, dur_s, kind, power_W,
+                                       cycles, batch, name))
+        self.events.append(EnergySample(self.now, power_W))
+        self.busy_s += dur_s
+        self.energy_J += dur_s * power_W
+        self.occupancy_s += dur_s * batch
+        self.now += dur_s
+        return self.now
+
+    def wake(self, dur_s: float, *, power_W: float = 0.0, cycles: int = 0,
+             cluster: int = -1) -> float:
+        self.events.append(ClusterWake(self.now, dur_s, cycles, cluster))
+        self.events.append(EnergySample(self.now, power_W))
+        self.busy_s += dur_s
+        self.energy_J += dur_s * power_W
+        self.now += dur_s
+        return self.now
+
+    def sleep(self, dur_s: float, *, power_W: float = 0.0,
+              t0: Optional[float] = None, advance: bool = True) -> float:
+        ev = ClusterSleep(self.now if t0 is None else t0, dur_s, power_W)
+        self.events.append(ev)
+        if advance:
+            self.events.append(EnergySample(ev.t0, power_W))
+            self.idle_s += dur_s
+            self.energy_J += dur_s * power_W
+            self.now += dur_s
+        return self.now
+
+    # -- concurrent annotations ---------------------------------------
+    def c2c(self, nbytes: int, *, dur_s: float = 0.0, phase: str = "",
+            t0: Optional[float] = None, source: str = "analytic",
+            advance: bool = False) -> None:
+        """``advance=True`` serializes the burst (cursor moves past it) —
+        the Fig-10 layer-boundary handoff view; the default treats it as
+        concurrent with the surrounding compute (any exposed transfer
+        time is already inside the owning ComputeSpan's cycles)."""
+        self.events.append(C2CTransfer(
+            self.now if t0 is None else t0, dur_s, int(nbytes), phase,
+            source))
+        self.c2c_bytes += int(nbytes)
+        if advance:
+            self.busy_s += dur_s
+            self.now += dur_s
+
+    def token(self, n: int = 1, *, request_id: int = -1,
+              t0: Optional[float] = None) -> None:
+        self.events.append(TokenEmit(
+            self.now if t0 is None else t0, int(n), request_id))
+        self.tokens += int(n)
+
+    def sample(self, power_W: float) -> None:
+        self.events.append(EnergySample(self.now, power_W))
+
+    # -- derived queries ----------------------------------------------
+    def cycles(self, cls: Type = ComputeSpan,
+               kind: Optional[str] = None) -> int:
+        """Exact integer cycle sum over events of ``cls`` (optionally a
+        ComputeSpan ``kind``) — the lossless bridge back to the cycle
+        model's arithmetic."""
+        total = 0
+        for e in self.events:
+            if not isinstance(e, cls):
+                continue
+            if kind is not None and getattr(e, "kind", None) != kind:
+                continue
+            total += getattr(e, "cycles", 0)
+        return total
+
+    def span_seconds(self, cls: Type = ComputeSpan,
+                     kind: Optional[str] = None) -> float:
+        total = 0.0
+        for e in self.events:
+            if not isinstance(e, cls):
+                continue
+            if kind is not None and getattr(e, "kind", None) != kind:
+                continue
+            total += e.dur_s
+        return total
+
+    def count(self, cls: Type) -> int:
+        return sum(1 for e in self.events if isinstance(e, cls))
+
+    def c2c_energy_J(self, wall_s: Optional[float] = None) -> float:
+        """Link energy for the delivered bytes: average power at the
+        delivered rate (bursty traffic, duty-cycled laser bias) over the
+        wall clock."""
+        wall = max(self.now if wall_s is None else wall_s, 1e-12)
+        return c2c_average_power(self.c2c_bytes / wall, self.link) * wall
+
+    def total_energy_J(self) -> float:
+        return self.energy_J + self.c2c_energy_J()
+
+    def power_trace(self) -> List[Tuple[float, float]]:
+        """(t, W) steps from the EnergySample stream."""
+        return [(e.t0, e.power_W) for e in self.events
+                if isinstance(e, EnergySample)]
+
+    # -- Chrome trace export ------------------------------------------
+    _TIDS = {"ComputeSpan": 1, "C2CTransfer": 2, "ClusterWake": 3,
+             "ClusterSleep": 4, "TokenEmit": 5}
+
+    def to_chrome_trace(self, *, process_name: str = "picnic") -> Dict:
+        """`chrome://tracing` / Perfetto JSON: one thread lane per event
+        category, power as a counter track, tokens as instant events."""
+        evs: List[Dict] = [
+            {"ph": "M", "pid": 0, "name": "process_name",
+             "args": {"name": process_name}},
+        ]
+        for lane, tid in sorted(self._TIDS.items(), key=lambda kv: kv[1]):
+            evs.append({"ph": "M", "pid": 0, "tid": tid,
+                        "name": "thread_name", "args": {"name": lane}})
+        def span(cat, name, e, args):
+            return {"ph": "X", "pid": 0, "tid": self._TIDS[cat],
+                    "cat": cat, "name": name, "ts": e.t0 * 1e6,
+                    "dur": e.dur_s * 1e6, "args": args}
+
+        for e in self.events:
+            ts = e.t0 * 1e6                     # chrome wants microseconds
+            if isinstance(e, ComputeSpan):
+                evs.append(span("ComputeSpan", e.name or e.kind, e,
+                                {"kind": e.kind, "cycles": e.cycles,
+                                 "batch": e.batch, "power_W": e.power_W}))
+            elif isinstance(e, C2CTransfer):
+                evs.append(span("C2CTransfer", f"c2c:{e.phase or 'burst'}",
+                                e, {"bytes": e.nbytes, "phase": e.phase,
+                                    "source": e.source}))
+            elif isinstance(e, ClusterWake):
+                evs.append(span("ClusterWake", "wake", e,
+                                {"cycles": e.cycles, "cluster": e.cluster}))
+            elif isinstance(e, ClusterSleep):
+                evs.append(span("ClusterSleep", "sleep", e,
+                                {"power_W": e.power_W}))
+            elif isinstance(e, EnergySample):
+                evs.append({"ph": "C", "pid": 0, "cat": "EnergySample",
+                            "name": "power_W", "ts": ts,
+                            "args": {"power_W": e.power_W}})
+            elif isinstance(e, TokenEmit):
+                evs.append({"ph": "i", "pid": 0,
+                            "tid": self._TIDS["TokenEmit"],
+                            "cat": "TokenEmit", "name": f"tok x{e.n}",
+                            "ts": ts, "s": "t",
+                            "args": {"n": e.n, "request_id": e.request_id}})
+        return {"traceEvents": evs, "displayTimeUnit": "ms"}
+
+    def save_chrome_trace(self, path, *, process_name: str = "picnic") -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome_trace(process_name=process_name), f)

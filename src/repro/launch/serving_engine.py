@@ -21,6 +21,11 @@ model instead of constants:
     -> CCPG cluster residency: co-batched requests share the active
        cluster, wake residue charged once per iteration; idle gaps between
        arrivals drop to scratchpad-retention power
+    -> TimelineIR (core/timeline.Timeline): every round appends typed
+       events (ComputeSpan / C2CTransfer / ClusterWake / ClusterSleep /
+       TokenEmit); time, span-integrated energy, occupancy and C2C bytes
+       all come from that one integrator — `engine.timeline` exports a
+       chrome://tracing JSON of the whole run
     -> ServingReport: p50/p99 TTFT + end-to-end latency, aggregate
        tokens/s, tokens/J, queue-depth timeline, batch occupancy.
 
@@ -41,6 +46,7 @@ from repro.core.ccpg import CCPGModel
 from repro.core.interconnect import c2c_average_power
 from repro.core.scheduling import ChipletAllocation, allocate_chiplets
 from repro.core.simulator import PicnicSimulator
+from repro.core.timeline import Timeline
 from repro.launch.scheduler import EventKind, Request, deadline_at_risk
 
 
@@ -90,8 +96,9 @@ def poisson_trace(n_requests: int, rate_rps: float, *, seed: int = 0,
 
 def replay_trace(rows: Iterable) -> List[TrackedRequest]:
     """Replay recorded arrivals.  ``rows`` are ``(arrival_s, prompt_len,
-    max_new)`` tuples or dicts with those keys (plus optional
-    ``deadline_ttft``)."""
+    max_new)`` or ``(arrival_s, prompt_len, max_new, deadline_ttft)``
+    tuples, or dicts with those keys (``deadline_ttft`` optional in both
+    forms)."""
     out: List[TrackedRequest] = []
     for i, row in enumerate(rows):
         if isinstance(row, dict):
@@ -101,10 +108,12 @@ def replay_trace(rows: Iterable) -> List[TrackedRequest]:
                 max_new=int(row["max_new"]),
                 deadline_ttft=row.get("deadline_ttft")))
         else:
-            arrival, prompt_len, max_new = row
+            arrival, prompt_len, max_new, *rest = row
+            deadline = rest[0] if rest else None
             out.append(TrackedRequest(
                 arrival=float(arrival), request_id=i,
-                prompt_len=int(prompt_len), max_new=int(max_new)))
+                prompt_len=int(prompt_len), max_new=int(max_new),
+                deadline_ttft=None if deadline is None else float(deadline)))
     return out
 
 
@@ -118,6 +127,9 @@ class EngineConfig:
     queue_limit: int = 256      # admission queue bound (then reject)
     decode_quantum: int = 4     # decode rounds per allowed prefill
     ccpg: bool = False          # cluster power gating (paper §II-E)
+    dynamic_ccpg: bool = False  # full ClusterWake latency per iteration
+    #                             instead of the folded pre-wake residue
+    overlap: float = 0.0        # fraction of decode C2C hidden by compute
     max_iters: int = 2_000_000  # safety valve for the event loop
 
 
@@ -205,25 +217,28 @@ class ContinuousBatchingEngine:
             self.alloc.n_chiplets, ccpg=self.engine.ccpg)
         self._idle_power = ccpg_model.idle_power(
             self.alloc.n_chiplets, ccpg=self.engine.ccpg)
+        # static mode folds the pre-wake residue into the iteration cost;
+        # dynamic mode charges the full walk as ClusterWake events instead
+        self._residue_ccpg = self.engine.ccpg and not self.engine.dynamic_ccpg
         self.reset()
 
     # ------------------------------------------------------------------
     def reset(self) -> None:
         e = self.engine
-        self.clock = 0.0
+        # ALL time/energy accounting lives in the TimelineIR accumulator —
+        # the engine appends per-round events and never charges privately
+        self.timeline = Timeline(link=self.sim.link)
         self.queue: Deque[TrackedRequest] = deque()
         self.slots: List[Optional[TrackedRequest]] = [None] * e.max_batch
         self.decode_credit = 0
         self.rejected = 0
         self.events: List[Tuple[float, EventKind, int]] = []
         self.queue_depth: List[Tuple[float, int]] = []
-        self._busy_s = 0.0
-        self._idle_s = 0.0
-        self._chip_energy_J = 0.0
-        self._c2c_bytes = 0
-        self._tokens_generated = 0
         self._tokens_prefilled = 0
-        self._occupancy_time = 0.0   # integral of batch size over busy time
+
+    @property
+    def clock(self) -> float:
+        return self.timeline.now
 
     # ------------------------------------------------------------------
     def _free_slot(self) -> Optional[int]:
@@ -235,15 +250,15 @@ class ContinuousBatchingEngine:
     def _active(self) -> List[TrackedRequest]:
         return [s for s in self.slots if s is not None]
 
-    def _advance(self, dt: float, *, busy: bool, occupancy: int = 0) -> None:
-        self.clock += dt
-        if busy:
-            self._busy_s += dt
-            self._chip_energy_J += dt * self._busy_power
-            self._occupancy_time += dt * occupancy
-        else:
-            self._idle_s += dt
-            self._chip_energy_J += dt * self._idle_power
+    def _wake_walk(self) -> None:
+        """Dynamic CCPG: the iteration's cluster walk pays the FULL wake
+        latency as a real ClusterWake timeline event (visible in the
+        Chrome trace; raises serving p99 — see EXPERIMENTS.md)."""
+        if not (self.engine.ccpg and self.engine.dynamic_ccpg):
+            return
+        dt, cyc = self.sim.wake_seconds(self.alloc)
+        if dt:
+            self.timeline.wake(dt, power_W=self._busy_power, cycles=cyc)
 
     def _admit_arrivals(self, pending: Deque[TrackedRequest]) -> None:
         while pending and pending[0].arrival <= self.clock:
@@ -260,23 +275,33 @@ class ContinuousBatchingEngine:
         if head is None:
             return False
         dt, _ = self.sim.prefill_seconds(
-            self.cfg, self.alloc, head.prompt_len, ccpg=self.engine.ccpg)
+            self.cfg, self.alloc, head.prompt_len, ccpg=self._residue_ccpg)
+        if self.engine.ccpg and self.engine.dynamic_ccpg:
+            dt += self.sim.wake_seconds(self.alloc)[0]
         return deadline_at_risk(head, self.clock, dt)
 
     # ------------------------------------------------------------------
     def _prefill(self, slot: int) -> None:
         req = self.queue.popleft()
         dt, c2c = self.sim.prefill_seconds(
-            self.cfg, self.alloc, req.prompt_len, ccpg=self.engine.ccpg)
-        self._advance(dt, busy=True, occupancy=len(self._active()) + 1)
-        self._c2c_bytes += c2c
+            self.cfg, self.alloc, req.prompt_len, ccpg=self._residue_ccpg)
+        self._wake_walk()
+        t0 = self.timeline.now
+        self.timeline.compute(dt, kind="prefill", power_W=self._busy_power,
+                              batch=len(self._active()) + 1,
+                              name=f"prefill:r{req.request_id}")
+        if c2c:
+            # the burst rides under the compute wave: anchor at span start
+            self.timeline.c2c(c2c, phase="prefill", t0=t0,
+                              dur_s=c2c / self.sim.link.bandwidth_Bps)
         self._tokens_prefilled += req.prompt_len
         # prefill emits the request's first output token (unless this is a
         # prefill-only / scoring request with max_new == 0)
         req.first_token_at = self.clock
         req.generated = min(1, req.max_new)
         req.context = req.prompt_len + req.generated
-        self._tokens_generated += req.generated
+        if req.generated:
+            self.timeline.token(req.generated, request_id=req.request_id)
         self.events.append((self.clock, EventKind.PREFILL, req.request_id))
         if req.generated >= req.max_new:
             req.finished_at = self.clock
@@ -290,9 +315,15 @@ class ContinuousBatchingEngine:
         active = self._active()
         contexts = [r.context for r in active]
         dt, c2c = self.sim.decode_iteration_seconds(
-            self.cfg, self.alloc, contexts, ccpg=self.engine.ccpg)
-        self._advance(dt, busy=True, occupancy=len(active))
-        self._c2c_bytes += c2c
+            self.cfg, self.alloc, contexts, ccpg=self._residue_ccpg,
+            overlap=self.engine.overlap)
+        self._wake_walk()
+        t0 = self.timeline.now
+        self.timeline.compute(dt, kind="decode", power_W=self._busy_power,
+                              batch=len(active), name=f"decode:b{len(active)}")
+        if c2c:
+            self.timeline.c2c(c2c, phase="decode", t0=t0,
+                              dur_s=c2c / self.sim.link.bandwidth_Bps)
         self.decode_credit += 1
         self.events.append((self.clock, EventKind.DECODE, -1))
         for i, req in enumerate(self.slots):
@@ -300,7 +331,7 @@ class ContinuousBatchingEngine:
                 continue
             req.generated += 1
             req.context += 1
-            self._tokens_generated += 1
+            self.timeline.token(1, request_id=req.request_id)
             if req.generated >= req.max_new:
                 req.finished_at = self.clock
                 self.events.append((self.clock, EventKind.FINISH,
@@ -329,7 +360,7 @@ class ContinuousBatchingEngine:
             # sleep (scratchpad retention only); without it the chiplets
             # burn active power waiting
             gap = max(0.0, pending[0].arrival - self.clock)
-            self._advance(gap, busy=False)
+            self.timeline.sleep(gap, power_W=self._idle_power)
             self.events.append((self.clock, EventKind.IDLE, -1))
             return EventKind.IDLE
         return EventKind.IDLE
@@ -348,39 +379,43 @@ class ContinuousBatchingEngine:
 
     # ------------------------------------------------------------------
     def _report(self, requests: List[TrackedRequest]) -> ServingReport:
+        """Everything here is DERIVED from the timeline integrator: wall
+        clock, busy/idle split, span-integrated chip energy, C2C bytes,
+        token counts, batch occupancy."""
+        tl = self.timeline
         done = [r for r in requests if r.finished_at is not None]
         # NaN, not 0.0, when nothing finished: an all-rejected run must
         # not look like a zero-latency one in the benchmark rows
         nothing = np.array([np.nan])
         lat = np.array([r.latency for r in done]) if done else nothing
         ttft = np.array([r.ttft for r in done]) if done else nothing
-        wall = max(self.clock, 1e-12)
+        wall = max(tl.now, 1e-12)
         # C2C energy: average power at the delivered byte rate over the
         # whole wall clock (bursty traffic, duty-cycled laser bias)
-        c2c_power = c2c_average_power(self._c2c_bytes / wall, self.sim.link)
-        energy = self._chip_energy_J + c2c_power * wall
+        c2c_power = c2c_average_power(tl.c2c_bytes / wall, self.sim.link)
+        energy = tl.energy_J + c2c_power * wall
         return ServingReport(
             n_requests=len(requests),
             finished=len(done),
             rejected=self.rejected,
             wall_s=wall,
-            busy_s=self._busy_s,
-            idle_s=self._idle_s,
-            tokens_generated=self._tokens_generated,
+            busy_s=tl.busy_s,
+            idle_s=tl.idle_s,
+            tokens_generated=tl.tokens,
             tokens_prefilled=self._tokens_prefilled,
-            tokens_per_s=self._tokens_generated / wall,
+            tokens_per_s=tl.tokens / wall,
             energy_J=energy,
-            tokens_per_J=self._tokens_generated / max(energy, 1e-12),
+            tokens_per_J=tl.tokens / max(energy, 1e-12),
             p50_latency_s=float(np.percentile(lat, 50)),
             p99_latency_s=float(np.percentile(lat, 99)),
             p50_ttft_s=float(np.percentile(ttft, 50)),
             p99_ttft_s=float(np.percentile(ttft, 99)),
-            mean_batch_occupancy=(self._occupancy_time
-                                  / max(self._busy_s, 1e-12)),
+            mean_batch_occupancy=(tl.occupancy_s
+                                  / max(tl.busy_s, 1e-12)),
             max_queue_depth=max((d for _, d in self.queue_depth),
                                 default=0),
             queue_depth=self.queue_depth,
-            c2c_bytes_total=self._c2c_bytes,
+            c2c_bytes_total=tl.c2c_bytes,
             ccpg=self.engine.ccpg,
         )
 

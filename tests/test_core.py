@@ -220,6 +220,67 @@ def test_ccpg_sleep_keeps_scratchpads():
     assert t.tile_power_sleep < 0.2 * t.tile_power_active
 
 
+def test_ccpg_small_system_edge_cases():
+    """n_chiplets < CLUSTER_SIZE: everything fits one cluster, so gating
+    has nothing to put to sleep — zero saving, identical power."""
+    m = CCPGModel()
+    for n in (1, CLUSTER_SIZE - 1, CLUSTER_SIZE):
+        assert m.system_power(n, ccpg=True) \
+            == pytest.approx(m.system_power(n, ccpg=False))
+        assert m.power_saving_frac(n) == pytest.approx(0.0)
+    # strictly positive saving only once a second cluster exists
+    assert m.power_saving_frac(CLUSTER_SIZE + 1) > 0.0
+
+
+def test_ccpg_zero_chiplets_is_welldefined():
+    """n_chiplets == 0 must not divide by zero (empty allocation)."""
+    m = CCPGModel()
+    assert m.system_power(0, ccpg=False) == 0.0
+    assert m.system_power(0, ccpg=True) == 0.0
+    assert m.power_saving_frac(0) == 0.0
+
+
+def test_ccpg_dram_hub_flag():
+    """`dram_hub_watts` is only charged when explicitly opted in — the
+    default matches Table II (which excludes the DRAM hub) and the old
+    hardcoded-zero behavior."""
+    off = CCPGModel()
+    on = CCPGModel(include_dram_hub=True)
+    for n in (0, 2, 16):
+        for ccpg in (False, True):
+            assert on.system_power(n, ccpg=ccpg) == pytest.approx(
+                off.system_power(n, ccpg=ccpg) + on.dram_hub_watts)
+
+
+def test_ccpg_dram_hub_not_gated_when_idle():
+    """The DRAM hub has no gating path: with include_dram_hub on, idle
+    power must keep charging it in BOTH ccpg branches."""
+    on = CCPGModel(include_dram_hub=True)
+    off = CCPGModel()
+    for n in (4, 16):
+        assert on.idle_power(n, ccpg=True) == pytest.approx(
+            off.idle_power(n, ccpg=True) + on.dram_hub_watts)
+        assert on.idle_power(n, ccpg=False) == pytest.approx(
+            off.idle_power(n, ccpg=False) + on.dram_hub_watts)
+
+
+def test_ccpg_dynamic_wake_latency():
+    """Dynamic mode exposes the FULL wake_cycles per cluster transition;
+    the static path only keeps the pre-wake residue (dead at default
+    wake_cycles=1000 < the 2000-cycle pre-wake window)."""
+    m = CCPGModel()
+    alloc = allocate_chiplets(get_config("llama3.2-1b"), TileSpec())
+    n_tr = alloc.n_clusters - 1
+    assert m.wake_latency_cycles(alloc) == n_tr * (m.wake_cycles + 16)
+    assert m.wake_latency_cycles(alloc) > m.wake_overhead_cycles(alloc)
+    # single-cluster system: no transitions, no wake latency
+    single = allocate_chiplets(get_config("llama3.2-1b"), TileSpec())
+    single.n_chiplets = CLUSTER_SIZE
+    assert single.n_clusters == 1
+    assert m.wake_latency_cycles(single) == 0
+    assert m.wake_overhead_cycles(single) == 0
+
+
 # ---------------------------------------------------------------------------
 # Code generation (mapping -> ISA stream -> NPM)
 # ---------------------------------------------------------------------------

@@ -168,6 +168,40 @@ def test_batch8_beats_one_at_a_time(cfg):
     assert bat.p99_latency_s < seq.p99_latency_s
 
 
+def test_replay_trace_tuple_and_dict_deadlines():
+    """Tuple rows accept an optional 4th `deadline_ttft` element — both
+    row forms must carry deadlines identically (tuple rows used to drop
+    them silently)."""
+    tuples = replay_trace([(0.0, 64, 8),
+                           (0.1, 32, 4, 0.05),
+                           (0.2, 16, 2, None)])
+    dicts = replay_trace([
+        {"arrival_s": 0.0, "prompt_len": 64, "max_new": 8},
+        {"arrival_s": 0.1, "prompt_len": 32, "max_new": 4,
+         "deadline_ttft": 0.05},
+        {"arrival_s": 0.2, "prompt_len": 16, "max_new": 2,
+         "deadline_ttft": None}])
+    for t, d in zip(tuples, dicts):
+        assert (t.arrival, t.prompt_len, t.max_new, t.deadline_ttft) \
+            == (d.arrival, d.prompt_len, d.max_new, d.deadline_ttft)
+    assert tuples[0].deadline_ttft is None
+    assert tuples[1].deadline_ttft == pytest.approx(0.05)
+    assert tuples[2].deadline_ttft is None
+
+
+def test_ttft_deadline_forces_early_prefill_tuple_form(cfg):
+    """The deadline override fires identically from a 4-tuple row."""
+    trace = replay_trace([(0.0, 256, 512), (0.01, 64, 4, 0.02)])
+    eng = ContinuousBatchingEngine(
+        cfg, engine=EngineConfig(max_batch=4, decode_quantum=10 ** 6))
+    eng.run(trace)
+    sim = PicnicSimulator()
+    alloc = allocate_chiplets(cfg, sim.tile)
+    round_s, _ = sim.decode_iteration_seconds(cfg, alloc, [512])
+    assert trace[1].ttft is not None
+    assert trace[1].ttft <= 0.02 + 2 * round_s
+
+
 def test_ttft_deadline_forces_early_prefill(cfg):
     """A tight TTFT deadline overrides the decode quantum (same policy as
     launch/scheduler.py, priced by the cycle model)."""

@@ -1,0 +1,242 @@
+"""TimelineIR: golden byte-identity regression (default config pre/post
+refactor), opt-in overlap & dynamic-CCPG deltas, Chrome-trace export."""
+import dataclasses
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (EVENT_CATEGORIES, C2CTransfer, ClusterSleep,
+                        ClusterWake, ComputeSpan, EnergySample,
+                        PicnicSimulator, Timeline, TokenEmit, TrafficTrace)
+from repro.launch.serving_engine import (ContinuousBatchingEngine,
+                                         EngineConfig, poisson_trace,
+                                         replay_trace, serve_trace)
+
+GOLDEN = json.loads(
+    (Path(__file__).parent / "golden" / "timeline_golden.json").read_text())
+
+
+def _hexdict(obj) -> dict:
+    d = dataclasses.asdict(obj)
+    d.pop("queue_depth", None)
+    return {k: (v.hex() if isinstance(v, float) else v) for k, v in d.items()}
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama3.2-1b")
+
+
+# ---------------------------------------------------------------------------
+# Golden regression: the default (no-overlap, static-CCPG) configuration is
+# BYTE-IDENTICAL to the pre-refactor closed-form paths.  The golden file was
+# captured from the seed code before core/timeline.py existed.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("key", sorted(GOLDEN["table_ii"]))
+def test_simulator_golden_byte_identical(key):
+    arch, ctx, cc = key.split("/")
+    sim = PicnicSimulator()
+    r = sim.run(get_config(arch), int(ctx), int(ctx),
+                ccpg=(cc == "ccpg=True"))
+    assert _hexdict(r) == GOLDEN["table_ii"][key]
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN["serving"]))
+def test_serving_golden_byte_identical(key, cfg):
+    trace = poisson_trace(24, rate_rps=40, seed=0, prompt_len=256,
+                          max_new=32)
+    rep = serve_trace(cfg, trace, max_batch=4, ccpg=(key == "ccpg=True"))
+    assert _hexdict(rep) == GOLDEN["serving"][key]
+
+
+# ---------------------------------------------------------------------------
+# Timeline accumulator semantics
+# ---------------------------------------------------------------------------
+
+def test_advancing_vs_concurrent_appends():
+    tl = Timeline()
+    tl.compute(1.0, kind="prefill", power_W=2.0, batch=3)
+    assert tl.now == 1.0 and tl.busy_s == 1.0 and tl.energy_J == 2.0
+    assert tl.occupancy_s == 3.0
+    tl.c2c(4096, phase="decode")            # concurrent: no time passes
+    tl.token(5, request_id=7)
+    assert tl.now == 1.0 and tl.c2c_bytes == 4096 and tl.tokens == 5
+    tl.sleep(2.0, power_W=0.5)
+    assert tl.now == 3.0 and tl.idle_s == 2.0
+    assert tl.energy_J == pytest.approx(2.0 + 1.0)
+    tl.wake(0.25, power_W=4.0, cycles=100)
+    assert tl.now == 3.25 and tl.energy_J == pytest.approx(3.0 + 1.0)
+    assert tl.busy_s == 1.25
+
+
+def test_energy_is_span_integrated_not_average_power():
+    """Two spans at different powers: the integral differs from
+    avg(power) * wall whenever durations are unequal — the whole point
+    of the IR."""
+    tl = Timeline()
+    tl.compute(3.0, kind="decode", power_W=10.0)
+    tl.sleep(1.0, power_W=2.0)
+    assert tl.energy_J == pytest.approx(32.0)
+    naive = (10.0 + 2.0) / 2 * tl.now
+    assert tl.energy_J != pytest.approx(naive)
+
+
+def test_cycles_sum_is_exact_ints():
+    tl = Timeline()
+    tl.compute(0.1, kind="decode", cycles=3)
+    tl.compute(0.1, kind="decode", cycles=5)
+    tl.compute(0.1, kind="prefill", cycles=11)
+    tl.wake(0.1, cycles=7)
+    assert tl.cycles(ComputeSpan, kind="decode") == 8
+    assert tl.cycles(ComputeSpan, kind="prefill") == 11
+    assert tl.cycles(ClusterWake) == 7
+    assert tl.cycles(ComputeSpan) == 19
+
+
+def test_sleep_annotation_does_not_advance_or_charge():
+    tl = Timeline()
+    tl.compute(1.0, kind="decode", power_W=1.0)
+    e0 = tl.energy_J
+    tl.sleep(1.0, t0=0.0, advance=False, power_W=99.0)
+    assert tl.now == 1.0 and tl.energy_J == e0 and tl.idle_s == 0.0
+    assert tl.count(ClusterSleep) == 1
+
+
+def test_traffic_trace_from_timeline(cfg):
+    sim = PicnicSimulator()
+    tl = Timeline()
+    trace = sim.c2c_trace(cfg, n_tokens=2, context=128, timeline=tl)
+    assert isinstance(trace, TrafficTrace)
+    assert len(trace.events) == tl.count(C2CTransfer) > 0
+    assert trace.events == TrafficTrace.from_timeline(tl).events
+    assert tl.count(TokenEmit) == 2
+
+
+# ---------------------------------------------------------------------------
+# Opt-in knobs measurably change time-resolved behavior
+# ---------------------------------------------------------------------------
+
+def test_overlap_hides_c2c_and_speeds_decode(cfg):
+    sim = PicnicSimulator()
+    base = sim.run(cfg, 512, 512)
+    ov = sim.run(cfg, 512, 512, overlap=1.0)
+    half = sim.run(cfg, 512, 512, overlap=0.5)
+    assert ov.decode_s < half.decode_s < base.decode_s
+    assert ov.throughput_tps > base.throughput_tps
+    assert ov.prefill_s == base.prefill_s          # prefill untouched
+    assert ov.c2c_bytes_total == base.c2c_bytes_total  # traffic unchanged
+
+
+def test_overlap_out_of_range_rejected(cfg):
+    sim = PicnicSimulator()
+    for bad in (-0.5, 1.5, 50):
+        with pytest.raises(ValueError):
+            sim.run(cfg, 512, 64, overlap=bad)
+        with pytest.raises(ValueError):
+            serve_trace(cfg, replay_trace([(0.0, 16, 2)]), max_batch=1,
+                        overlap=bad)
+
+
+def test_shared_timeline_anchors_runs_sequentially(cfg):
+    """Two runs appended to ONE timeline must not stamp the second run's
+    bursts/sleep annotations inside the first run's window."""
+    sim = PicnicSimulator()
+    tl = Timeline()
+    sim.run(cfg, 256, 32, ccpg=True, timeline=tl)
+    t_mid = tl.now
+    n_mid = len(tl.events)
+    sim.run(cfg, 256, 32, ccpg=True, timeline=tl)
+    assert tl.now > t_mid
+    for e in tl.events[n_mid:]:
+        assert e.t0 >= t_mid                 # second run starts after first
+    sleeps = [e for e in tl.events if isinstance(e, ClusterSleep)]
+    assert len(sleeps) == 2
+    assert sleeps[1].t0 == pytest.approx(t_mid)
+    assert sleeps[1].dur_s == pytest.approx(tl.now - t_mid)
+
+
+def test_overlap_zero_is_identity(cfg):
+    sim = PicnicSimulator()
+    assert dataclasses.asdict(sim.run(cfg, 512, 128, overlap=0.0)) \
+        == dataclasses.asdict(sim.run(cfg, 512, 128))
+
+
+def test_dynamic_ccpg_slows_decode_vs_static(cfg):
+    """Dynamic mode exposes the full regulator-settle walk (wake_cycles
+    stops being dead state), so decode is measurably slower than the
+    pre-wake-residue static model."""
+    sim = PicnicSimulator()
+    static = sim.run(cfg, 512, 128, ccpg=True)
+    dyn = sim.run(cfg, 512, 128, ccpg=True, dynamic_ccpg=True)
+    assert dyn.decode_s > static.decode_s
+    assert dyn.throughput_tps < static.throughput_tps
+    assert dyn.prefill_s == static.prefill_s
+
+
+def test_dynamic_ccpg_raises_serving_p99(cfg):
+    kw = dict(rate_rps=40, seed=0, prompt_len=256, max_new=32)
+    r_s = serve_trace(cfg, poisson_trace(24, **kw), max_batch=4, ccpg=True)
+    r_d = serve_trace(cfg, poisson_trace(24, **kw), max_batch=4, ccpg=True,
+                      dynamic_ccpg=True)
+    assert r_d.p99_latency_s > r_s.p99_latency_s
+    assert r_d.p99_ttft_s >= r_s.p99_ttft_s
+    assert r_d.tokens_per_s < r_s.tokens_per_s
+
+
+def test_engine_overlap_speeds_serving(cfg):
+    kw = dict(rate_rps=40, seed=0, prompt_len=256, max_new=32)
+    r0 = serve_trace(cfg, poisson_trace(24, **kw), max_batch=4)
+    r1 = serve_trace(cfg, poisson_trace(24, **kw), max_batch=4, overlap=1.0)
+    assert r1.tokens_per_s > r0.tokens_per_s
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export
+# ---------------------------------------------------------------------------
+
+def _categories(trace_json):
+    return {e.get("cat") for e in trace_json["traceEvents"] if "cat" in e}
+
+
+def test_chrome_trace_roundtrips_with_all_categories(cfg, tmp_path):
+    sim = PicnicSimulator()
+    tl = Timeline()
+    sim.run(cfg, 512, 64, ccpg=True, dynamic_ccpg=True, timeline=tl)
+    path = tmp_path / "trace.json"
+    tl.save_chrome_trace(path)
+    d = json.loads(path.read_text())         # valid JSON round-trip
+    assert {c.__name__ for c in EVENT_CATEGORIES} <= _categories(d)
+    for e in d["traceEvents"]:
+        if e["ph"] == "X":
+            assert e["ts"] >= 0 and e["dur"] >= 0
+
+
+def test_engine_timeline_exports_chrome_trace(cfg):
+    eng = ContinuousBatchingEngine(
+        cfg, engine=EngineConfig(max_batch=2, ccpg=True, dynamic_ccpg=True))
+    eng.run(replay_trace([(0.0, 32, 4), (0.5, 32, 4)]))
+    d = json.loads(json.dumps(eng.timeline.to_chrome_trace()))
+    assert {c.__name__ for c in EVENT_CATEGORIES} <= _categories(d)
+    # wall clock in the trace matches the report clock
+    spans = [e for e in d["traceEvents"] if e["ph"] == "X"]
+    assert max(e["ts"] + e["dur"] for e in spans) \
+        == pytest.approx(eng.timeline.now * 1e6)
+
+
+def test_engine_report_derives_from_timeline(cfg):
+    """ServingReport and the timeline agree: one integrator."""
+    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(max_batch=4))
+    rep = eng.run(poisson_trace(12, rate_rps=50, seed=3, prompt_len=64,
+                                max_new=8))
+    tl = eng.timeline
+    assert rep.wall_s == max(tl.now, 1e-12)
+    assert rep.busy_s == tl.busy_s and rep.idle_s == tl.idle_s
+    assert rep.tokens_generated == tl.tokens
+    assert rep.c2c_bytes_total == tl.c2c_bytes
+    assert rep.energy_J == pytest.approx(tl.energy_J
+                                         + tl.c2c_energy_J(rep.wall_s))
+    # spans cover the wall clock exactly: busy + idle == now
+    assert tl.busy_s + tl.idle_s == pytest.approx(tl.now)
