@@ -1,0 +1,115 @@
+"""Bench-regression gate: fail CI when a headline metric regresses >10%
+vs the committed baseline.
+
+Compares ``artifacts/bench/BENCH_*.json`` (produced by ``benchmarks/run.py``
+in the same CI run) against ``artifacts/bench/baseline/BENCH_*.json``
+(committed to the repo).  Only *headline* metrics are gated — throughput
+(tok/s) and efficiency (tok/J) families, where higher is better; latency
+percentiles, byte counts and error percentages are informational.  The
+simulator is deterministic, so a >10% drop is a real modeling/scheduling
+regression, not machine noise.
+
+  python benchmarks/check_regression.py             # gate (exit 1 on fail)
+  python benchmarks/check_regression.py --refresh   # accept current as baseline
+  python benchmarks/check_regression.py --tolerance 0.05
+
+A new bench with no committed baseline is reported but does not fail the
+gate (commit its baseline with --refresh); a *missing* current file for a
+baselined bench DOES fail — the bench silently disappearing is exactly
+the kind of regression the gate exists to catch.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+BENCH_DIR = ROOT / "artifacts" / "bench"
+BASELINE_DIR = BENCH_DIR / "baseline"
+
+# higher-is-better headline families (substring match on the metric key)
+HEADLINE = ("tokens_per_s", "tokens_per_J", "throughput_tok_s",
+            "efficiency_tok_J", "speedup", "eff_impr",
+            "paged_vs_infinite_tput")
+
+
+def _flatten(prefix: str, obj, out: dict) -> None:
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _flatten(f"{prefix}.{k}" if prefix else str(k), v, out)
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix] = float(obj)
+
+
+def headline_metrics(doc: dict) -> dict:
+    flat: dict = {}
+    _flatten("", doc.get("metrics", {}), flat)
+    return {k: v for k, v in flat.items()
+            if any(h in k for h in HEADLINE)}
+
+
+def compare(tolerance: float) -> int:
+    if not BASELINE_DIR.is_dir():
+        print(f"no baseline dir at {BASELINE_DIR}; nothing to gate")
+        return 0
+    failures, checked, new = [], 0, []
+    for base_path in sorted(BASELINE_DIR.glob("BENCH_*.json")):
+        cur_path = BENCH_DIR / base_path.name
+        if not cur_path.exists():
+            failures.append(f"{base_path.name}: current run produced no "
+                            f"artifact (bench removed or failed?)")
+            continue
+        base = headline_metrics(json.loads(base_path.read_text()))
+        cur = headline_metrics(json.loads(cur_path.read_text()))
+        for key, b in sorted(base.items()):
+            if key not in cur:
+                failures.append(f"{base_path.name}:{key}: metric vanished")
+                continue
+            checked += 1
+            c = cur[key]
+            if b > 0 and c < (1.0 - tolerance) * b:
+                failures.append(
+                    f"{base_path.name}:{key}: {c:.4g} < "
+                    f"{(1 - tolerance) * b:.4g} "
+                    f"(baseline {b:.4g}, -{100 * (1 - c / b):.1f}%)")
+    for cur_path in sorted(BENCH_DIR.glob("BENCH_*.json")):
+        if not (BASELINE_DIR / cur_path.name).exists():
+            new.append(cur_path.name)
+    if new:
+        print(f"unbaselined benches (run --refresh to adopt): {new}")
+    if failures:
+        print(f"BENCH REGRESSION: {len(failures)} headline metric(s) "
+              f"regressed more than {100 * tolerance:.0f}%:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"bench gate ok: {checked} headline metrics within "
+          f"{100 * tolerance:.0f}% of baseline")
+    return 0
+
+
+def refresh() -> int:
+    BASELINE_DIR.mkdir(parents=True, exist_ok=True)
+    n = 0
+    for cur_path in sorted(BENCH_DIR.glob("BENCH_*.json")):
+        shutil.copy2(cur_path, BASELINE_DIR / cur_path.name)
+        n += 1
+    print(f"baseline refreshed: {n} BENCH_*.json copied to {BASELINE_DIR}")
+    return 0 if n else 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--refresh", action="store_true",
+                    help="adopt the current BENCH_*.json as the baseline")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional regression (default 0.10)")
+    args = ap.parse_args()
+    return refresh() if args.refresh else compare(args.tolerance)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -230,6 +230,68 @@ def bench_serving():
     return rows
 
 
+def bench_paged():
+    """Paged KV-cache serving (ISSUE 4 tentpole): context length x
+    arrival rate sweep over the FINITE scratchpad budget (blocks sized
+    from the mapped model, DRAM-hub spill tier behind the photonic link,
+    chunked prefill) vs the infinite-capacity engine that silently
+    mispriced long contexts.  Headline: how much of the infinite-cache
+    throughput the paged engine keeps at the longest context."""
+    from repro.configs import get_config
+    from repro.core import PicnicSimulator
+    from repro.launch.serving_engine import (ContinuousBatchingEngine,
+                                             EngineConfig, poisson_trace)
+    from repro.runtime.kv_cache import kv_cache_from_model
+    t0 = time.time()
+    arch = "llama3.2-1b"
+    cfg = get_config(arch)
+    kvc = kv_cache_from_model(cfg, kv_frac=0.5, dram_frac=1.0)
+    rows = []
+    tput = {}
+    for ctx in (512, 2048, 8192):
+        for rate in (20, 60):
+            for paged in (False, True):
+                sim = PicnicSimulator()
+                if paged:
+                    sim.ccpg_model.include_dram_hub = True
+                eng = ContinuousBatchingEngine(cfg, sim=sim, engine=EngineConfig(
+                    max_batch=8, ccpg=True,
+                    kv_cache=kvc if paged else None,
+                    chunked_prefill_tokens=512 if paged else 0))
+                # max_new keeps residents decoding long enough to build
+                # co-residency — the regime where capacity binds (short
+                # decodes are prefill-serial and never stress the cache)
+                trace = poisson_trace(16, rate_rps=rate, seed=0,
+                                      prompt_len=ctx, max_new=256)
+                rep = eng.run(trace)
+                st = eng.kv_stats
+                tput[(ctx, rate, paged)] = rep.tokens_per_s
+                rows.append({
+                    "ctx": ctx, "rate_rps": rate, "paged": paged,
+                    **rep.row(),
+                    **({"kv": st.row()} if st is not None else {}),
+                })
+    keep = tput[(8192, 60, True)] / tput[(8192, 60, False)]
+    _save("paged", rows)
+    _bench_artifact("paged", {
+        "paged_vs_infinite_tput_at_8k": round(keep, 3),
+        "kv_blocks": kvc.n_blocks,
+        "tokens_per_s": {f"ctx{r['ctx']}_r{r['rate_rps']}_p{int(r['paged'])}":
+                         r["tokens_per_s"] for r in rows},
+        "tokens_per_J": {f"ctx{r['ctx']}_r{r['rate_rps']}_p{int(r['paged'])}":
+                         r["tokens_per_J"] for r in rows},
+        "p99_latency_s": {f"ctx{r['ctx']}_r{r['rate_rps']}_p{int(r['paged'])}":
+                          r["p99_latency_s"] for r in rows},
+        "preemptions": {f"ctx{r['ctx']}_r{r['rate_rps']}":
+                        r["kv"]["preemptions"] for r in rows if r["paged"]},
+        "spilled_MB": {f"ctx{r['ctx']}_r{r['rate_rps']}":
+                       round(r["kv"]["spilled_bytes"] / 1e6, 2)
+                       for r in rows if r["paged"]},
+    }, rows=rows)
+    _emit("paged", t0, f"paged_vs_infinite_tput_at_8k={keep:.3f}")
+    return rows
+
+
 def bench_distributed():
     """Measured HLO collectives -> photonic cost model (ISSUE 2 tentpole).
 
@@ -347,6 +409,19 @@ def bench_kernels():
     results.append(("cim_matmul", rel))
 
     t0 = time.time()
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 4, 64)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(16, 16, 2, 64)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(16, 16, 2, 64)), jnp.float32)
+    tables = jnp.asarray([[0, 2, 4, 0], [1, 3, 0, 0]], jnp.int32)
+    ctxs = jnp.asarray([50, 20], jnp.int32)
+    o = ops.paged_attention(q, kc, vc, tables, ctxs)
+    r = ref.ref_paged_attention(q, kc, vc, tables, ctxs)
+    err = float(jnp.max(jnp.abs(o - r)))
+    _emit("kernel_paged_attention", t0, f"max_err={err:.2e}")
+    results.append(("paged_attention", err))
+
+    t0 = time.time()
     xs = jax.random.normal(key, (1, 128, 2, 32))
     dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(5), (1, 128, 2)))
     an = -jnp.exp(jax.random.normal(jax.random.PRNGKey(6), (2,)) * 0.2)
@@ -422,6 +497,7 @@ BENCHES = {
     "fig9_c2c": bench_fig9_c2c,
     "fig10_timeline": bench_fig10_timeline,
     "serving": bench_serving,
+    "paged": bench_paged,
     "distributed": bench_distributed,
     "roofline": bench_roofline,
     "kernels": bench_kernels,

@@ -276,7 +276,26 @@ class CycleModel:
                        seq: int) -> Tuple[int, int]:
         """Prefill S tokens: weight-stationary streaming, tokens pipelined
         through the layer chain (chiplet pipeline): time ~ per-layer stream
-        of S tokens + pipeline fill."""
+        of S tokens + pipeline fill.  One whole-prompt chunk of the
+        chunked form below (``ctx_before == 0`` keeps the float arithmetic
+        bit-identical to the pre-chunking closed form — locked by the
+        timeline golden)."""
+        return self.prefill_chunk_cycles(cfg, alloc, seq, 0)
+
+    def prefill_chunk_cycles(self, cfg, alloc: ChipletAllocation,
+                             chunk: int, ctx_before: int) -> Tuple[int, int]:
+        """(cycles, c2c_bytes) to prefill ``chunk`` prompt tokens on top of
+        ``ctx_before`` already-cached context tokens — the unit of chunked
+        prefill (vLLM-style), so one long prompt is spread over several
+        engine iterations instead of monopolizing one.
+
+        Same decomposition as the whole-prompt form: the streamed SMAC
+        wave and pipeline fill depend only on the chunk, while the
+        FlashAttention term now has a ``chunk x ctx_before`` rectangle
+        (new queries attending to cached context) on top of the causal
+        triangle within the chunk.  Each chunk re-pays the pipeline fill;
+        summing chunks therefore costs slightly MORE than one monolithic
+        prefill — the price of interleaving."""
         d = cfg.d_model
         stages = len(alloc.assignments)
         # Prefill is token-PIPELINED through the chiplet chain (weight
@@ -284,14 +303,15 @@ class CycleModel:
         # the pipeline depth.  This is why Table II throughput is decode-
         # dominated (prefill ~3% of wall time at 512/512).
         total_smac = sum(self.smac_cycles(ld) for ld, _ in alloc.assignments)
-        stream_cyc = seq * total_smac / max(alloc.n_chiplets, 1)
+        stream_cyc = chunk * total_smac / max(alloc.n_chiplets, 1)
         # attention quadratic term: with many tokens in flight the flash
         # inner loop partially unrolls across ALL router DMAC lanes
         n_attn = sum(1 for ld, _ in alloc.assignments if ld.kind == "attn")
         lanes = self.mesh.dmac_lanes * 1024 * 0.5
-        attn_macs = 2.0 * (cfg.q_dim or d) * seq * (seq + 1) / 2
+        attn_macs = (2.0 * (cfg.q_dim or d) * chunk * (chunk + 1) / 2
+                     + 2.0 * (cfg.q_dim or d) * chunk * ctx_before)
         attn_cyc = n_attn * attn_macs / lanes
         fill = stages * self.c2c_latency
         cyc = stream_cyc + attn_cyc + fill
-        c2c_bytes = seq * d * max(0, alloc.n_chiplets - 1)
+        c2c_bytes = chunk * d * max(0, alloc.n_chiplets - 1)
         return int(cyc * self.alpha), c2c_bytes

@@ -181,6 +181,25 @@ class PicnicSimulator:
             cyc += self.ccpg_model.wake_overhead_cycles(alloc)
         return cyc / self.tile.frequency_hz, c2c
 
+    def prefill_chunk_seconds(self, cfg, alloc: ChipletAllocation,
+                              chunk_len: int, ctx_before: int, *,
+                              ccpg: bool = False) -> Tuple[float, int]:
+        """(seconds, c2c_bytes) to prefill ``chunk_len`` prompt tokens on
+        top of ``ctx_before`` cached tokens — chunked prefill, so a long
+        prompt is spread across engine iterations.  Each chunk walks the
+        full layer chain, so with CCPG each pays a cluster-walk residue.
+        """
+        cyc, c2c = self.cycle_model.prefill_chunk_cycles(
+            cfg, alloc, chunk_len, ctx_before)
+        if ccpg:
+            cyc += self.ccpg_model.wake_overhead_cycles(alloc)
+        return cyc / self.tile.frequency_hz, c2c
+
+    def kv_transfer_seconds(self, nbytes: int) -> float:
+        """Serialization time of ``nbytes`` of KV moved over the photonic
+        C2C link (scratchpad <-> DRAM-hub spill/fetch traffic)."""
+        return nbytes / self.link.bandwidth_Bps
+
     def decode_iteration_seconds(self, cfg, alloc: ChipletAllocation,
                                  contexts: List[int], *,
                                  ccpg: bool = False,

@@ -172,16 +172,22 @@ class Timeline:
     # -- concurrent annotations ---------------------------------------
     def c2c(self, nbytes: int, *, dur_s: float = 0.0, phase: str = "",
             t0: Optional[float] = None, source: str = "analytic",
-            advance: bool = False) -> None:
+            advance: bool = False, power_W: float = 0.0) -> None:
         """``advance=True`` serializes the burst (cursor moves past it) —
         the Fig-10 layer-boundary handoff view; the default treats it as
         concurrent with the surrounding compute (any exposed transfer
-        time is already inside the owning ComputeSpan's cycles)."""
+        time is already inside the owning ComputeSpan's cycles).
+        ``power_W`` charges chip power over an *advancing* burst (the
+        chiplets do not stop burning while stalled on a remote KV read);
+        concurrent bursts carry no energy of their own."""
         self.events.append(C2CTransfer(
             self.now if t0 is None else t0, dur_s, int(nbytes), phase,
             source))
         self.c2c_bytes += int(nbytes)
         if advance:
+            if power_W:
+                self.events.append(EnergySample(self.now, power_W))
+                self.energy_J += dur_s * power_W
             self.busy_s += dur_s
             self.now += dur_s
 

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import cim_matmul as _cim
 from . import flash_attention as _fa
+from . import paged_attention as _pa
 from . import pwl_softmax as _ps
 from . import ssd_scan as _ssd
 
@@ -57,6 +58,13 @@ def flash_attention(q, k, v, *, causal=True, use_pwl=False, **kw):
                               block_q=bq, block_k=bk,
                               interpret=_interp(), **kw)
     return out[:, :Sq]
+
+
+def paged_attention(q, k_cache, v_cache, block_tables, context_lens, **kw):
+    """Decode attention through a KV block table (runtime/kv_cache.py
+    paging layout).  q: (B, H, D); k/v_cache: (N, block_tokens, H_kv, D)."""
+    return _pa.paged_attention(q, k_cache, v_cache, block_tables,
+                               context_lens, interpret=_interp(), **kw)
 
 
 def cim_matmul(x, w, *, weight_bits=8, **kw):

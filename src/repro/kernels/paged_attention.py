@@ -1,0 +1,122 @@
+"""Paged decode-attention Pallas kernel: K/V gathered through a block table.
+
+The serving engine (launch/serving_engine.py) stores KV in fixed-size
+blocks of ``block_tokens`` tokens allocated by runtime/kv_cache.py; the
+physical blocks of one sequence are scattered across the pool (scratchpad
+striping + DRAM-hub spill), so decode attention must *gather* K/V through
+the sequence's block table instead of slicing a contiguous cache.  This
+is the vLLM PagedAttention access pattern mapped onto the repo's Pallas
+idiom (flash_attention.py): one query token per sequence, online softmax
+carried across KV blocks.
+
+Layouts:
+  q            (B, H, D)            one decode token per sequence
+  k/v_cache    (N_blocks, block_tokens, H_kv, D)   the physical pool
+  block_tables (B, max_blocks) int32  physical block id per logical block
+                                      (entries past the context are unread)
+  context_lens (B,) int32            tokens of valid context per sequence
+
+The grid walks (B, H); the index maps slice the (GQA-shared) KV head and
+the kernel body walks ``ceil(context/block_tokens)`` physical blocks with
+``pl.dslice`` dynamic loads — block-table entries are read inside the
+kernel, so the same program serves any paging layout.  ``use_pwl=True``
+swaps jnp.exp for the SCU's 8-segment PWL approximation, as in
+flash_attention.py — note the online-softmax rescaling then composes PWL
+segments across blocks (PWL-exp is not multiplicative), so the result
+approximates the SCU's one-pass softmax to PWL-segment accuracy rather
+than bit-exactly; the exact-exp path matches the dense oracle to float
+tolerance.  Validated against ``ref.ref_paged_attention`` in interpret
+mode (tests/test_kv_cache.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pwl_softmax import _pwl_exp_vec
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(q_ref, k_ref, v_ref, bt_ref, ctx_ref, o_ref, *,
+                  block_tokens, use_pwl, scale):
+    # q_ref: (D,); k_ref/v_ref: (N_blocks*block_tokens, D) for this kv
+    # head; bt_ref: (max_blocks,); ctx_ref: (1,); o_ref: (D,)
+    D = q_ref.shape[-1]
+    q = q_ref[...].reshape(1, D).astype(jnp.float32) * scale
+    ctx = ctx_ref[0]
+    n_blocks = (ctx + block_tokens - 1) // block_tokens
+
+    def exp_fn(x):
+        return _pwl_exp_vec(x) if use_pwl else jnp.exp(x)
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        phys = bt_ref[i]
+        k = k_ref[pl.dslice(phys * block_tokens, block_tokens), :] \
+            .astype(jnp.float32)
+        v = v_ref[pl.dslice(phys * block_tokens, block_tokens), :] \
+            .astype(jnp.float32)
+        s = q @ k.T                                  # (1, block_tokens)
+        pos = i * block_tokens + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_tokens), 1)
+        s = jnp.where(pos < ctx, s, NEG_INF)         # tail of last block
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = exp_fn(s - m_new[:, None])
+        l_cur = jnp.sum(p, axis=-1)
+        alpha = exp_fn(m_prev[:, None] - m_new[:, None])[:, 0]
+        l_new = l_prev * alpha + l_cur
+        acc = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc
+
+    m0 = jnp.full((1,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    a0 = jnp.zeros((1, D), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]) \
+        .reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("use_pwl", "interpret"))
+def paged_attention(q, k_cache, v_cache, block_tables, context_lens, *,
+                    use_pwl: bool = False, interpret: bool = True):
+    """q: (B, H, D); k/v_cache: (N_blocks, block_tokens, H_kv, D);
+    block_tables: (B, max_blocks) int32; context_lens: (B,) int32.
+    H must be a multiple of H_kv (GQA share).  Returns (B, H, D)."""
+    B, H, D = q.shape
+    n_blocks, block_tokens, H_kv, Dk = k_cache.shape
+    assert Dk == D and v_cache.shape == k_cache.shape
+    assert H % H_kv == 0, "GQA requires H % H_kv == 0"
+    rep = H // H_kv
+    max_blocks = block_tables.shape[1]
+
+    # pool flattened per kv head: (H_kv, N_blocks*block_tokens, D)
+    kf = jnp.moveaxis(k_cache, 2, 0).reshape(H_kv, n_blocks * block_tokens, D)
+    vf = jnp.moveaxis(v_cache, 2, 0).reshape(H_kv, n_blocks * block_tokens, D)
+    bt = block_tables.astype(jnp.int32)
+    ctx = context_lens.astype(jnp.int32).reshape(B, 1)
+
+    grid = (B, H)
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, block_tokens=block_tokens,
+                          use_pwl=use_pwl, scale=D ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, D), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((None, n_blocks * block_tokens, D),
+                         lambda b, h: (h // rep, 0, 0)),
+            pl.BlockSpec((None, n_blocks * block_tokens, D),
+                         lambda b, h: (h // rep, 0, 0)),
+            pl.BlockSpec((None, max_blocks), lambda b, h: (b, 0)),
+            pl.BlockSpec((None, 1), lambda b, h: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, D), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(q, kf, vf, bt, ctx)
+    return out

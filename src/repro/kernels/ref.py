@@ -51,6 +51,37 @@ def ref_pwl_attention(q, k, v, *, causal=True):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def ref_paged_attention(q, k_cache, v_cache, block_tables, context_lens,
+                        *, use_pwl=False):
+    """Dense oracle of kernels.paged_attention: gather each sequence's
+    K/V through its block table, mask past the context length, exact
+    (or PWL) softmax.  q: (B, H, D); k/v_cache: (N, bt, H_kv, D)."""
+    B, H, D = q.shape
+    _, bt, H_kv, _ = k_cache.shape
+    rep = H // H_kv
+    exp_fn = ref_pwl_exp if use_pwl else jnp.exp
+    outs = []
+    for b in range(B):
+        L = int(context_lens[b])
+        if L == 0:
+            # nothing attended: mirror the kernel's zero output
+            outs.append(jnp.zeros((H, D), jnp.float32))
+            continue
+        nblk = -(-L // bt)
+        ids = np.asarray(block_tables[b, :nblk])
+        k = jnp.asarray(k_cache)[ids].reshape(nblk * bt, H_kv, D)[:L]
+        v = jnp.asarray(v_cache)[ids].reshape(nblk * bt, H_kv, D)[:L]
+        k = jnp.repeat(k, rep, axis=1)                  # (L, H, D)
+        v = jnp.repeat(v, rep, axis=1)
+        s = jnp.einsum("hd,lhd->hl", q[b].astype(jnp.float32),
+                       k.astype(jnp.float32)) * (D ** -0.5)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        e = exp_fn(s - m)
+        p = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+        outs.append(jnp.einsum("hl,lhd->hd", p, v.astype(jnp.float32)))
+    return jnp.stack(outs).astype(q.dtype)
+
+
 def ref_cim_matmul(x, wq, wscale, *, adc_bits=12, act_bits=8):
     """Tile-exact oracle of kernels.cim_matmul (block_m = M, block_n = N)."""
     M, K = x.shape

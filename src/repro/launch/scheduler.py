@@ -30,6 +30,7 @@ class EventKind(str, Enum):
     FINISH = "finish"
     REJECT = "reject"
     IDLE = "idle"        # used by launch/serving_engine (gap to next arrival)
+    PREEMPT = "preempt"  # paged-KV watermark eviction (recompute-on-resume)
 
 
 def deadline_at_risk(head: Optional["Request"], clock: float,

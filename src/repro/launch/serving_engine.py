@@ -29,6 +29,17 @@ model instead of constants:
     -> ServingReport: p50/p99 TTFT + end-to-end latency, aggregate
        tokens/s, tokens/J, queue-depth timeline, batch occupancy.
 
+With ``EngineConfig.kv_cache`` set (runtime/kv_cache.KVCacheConfig) the
+engine is **capacity-aware**: KV lives in fixed-size blocks over the
+finite chiplet-scratchpad budget with a DRAM-hub spill tier behind the
+photonic link — admission checks free *blocks* (not just free slots),
+spills/remote reads land on the timeline as ``C2CTransfer`` events plus
+DRAM access energy, watermark pressure preempts the newest resident
+(recompute-on-resume), and ``chunked_prefill_tokens`` spreads long
+prompts over several iterations.  The default (``kv_cache=None``,
+capacity unbounded) stays byte-identical to the pre-paging engine —
+locked by tests/golden/timeline_golden.json.
+
 Pure Python + numpy on top of ``repro.core`` — no JAX import, so a
 64-request trace simulates in well under a second.
 
@@ -37,17 +48,21 @@ Pure Python + numpy on top of ``repro.core`` — no JAX import, so a
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.ccpg import CCPGModel
+from repro.core.energy import E_DRAM_ACCESS
 from repro.core.interconnect import c2c_average_power
 from repro.core.scheduling import ChipletAllocation, allocate_chiplets
 from repro.core.simulator import PicnicSimulator
 from repro.core.timeline import Timeline
 from repro.launch.scheduler import EventKind, Request, deadline_at_risk
+from repro.runtime.kv_cache import (BlockAllocator, KVCacheConfig,
+                                    OutOfBlocks)
 
 
 @dataclasses.dataclass(order=True)
@@ -55,6 +70,7 @@ class TrackedRequest(Request):
     """A scheduler Request plus the per-request KV-context the batched
     cycle model charges for (KV-scratchpad reads are per-request)."""
     context: int = dataclasses.field(compare=False, default=0)
+    admit_seq: int = dataclasses.field(compare=False, default=-1)
 
     @property
     def latency(self) -> Optional[float]:
@@ -131,6 +147,33 @@ class EngineConfig:
     #                             instead of the folded pre-wake residue
     overlap: float = 0.0        # fraction of decode C2C hidden by compute
     max_iters: int = 2_000_000  # safety valve for the event loop
+    # -- paged KV cache (None = capacity unbounded, paging off; the
+    #    default path stays byte-identical to timeline_golden.json) -----
+    kv_cache: Optional[KVCacheConfig] = None
+    # chunked prefill: prompts longer than this are prefilled in chunks
+    # of at most this many tokens, one chunk per engine iteration, so a
+    # long prompt cannot monopolize an iteration (0 = off)
+    chunked_prefill_tokens: int = 0
+
+
+@dataclasses.dataclass
+class KVCacheStats:
+    """Paged-KV accounting for one run (``engine.kv_stats``).  Kept out
+    of ServingReport so the report schema — and its golden byte-identity
+    — is untouched when paging is off."""
+    n_blocks: int
+    dram_blocks: int
+    block_tokens: int
+    preemptions: int            # watermark/OOM evictions (recompute)
+    spilled_blocks: int
+    spilled_bytes: int          # scratchpad -> DRAM hub over the C2C link
+    dram_read_bytes: int        # per-iteration remote KV reads
+    recomputed_tokens: int      # prefill work re-done after preemption
+    peak_blocks_used: int
+    infeasible_rejects: int     # could never fit even an empty cache
+
+    def row(self) -> Dict:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -158,20 +201,25 @@ class ServingReport:
     ccpg: bool
 
     def row(self) -> Dict:
+        def _r(x: float, nd: int):
+            # NaN percentiles (all requests rejected -> finished == 0)
+            # become None so the row stays strict-JSON serializable
+            # instead of emitting bare `NaN` tokens
+            return None if math.isnan(x) else round(x, nd)
         return {
             "requests": self.n_requests,
             "finished": self.finished,
             "rejected": self.rejected,
             "ccpg": self.ccpg,
-            "tokens_per_s": round(self.tokens_per_s, 1),
-            "tokens_per_J": round(self.tokens_per_J, 1),
-            "p50_latency_s": round(self.p50_latency_s, 4),
-            "p99_latency_s": round(self.p99_latency_s, 4),
-            "p50_ttft_s": round(self.p50_ttft_s, 4),
-            "p99_ttft_s": round(self.p99_ttft_s, 4),
-            "mean_batch": round(self.mean_batch_occupancy, 2),
+            "tokens_per_s": _r(self.tokens_per_s, 1),
+            "tokens_per_J": _r(self.tokens_per_J, 1),
+            "p50_latency_s": _r(self.p50_latency_s, 4),
+            "p99_latency_s": _r(self.p99_latency_s, 4),
+            "p50_ttft_s": _r(self.p50_ttft_s, 4),
+            "p99_ttft_s": _r(self.p99_ttft_s, 4),
+            "mean_batch": _r(self.mean_batch_occupancy, 2),
             "max_queue_depth": self.max_queue_depth,
-            "wall_s": round(self.wall_s, 4),
+            "wall_s": _r(self.wall_s, 4),
         }
 
     def summary(self) -> str:
@@ -235,10 +283,36 @@ class ContinuousBatchingEngine:
         self.events: List[Tuple[float, EventKind, int]] = []
         self.queue_depth: List[Tuple[float, int]] = []
         self._tokens_prefilled = 0
+        # -- paged KV state (None/zeroed on the default infinite path) --
+        self.kv: Optional[BlockAllocator] = (
+            BlockAllocator(e.kv_cache, on_spill=self._on_kv_spill)
+            if e.kv_cache is not None else None)
+        self._partial: Optional[List] = None   # [req, done, target, slot]
+        self._admit_counter = 0
+        self._kv_fetch_bytes = 0
+        self._preemptions = 0
+        self._recomputed_tokens = 0
+        self._kv_rejected_infeasible = 0
 
     @property
     def clock(self) -> float:
         return self.timeline.now
+
+    @property
+    def kv_stats(self) -> Optional[KVCacheStats]:
+        """Paged-KV accounting for the last run (None with paging off)."""
+        if self.kv is None:
+            return None
+        c = self.kv.cfg
+        return KVCacheStats(
+            n_blocks=c.n_blocks, dram_blocks=c.dram_blocks,
+            block_tokens=c.block_tokens, preemptions=self._preemptions,
+            spilled_blocks=self.kv.spilled_blocks,
+            spilled_bytes=self.kv.spilled_bytes,
+            dram_read_bytes=self._kv_fetch_bytes,
+            recomputed_tokens=self._recomputed_tokens,
+            peak_blocks_used=self.kv.peak_used,
+            infeasible_rejects=self._kv_rejected_infeasible)
 
     # ------------------------------------------------------------------
     def _free_slot(self) -> Optional[int]:
@@ -260,9 +334,24 @@ class ContinuousBatchingEngine:
         if dt:
             self.timeline.wake(dt, power_W=self._busy_power, cycles=cyc)
 
+    def _on_kv_spill(self, nbytes: int) -> None:
+        """Allocator spill callback: the cold block rides the photonic
+        link to the DRAM hub — a real C2CTransfer on the timeline (DMA
+        concurrent with compute) plus DRAM access energy."""
+        self.timeline.c2c(nbytes, phase="kv_spill",
+                          dur_s=self.sim.kv_transfer_seconds(nbytes))
+
     def _admit_arrivals(self, pending: Deque[TrackedRequest]) -> None:
         while pending and pending[0].arrival <= self.clock:
             req = pending.popleft()
+            if self.kv is not None and not self.kv.feasible(
+                    req.prompt_len + max(req.max_new, 1)):
+                # could never fit, even with the whole cache to itself
+                self.rejected += 1
+                self._kv_rejected_infeasible += 1
+                self.events.append((self.clock, EventKind.REJECT,
+                                    req.request_id))
+                continue
             if len(self.queue) >= self.engine.queue_limit:
                 self.rejected += 1
                 self.events.append((self.clock, EventKind.REJECT,
@@ -270,49 +359,200 @@ class ContinuousBatchingEngine:
                 continue
             self.queue.append(req)
 
+    def _kv_can_admit(self) -> bool:
+        """Admission checks free KV *blocks*, not just free slots: the
+        queue head needs blocks for its (possibly recomputed) context
+        plus its first new token, with watermark headroom for the
+        residents' growth — except when nothing is resident, where the
+        full cache is available by definition."""
+        if self.kv is None or not self.queue:
+            return True
+        head = self.queue[0]
+        need = head.prompt_len + head.generated + 1
+        # (only reached with no chunked prefill in flight: step() keeps
+        # the prefill pipeline for the partial and skips this check)
+        reserve = self.kv.cfg.watermark_blocks if self._active() else 0
+        return self.kv.can_admit(need, reserve=reserve)
+
     def _deadline_at_risk(self) -> bool:
         head = self.queue[0] if self.queue else None
         if head is None:
             return False
         dt, _ = self.sim.prefill_seconds(
-            self.cfg, self.alloc, head.prompt_len, ccpg=self._residue_ccpg)
+            self.cfg, self.alloc, head.prompt_len + head.generated,
+            ccpg=self._residue_ccpg)
         if self.engine.ccpg and self.engine.dynamic_ccpg:
             dt += self.sim.wake_seconds(self.alloc)[0]
         return deadline_at_risk(head, self.clock, dt)
 
     # ------------------------------------------------------------------
     def _prefill(self, slot: int) -> None:
-        req = self.queue.popleft()
-        dt, c2c = self.sim.prefill_seconds(
-            self.cfg, self.alloc, req.prompt_len, ccpg=self._residue_ccpg)
+        if self._partial is None:
+            req = self.queue.popleft()
+            # recompute-on-resume: a preempted request re-prefills its
+            # prompt PLUS everything it had already generated
+            target = req.prompt_len + req.generated
+            if req.generated:
+                self._recomputed_tokens += target
+            chunk_cap = self.engine.chunked_prefill_tokens
+            if chunk_cap and target > chunk_cap:
+                self._partial = [req, 0, target, slot]
+            else:
+                # monolithic path — the default-config fast path; with
+                # paging off its float sequence is byte-identical to the
+                # pre-paging engine (timeline golden)
+                dt, c2c = self.sim.prefill_seconds(
+                    self.cfg, self.alloc, target, ccpg=self._residue_ccpg)
+                self._wake_walk()
+                t0 = self.timeline.now
+                self.timeline.compute(
+                    dt, kind="prefill", power_W=self._busy_power,
+                    batch=len(self._active()) + 1,
+                    name=f"prefill:r{req.request_id}")
+                if c2c:
+                    # burst rides under the compute wave: anchor at start
+                    self.timeline.c2c(c2c, phase="prefill", t0=t0,
+                                      dur_s=c2c / self.sim.link.bandwidth_Bps)
+                self._tokens_prefilled += target
+                self._finish_prefill(req, slot)
+                return
+        # chunked continuation: one chunk per engine iteration
+        req, done, target, slot = self._partial
+        chunk = min(self.engine.chunked_prefill_tokens, target - done)
+        dt, c2c = self.sim.prefill_chunk_seconds(
+            self.cfg, self.alloc, chunk, done, ccpg=self._residue_ccpg)
         self._wake_walk()
         t0 = self.timeline.now
         self.timeline.compute(dt, kind="prefill", power_W=self._busy_power,
                               batch=len(self._active()) + 1,
-                              name=f"prefill:r{req.request_id}")
+                              name=f"prefill:r{req.request_id}@{done}")
         if c2c:
-            # the burst rides under the compute wave: anchor at span start
             self.timeline.c2c(c2c, phase="prefill", t0=t0,
                               dur_s=c2c / self.sim.link.bandwidth_Bps)
-        self._tokens_prefilled += req.prompt_len
-        # prefill emits the request's first output token (unless this is a
-        # prefill-only / scoring request with max_new == 0)
-        req.first_token_at = self.clock
-        req.generated = min(1, req.max_new)
+        self._tokens_prefilled += chunk
+        done += chunk
+        if self.kv is not None:
+            self._kv_ensure(req, done)
+        self.decode_credit = 0
+        if done >= target:
+            self._partial = None
+            self._finish_prefill(req, slot)
+        else:
+            self._partial = [req, done, target, slot]
+            self.events.append((self.clock, EventKind.PREFILL,
+                                req.request_id))
+
+    def _finish_prefill(self, req: TrackedRequest, slot: int) -> None:
+        """Post-prefill bookkeeping, shared by the monolithic and chunked
+        paths.  A fresh prefill emits the request's first output token
+        (unless max_new == 0, prefill-only scoring); a resumed one ends
+        its recompute by producing the next token."""
+        if req.first_token_at is None:
+            req.first_token_at = self.clock
+            req.generated = min(1, req.max_new)
+            new_tokens = req.generated
+        else:
+            req.generated += 1
+            new_tokens = 1
         req.context = req.prompt_len + req.generated
-        if req.generated:
-            self.timeline.token(req.generated, request_id=req.request_id)
+        if self.kv is not None:
+            self._kv_ensure(req, max(req.context, 1))
+        if new_tokens:
+            self.timeline.token(new_tokens, request_id=req.request_id)
         self.events.append((self.clock, EventKind.PREFILL, req.request_id))
         if req.generated >= req.max_new:
             req.finished_at = self.clock
             self.events.append((self.clock, EventKind.FINISH,
                                 req.request_id))
+            if self.kv is not None:
+                self.kv.free(req.request_id)
         else:
+            req.admit_seq = self._admit_counter
+            self._admit_counter += 1
             self.slots[slot] = req
         self.decode_credit = 0
 
+    # -- paged-KV round bookkeeping ------------------------------------
+    def _kv_ensure(self, req: TrackedRequest, n_tokens: int) -> None:
+        """Grow the request's block table, preempting (other) residents
+        when both tiers are exhausted."""
+        while True:
+            try:
+                self.kv.ensure(req.request_id, n_tokens)
+                return
+            except OutOfBlocks:
+                if not self._preempt_one(exclude=req.request_id):
+                    raise RuntimeError(
+                        "paged KV cache cannot hold the running set; "
+                        "raise n_blocks/dram_blocks or lower max_batch")
+
+    def _preempt_one(self, exclude: int = -1) -> bool:
+        """Evict the most-recently-admitted resident (vLLM recompute
+        policy): free its blocks, return it to the queue FRONT; its KV is
+        recomputed at re-prefill."""
+        cands = [r for r in self.slots
+                 if r is not None and r.request_id != exclude]
+        if cands:
+            victim = max(cands, key=lambda r: r.admit_seq)
+            # identity, not ==: dataclass eq compares arrival times only
+            idx = next(i for i, s in enumerate(self.slots) if s is victim)
+            self.slots[idx] = None
+            self.kv.free(victim.request_id)
+            self._preemptions += 1
+            self.queue.appendleft(victim)
+            self.events.append((self.clock, EventKind.PREEMPT,
+                                victim.request_id))
+            return True
+        # last resort: abort an in-flight chunked prefill.  The partial
+        # holds KV blocks but lives outside self.slots, so without this
+        # a lone growing resident could exhaust the cache with no victim
+        # available and crash a feasible run; its chunks are recomputed
+        # when it is re-admitted.
+        if self._partial is not None \
+                and self._partial[0].request_id != exclude:
+            req, done = self._partial[0], self._partial[1]
+            self._partial = None
+            if req.request_id in self.kv.tables:
+                self.kv.free(req.request_id)
+            # the discarded chunks are prefill work that will be re-done
+            # on re-admission (the resume path only counts requests that
+            # had already generated tokens)
+            self._recomputed_tokens += done
+            self._preemptions += 1
+            self.queue.appendleft(req)
+            self.events.append((self.clock, EventKind.PREEMPT,
+                                req.request_id))
+            return True
+        return False
+
+    def _kv_prepare_round(self) -> None:
+        """Before a decode round: watermark-based preemption, then grow
+        every resident's block table by the token this round appends."""
+        cfg = self.kv.cfg
+        while True:
+            active = self._active()
+            if not active:
+                return
+            needed = sum(
+                cfg.blocks_for(r.context + 1)
+                - len(self.kv.tables[r.request_id].blocks)
+                for r in active)
+            if needed == 0:
+                return
+            if (self.kv.free_total()
+                    >= max(needed, cfg.watermark_blocks)
+                    or len(active) <= 1):
+                break
+            self._preempt_one()
+        for r in list(self._active()):
+            self._kv_ensure(r, r.context + 1)
+
     def _decode_round(self) -> None:
+        if self.kv is not None:
+            self._kv_prepare_round()
         active = self._active()
+        if not active:        # everything was preempted back to the queue
+            return
         contexts = [r.context for r in active]
         dt, c2c = self.sim.decode_iteration_seconds(
             self.cfg, self.alloc, contexts, ccpg=self._residue_ccpg,
@@ -324,6 +564,18 @@ class ContinuousBatchingEngine:
         if c2c:
             self.timeline.c2c(c2c, phase="decode", t0=t0,
                               dur_s=c2c / self.sim.link.bandwidth_Bps)
+        if self.kv is not None:
+            # DRAM-resident context is re-read over the photonic link
+            # every iteration: an EXPOSED remote-memory stall (advancing
+            # C2C) — the cost Sangam/Photonic-Fabric price for the tier
+            fetch = sum(self.kv.dram_tokens(r.request_id)
+                        for r in active) * self.kv.cfg.bytes_per_token
+            if fetch:
+                # the chiplets keep burning busy power while stalled
+                self.timeline.c2c(fetch, phase="kv_fetch",
+                                  dur_s=self.sim.kv_transfer_seconds(fetch),
+                                  advance=True, power_W=self._busy_power)
+                self._kv_fetch_bytes += fetch
         self.decode_credit += 1
         self.events.append((self.clock, EventKind.DECODE, -1))
         for i, req in enumerate(self.slots):
@@ -337,15 +589,27 @@ class ContinuousBatchingEngine:
                 self.events.append((self.clock, EventKind.FINISH,
                                     req.request_id))
                 self.slots[i] = None
+                if self.kv is not None:
+                    self.kv.free(req.request_id)
 
     def step(self, pending: Deque[TrackedRequest]) -> EventKind:
         """One engine iteration; returns what was scheduled."""
         self._admit_arrivals(pending)
         self.queue_depth.append((self.clock, len(self.queue)))
 
-        slot = self._free_slot()
-        want_prefill = bool(self.queue) and slot is not None
-        must_prefill = want_prefill and self._deadline_at_risk()
+        if self._partial is not None:
+            # an in-flight chunked prefill owns the prefill pipeline (and
+            # its reserved slot); new admissions wait behind it.  Its
+            # chunks obey the SAME deficit gating as fresh prefills —
+            # that is what stops a long prompt monopolizing iterations
+            slot = self._partial[3]
+            want_prefill = True
+            must_prefill = False
+        else:
+            slot = self._free_slot()
+            want_prefill = (bool(self.queue) and slot is not None
+                            and self._kv_can_admit())
+            must_prefill = want_prefill and self._deadline_at_risk()
         may_prefill = want_prefill and (
             self.decode_credit >= self.engine.decode_quantum
             or not self._active())
@@ -368,9 +632,19 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
     def run(self, trace: Sequence[TrackedRequest]) -> ServingReport:
         self.reset()
+        for r in trace:
+            # re-running a trace must be idempotent: the resume/recompute
+            # paths branch on this mutable state, so leftovers from an
+            # earlier run would masquerade as preempted residents
+            r.generated = 0
+            r.context = 0
+            r.first_token_at = None
+            r.finished_at = None
+            r.admit_seq = -1
         pending: Deque[TrackedRequest] = deque(sorted(trace))
         it = 0
-        while (pending or self.queue or self._active()):
+        while (pending or self.queue or self._active()
+               or self._partial is not None):
             it += 1
             if it > self.engine.max_iters:
                 raise RuntimeError("serving engine exceeded max_iters")
@@ -394,6 +668,15 @@ class ContinuousBatchingEngine:
         # whole wall clock (bursty traffic, duty-cycled laser bias)
         c2c_power = c2c_average_power(tl.c2c_bytes / wall, self.sim.link)
         energy = tl.energy_J + c2c_power * wall
+        dram_bytes = ((self.kv.spilled_bytes if self.kv is not None else 0)
+                      + self._kv_fetch_bytes)
+        if dram_bytes:
+            # KV spilled to / re-read from the DRAM hub pays the off-chip
+            # access energy on top of the link transport charged above
+            # (the hub's static power rides in via CCPGModel's
+            # include_dram_hub path); guarded so the paging-off default
+            # keeps its float sequence byte-identical
+            energy += dram_bytes * 8 * E_DRAM_ACCESS
         return ServingReport(
             n_requests=len(requests),
             finished=len(done),

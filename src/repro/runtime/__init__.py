@@ -1,15 +1,45 @@
-from .fault_tolerance import (HeartbeatMonitor, RestartPolicy,
-                              TrainingSupervisor, Worker, WorkerFailure,
-                              WorkerState, plan_elastic_mesh)
-from .straggler import BackupInputRunner, StragglerDetector, StragglerReport
-from .compression import (compress_with_feedback, compressed_allreduce,
-                          compressed_psum, decompress, dequantize_int8,
-                          init_error_state, quantize_int8)
+"""Runtime subsystems: fault tolerance, stragglers, gradient compression,
+paged KV cache.
 
-__all__ = [
-    "HeartbeatMonitor", "RestartPolicy", "TrainingSupervisor", "Worker",
-    "WorkerFailure", "WorkerState", "plan_elastic_mesh",
-    "BackupInputRunner", "StragglerDetector", "StragglerReport",
-    "compress_with_feedback", "compressed_allreduce", "compressed_psum",
-    "decompress", "dequantize_int8", "init_error_state", "quantize_int8",
-]
+Lazy re-exports (PEP 562): ``compression`` imports jax at module scope,
+but the paged KV allocator (`kv_cache`) is pure Python and is imported by
+the jax-free serving engine — resolving attributes on demand keeps
+``import repro.runtime.kv_cache`` from dragging jax in.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    # fault_tolerance
+    "HeartbeatMonitor": "fault_tolerance", "RestartPolicy": "fault_tolerance",
+    "TrainingSupervisor": "fault_tolerance", "Worker": "fault_tolerance",
+    "WorkerFailure": "fault_tolerance", "WorkerState": "fault_tolerance",
+    "plan_elastic_mesh": "fault_tolerance",
+    # straggler
+    "BackupInputRunner": "straggler", "StragglerDetector": "straggler",
+    "StragglerReport": "straggler",
+    # compression (jax import happens only on first attribute access)
+    "compress_with_feedback": "compression",
+    "compressed_allreduce": "compression", "compressed_psum": "compression",
+    "decompress": "compression", "dequantize_int8": "compression",
+    "init_error_state": "compression", "quantize_int8": "compression",
+    # kv_cache (pure Python)
+    "BlockAllocator": "kv_cache", "BlockTable": "kv_cache",
+    "KVCacheConfig": "kv_cache", "OutOfBlocks": "kv_cache",
+    "kv_bytes_per_token": "kv_cache", "kv_cache_from_model": "kv_cache",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        val = getattr(mod, name)
+        globals()[name] = val          # cache for subsequent lookups
+        return val
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,263 @@
+"""Paged KV-cache block allocator over the chiplet scratchpad budget.
+
+The paper keeps KV in the 32 KB PE-local scratchpads (cyclically striped,
+``core/partition.ScratchpadPlan``) with a DRAM hub reachable over the
+photonic C2C link for everything that does not fit (paper §II; the same
+tier split Sangam prices over CXL and the Photonic Fabric platform prices
+over photonics — PAPERS.md).  This module is the vLLM-style allocator
+that makes that hierarchy a *finite* resource the serving engine must
+schedule against:
+
+  * KV is allocated in fixed-size **blocks** of ``block_tokens`` tokens;
+    a request owns a **block table** (ordered physical block ids).
+  * Two tiers share one physical id space: scratchpad blocks are ids
+    ``[0, n_blocks)``, DRAM-hub blocks are ``[n_blocks, n_blocks +
+    dram_blocks)`` — a block's tier is just an id comparison.
+  * When the scratchpad tier is exhausted and DRAM capacity remains, the
+    allocator **spills** the coldest scratchpad-resident block (the
+    oldest block of the request holding the most scratchpad blocks) to a
+    DRAM block and hands the freed scratchpad block to the requester, so
+    hot (recent) KV stays chiplet-local.  Every spill invokes
+    ``on_spill(nbytes)`` — the serving engine charges it as a
+    ``C2CTransfer`` on the TimelineIR plus DRAM access energy.
+  * When both tiers are exhausted, ``OutOfBlocks`` is raised and the
+    engine preempts (recompute-on-resume, watermark-gated).
+
+Pure Python — no jax, no numpy — so the discrete-event serving loop
+stays fast and import-light.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+class OutOfBlocks(RuntimeError):
+    """Both KV tiers are exhausted; the caller must preempt or wait."""
+
+
+@dataclass(frozen=True)
+class KVCacheConfig:
+    """Sizing of the two-tier paged KV cache.
+
+    ``n_blocks``        scratchpad-tier blocks (the chiplet-local budget)
+    ``block_tokens``    tokens per block (vLLM-style page size)
+    ``dram_blocks``     DRAM-hub tier blocks reachable over the photonic
+                        link; 0 disables spilling entirely
+    ``watermark_frac``  preemption watermark: when a decode round needs
+                        new blocks and the free total is below this
+                        fraction of the scratchpad tier, the engine
+                        preempts before allocating
+    ``bytes_per_token`` KV bytes one token occupies across all layers
+                        (see :func:`kv_bytes_per_token`)
+    """
+    n_blocks: int
+    block_tokens: int = 16
+    dram_blocks: int = 0
+    watermark_frac: float = 0.05
+    bytes_per_token: int = 4096
+
+    def __post_init__(self):
+        if self.n_blocks < 1:
+            raise ValueError("n_blocks must be >= 1")
+        if self.block_tokens < 1:
+            raise ValueError("block_tokens must be >= 1")
+        if self.dram_blocks < 0:
+            raise ValueError("dram_blocks must be >= 0")
+        if not 0.0 <= self.watermark_frac < 1.0:
+            raise ValueError("watermark_frac must be in [0, 1)")
+
+    @property
+    def block_bytes(self) -> int:
+        return self.block_tokens * self.bytes_per_token
+
+    @property
+    def total_blocks(self) -> int:
+        return self.n_blocks + self.dram_blocks
+
+    @property
+    def watermark_blocks(self) -> int:
+        return max(1, int(self.n_blocks * self.watermark_frac))
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` context tokens."""
+        return -(-max(n_tokens, 0) // self.block_tokens)
+
+
+@dataclass
+class BlockTable:
+    """One request's ordered physical block ids (oldest tokens first)."""
+    request_id: int
+    blocks: List[int] = field(default_factory=list)
+    tokens: int = 0                  # context tokens currently stored
+
+
+class BlockAllocator:
+    """Two-tier block allocator with spill-to-DRAM and exact accounting.
+
+    Invariants (property-tested in tests/test_kv_cache.py):
+      * every physical id is either free or in exactly one table;
+      * ``free_scratch + free_dram + sum(len(t.blocks)) == total_blocks``;
+      * a table covers its token count: ``len(blocks) * block_tokens >=
+        tokens`` with no over-allocation beyond one partial block.
+    """
+
+    def __init__(self, cfg: KVCacheConfig,
+                 on_spill: Optional[Callable[[int], None]] = None):
+        self.cfg = cfg
+        self.on_spill = on_spill
+        # stacks: pop() from the end keeps allocation order deterministic
+        self._free_scratch: List[int] = list(range(cfg.n_blocks))[::-1]
+        self._free_dram: List[int] = list(
+            range(cfg.n_blocks, cfg.n_blocks + cfg.dram_blocks))[::-1]
+        self.tables: Dict[int, BlockTable] = {}
+        # lifetime stats
+        self.spilled_blocks = 0
+        self.spilled_bytes = 0
+        self.peak_used = 0
+
+    # -- tier predicates ----------------------------------------------
+    def is_dram(self, block_id: int) -> bool:
+        return block_id >= self.cfg.n_blocks
+
+    # -- capacity queries ---------------------------------------------
+    def free_scratch(self) -> int:
+        return len(self._free_scratch)
+
+    def free_total(self) -> int:
+        return len(self._free_scratch) + len(self._free_dram)
+
+    def used_blocks(self) -> int:
+        return self.cfg.total_blocks - self.free_total()
+
+    def feasible(self, n_tokens: int) -> bool:
+        """Could a request of ``n_tokens`` EVER fit (both tiers empty)?"""
+        return self.cfg.blocks_for(n_tokens) <= self.cfg.total_blocks
+
+    def can_admit(self, n_tokens: int, *, reserve: int = 0) -> bool:
+        """Are there enough free blocks (both tiers) to admit a request
+        needing ``n_tokens``, keeping ``reserve`` blocks of headroom?"""
+        return self.cfg.blocks_for(n_tokens) + reserve <= self.free_total()
+
+    def scratch_tokens(self, request_id: int) -> int:
+        t = self.tables[request_id]
+        return t.tokens - self.dram_tokens(request_id)
+
+    def dram_tokens(self, request_id: int) -> int:
+        """Context tokens resident in the DRAM-hub tier — the per-decode-
+        iteration remote-read volume for this request."""
+        t = self.tables[request_id]
+        n_dram = sum(1 for b in t.blocks if self.is_dram(b))
+        return min(n_dram * self.cfg.block_tokens, t.tokens)
+
+    # -- allocation ----------------------------------------------------
+    def ensure(self, request_id: int, n_tokens: int) -> int:
+        """Grow ``request_id``'s table to cover ``n_tokens`` context
+        tokens; returns the number of newly allocated blocks.  Raises
+        :class:`OutOfBlocks` (after allocating what it could — the
+        partial growth is kept, a retry continues from it)."""
+        t = self.tables.setdefault(request_id, BlockTable(request_id))
+        grown = 0
+        bt = self.cfg.block_tokens
+        while len(t.blocks) * bt < n_tokens:
+            try:
+                block = self._take_block()
+            except OutOfBlocks:
+                # keep the table coherent with its partial growth so the
+                # invariant len(blocks) == blocks_for(tokens) still holds
+                # and a retry (after preemption) continues from here
+                t.tokens = max(t.tokens, min(n_tokens, len(t.blocks) * bt))
+                raise
+            t.blocks.append(block)
+            grown += 1
+        t.tokens = max(t.tokens, n_tokens)
+        used = self.used_blocks()
+        if used > self.peak_used:
+            self.peak_used = used
+        return grown
+
+    def free(self, request_id: int) -> int:
+        """Release every block of ``request_id``; returns block count."""
+        t = self.tables.pop(request_id)
+        for b in reversed(t.blocks):
+            (self._free_dram if self.is_dram(b)
+             else self._free_scratch).append(b)
+        return len(t.blocks)
+
+    # -- internals -----------------------------------------------------
+    def _take_block(self) -> int:
+        if self._free_scratch:
+            return self._free_scratch.pop()
+        if self._free_dram:
+            victim = self._spill_victim()
+            if victim is None:
+                # nothing scratch-resident to displace: hand out DRAM
+                return self._free_dram.pop()
+            table, idx = victim
+            dram_id = self._free_dram.pop()
+            scratch_id = table.blocks[idx]
+            table.blocks[idx] = dram_id        # cold block moves to DRAM
+            self.spilled_blocks += 1
+            self.spilled_bytes += self.cfg.block_bytes
+            if self.on_spill is not None:
+                self.on_spill(self.cfg.block_bytes)
+            return scratch_id                  # freed pad goes to caller
+        raise OutOfBlocks(
+            f"KV cache exhausted: {self.cfg.n_blocks} scratchpad + "
+            f"{self.cfg.dram_blocks} DRAM blocks all in use")
+
+    def _spill_victim(self):
+        """(table, index) of the coldest scratchpad-resident block: the
+        oldest scratch block of the request holding the most scratch
+        blocks (ties to the lowest request id) — deterministic, keeps
+        the hottest context chiplet-local."""
+        best = None
+        best_key = None
+        for rid in sorted(self.tables):
+            t = self.tables[rid]
+            idxs = [i for i, b in enumerate(t.blocks)
+                    if not self.is_dram(b)]
+            if not idxs:
+                continue
+            key = (-len(idxs), rid)
+            if best_key is None or key < best_key:
+                best_key = key
+                best = (t, idxs[0])
+        return best
+
+
+# ---------------------------------------------------------------------------
+# Model-derived sizing
+# ---------------------------------------------------------------------------
+
+def kv_bytes_per_token(cfg, elem_bytes: int = 1) -> int:
+    """KV bytes one context token occupies across the whole model: K + V
+    rows of ``kv_dim`` for every attention layer, at 8-bit activations
+    (``elem_bytes=1``) as the paper's scratchpads store them.  SSM layers
+    carry recurrent state, not a KV cache, so only ``attn`` layers count.
+    """
+    from repro.core.scheduling import llm_layers
+    n_attn = sum(1 for ld in llm_layers(cfg) if ld.kind == "attn")
+    kv_dim = cfg.kv_dim or cfg.d_model
+    return 2 * kv_dim * n_attn * elem_bytes
+
+
+def kv_cache_from_model(cfg, *, tile=None, block_tokens: int = 16,
+                        kv_frac: float = 0.5, dram_frac: float = 1.0,
+                        watermark_frac: float = 0.05,
+                        pad_bytes: int = 32 * 1024) -> KVCacheConfig:
+    """Size the paged cache from the mapped model: the scratchpad tier is
+    ``kv_frac`` of the allocated chiplets' total scratchpad capacity
+    (the rest holds activations/partials), the DRAM-hub tier is
+    ``dram_frac`` of the scratchpad tier."""
+    from repro.core.energy import TileSpec
+    from repro.core.scheduling import allocate_chiplets
+    tile = tile if tile is not None else TileSpec()
+    alloc = allocate_chiplets(cfg, tile)
+    budget = int(alloc.n_chiplets * tile.n_pairs * pad_bytes * kv_frac)
+    bpt = kv_bytes_per_token(cfg)
+    n_blocks = max(1, budget // (block_tokens * bpt))
+    return KVCacheConfig(
+        n_blocks=n_blocks, block_tokens=block_tokens,
+        dram_blocks=int(n_blocks * dram_frac),
+        watermark_frac=watermark_frac, bytes_per_token=bpt)

@@ -1,0 +1,446 @@
+"""Paged KV-cache subsystem: block-allocator invariants, capacity-aware
+serving (admission by blocks, watermark preemption with recompute-on-
+resume, DRAM-hub spill traffic on the timeline, chunked prefill), and the
+paged-attention Pallas kernel vs its dense oracle (interpret mode)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import PicnicSimulator
+from repro.core.scheduling import CycleModel, allocate_chiplets
+from repro.core.timeline import C2CTransfer, TokenEmit
+from repro.launch.serving_engine import (ContinuousBatchingEngine,
+                                         EngineConfig, EventKind,
+                                         replay_trace, serve_trace)
+from repro.runtime.kv_cache import (BlockAllocator, KVCacheConfig,
+                                    OutOfBlocks, kv_bytes_per_token,
+                                    kv_cache_from_model)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama3.2-1b")
+
+
+def _check_invariants(a: BlockAllocator):
+    """Every physical id free XOR owned by exactly one table; counts add
+    up; tables never over-allocate by more than one partial block."""
+    c = a.cfg
+    owned = [b for t in a.tables.values() for b in t.blocks]
+    assert len(owned) == len(set(owned)), "block double-owned"
+    free = a._free_scratch + a._free_dram
+    assert not (set(owned) & set(free)), "block both free and owned"
+    assert len(owned) + len(free) == c.total_blocks
+    for t in a.tables.values():
+        assert len(t.blocks) == c.blocks_for(t.tokens)
+        assert len(t.blocks) * c.block_tokens >= t.tokens
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+def test_blocks_for_rounding():
+    c = KVCacheConfig(n_blocks=8, block_tokens=16)
+    assert c.blocks_for(0) == 0
+    assert c.blocks_for(1) == 1
+    assert c.blocks_for(16) == 1
+    assert c.blocks_for(17) == 2
+    assert c.block_bytes == 16 * c.bytes_per_token
+
+
+def test_alloc_free_conservation():
+    a = BlockAllocator(KVCacheConfig(n_blocks=10, block_tokens=4))
+    a.ensure(1, 9)            # 3 blocks
+    a.ensure(2, 4)            # 1 block
+    _check_invariants(a)
+    assert a.used_blocks() == 4 and a.free_total() == 6
+    a.ensure(1, 10)           # same 3rd block covers token 10
+    assert a.used_blocks() == 4
+    a.ensure(1, 13)           # crosses into a 4th block
+    assert a.used_blocks() == 5
+    _check_invariants(a)
+    assert a.free(1) == 4
+    assert a.free_total() == 9 and a.peak_used == 5
+    _check_invariants(a)
+    with pytest.raises(KeyError):
+        a.free(1)             # double free
+
+
+def test_out_of_blocks_keeps_partial_growth():
+    a = BlockAllocator(KVCacheConfig(n_blocks=4, block_tokens=4))
+    with pytest.raises(OutOfBlocks):
+        a.ensure(7, 100)
+    _check_invariants(a)
+    assert a.free_total() == 0          # partial growth retained
+    a.free(7)
+    assert a.free_total() == 4
+
+
+def test_spill_moves_coldest_block_and_charges_bytes():
+    spills = []
+    a = BlockAllocator(KVCacheConfig(n_blocks=4, block_tokens=4,
+                                     dram_blocks=4, bytes_per_token=8),
+                       on_spill=spills.append)
+    a.ensure(1, 16)                      # all 4 scratch blocks
+    a.ensure(2, 4)                       # forces one spill
+    _check_invariants(a)
+    assert a.spilled_blocks == 1
+    assert spills == [a.cfg.block_bytes]
+    assert a.spilled_bytes == a.cfg.block_bytes
+    # request 1 (most scratch blocks) lost its OLDEST block to DRAM
+    assert a.dram_tokens(1) == 4 and a.scratch_tokens(1) == 12
+    t1 = a.tables[1]
+    assert a.is_dram(t1.blocks[0]) and not any(
+        a.is_dram(b) for b in t1.blocks[1:])
+    # request 2's new (hot) block stayed in scratchpad
+    assert a.dram_tokens(2) == 0
+
+
+def test_exhausting_both_tiers_raises():
+    a = BlockAllocator(KVCacheConfig(n_blocks=2, block_tokens=4,
+                                     dram_blocks=2))
+    a.ensure(1, 16)                      # 2 scratch + 2 dram
+    _check_invariants(a)
+    with pytest.raises(OutOfBlocks):
+        a.ensure(2, 1)
+    assert a.feasible(16) and not a.feasible(17)
+    assert not a.can_admit(1)
+    a.free(1)
+    assert a.can_admit(16) and not a.can_admit(16, reserve=1)
+
+
+def test_kv_sizing_from_model(cfg):
+    bpt = kv_bytes_per_token(cfg)
+    # K + V rows of kv_dim for each attention layer at 8-bit
+    assert bpt == 2 * cfg.kv_dim * cfg.n_layers
+    kvc = kv_cache_from_model(cfg, kv_frac=0.5)
+    assert kvc.bytes_per_token == bpt and kvc.n_blocks >= 1
+    # half the allocated scratchpad capacity, nothing more
+    alloc = allocate_chiplets(cfg)
+    budget = alloc.n_chiplets * 1024 * 32 * 1024 * 0.5
+    assert kvc.n_blocks * kvc.block_bytes <= budget
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_blocks=st.integers(1, 12), dram=st.integers(0, 8),
+       block_tokens=st.integers(1, 8), seed=st.integers(0, 999))
+def test_allocator_invariants_random_walk(n_blocks, dram, block_tokens,
+                                          seed):
+    """Random ensure/append/free sequences keep every invariant."""
+    rng = np.random.default_rng(seed)
+    a = BlockAllocator(KVCacheConfig(
+        n_blocks=n_blocks, block_tokens=block_tokens, dram_blocks=dram))
+    live = {}
+    for op in rng.integers(0, 3, size=40):
+        if op == 0 or not live:                      # new request
+            rid = int(rng.integers(0, 100)) + 1000 * len(live)
+            want = int(rng.integers(1, 4 * block_tokens))
+            try:
+                a.ensure(rid, want)
+                live[rid] = max(live.get(rid, 0), want)
+            except OutOfBlocks:
+                live[rid] = max(live.get(rid, 0),
+                                a.tables[rid].tokens)
+        elif op == 1:                                # grow one
+            rid = int(rng.choice(list(live)))
+            want = live[rid] + int(rng.integers(1, block_tokens + 1))
+            try:
+                a.ensure(rid, want)
+                live[rid] = want
+            except OutOfBlocks:
+                live[rid] = a.tables[rid].tokens
+        else:                                        # free one
+            rid = int(rng.choice(list(live)))
+            a.free(rid)
+            del live[rid]
+        _check_invariants(a)
+        for rid, tokens in live.items():
+            assert a.tables[rid].tokens >= tokens * 0  # table exists
+    assert a.peak_used <= a.cfg.total_blocks
+
+
+# ---------------------------------------------------------------------------
+# Capacity-aware serving
+# ---------------------------------------------------------------------------
+
+def _kvc(cfg, n_blocks, dram_blocks=0, block_tokens=16):
+    return KVCacheConfig(n_blocks=n_blocks, block_tokens=block_tokens,
+                         dram_blocks=dram_blocks,
+                         bytes_per_token=kv_bytes_per_token(cfg))
+
+
+def test_roomy_cache_matches_infinite(cfg):
+    """A cache big enough for the whole trace must reproduce the
+    infinite-capacity schedule (same report numbers, no preemptions)."""
+    rows = [(0.01 * i, 64 + 8 * i, 12) for i in range(8)]
+    r_inf = serve_trace(cfg, replay_trace(rows), max_batch=4)
+    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+        max_batch=4, kv_cache=_kvc(cfg, n_blocks=10_000)))
+    r_kv = eng.run(replay_trace(rows))
+    assert r_kv.row() == r_inf.row()
+    st_ = eng.kv_stats
+    assert st_.preemptions == 0 and st_.spilled_blocks == 0
+    assert st_.peak_blocks_used > 0
+    assert eng.kv.free_total() == eng.kv.cfg.total_blocks  # all returned
+
+
+def test_preemption_restores_exact_context_lengths(cfg):
+    """Watermark/OOM preemption + recompute-on-resume: every request
+    still finishes with context == prompt_len + max_new and generated ==
+    max_new, and at least one preemption actually happened."""
+    trace = replay_trace([(0.0, 100, 60) for _ in range(6)])
+    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+        max_batch=4, kv_cache=_kvc(cfg, n_blocks=40)))
+    rep = eng.run(trace)
+    st_ = eng.kv_stats
+    assert rep.finished == 6 and rep.rejected == 0
+    assert st_.preemptions > 0
+    assert st_.recomputed_tokens > 0
+    kinds = [k for _, k, _ in eng.events]
+    assert EventKind.PREEMPT in kinds
+    for r in trace:
+        assert r.generated == r.max_new
+        assert r.context == r.prompt_len + r.max_new
+        assert r.finished_at >= r.first_token_at >= r.arrival
+    # cache fully drained at the end
+    assert eng.kv.free_total() == eng.kv.cfg.total_blocks
+
+
+def test_spill_charges_c2c_and_dram_energy(cfg):
+    """With a DRAM tier, overflow spills instead of preempting: kv_spill
+    and kv_fetch C2CTransfer events appear on the timeline, and the
+    remote reads make the run slower and hungrier than an unconstrained
+    one."""
+    rows = [(0.0, 200, 40) for _ in range(4)]
+    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+        max_batch=4, kv_cache=_kvc(cfg, n_blocks=40, dram_blocks=80)))
+    rep = eng.run(replay_trace(rows))
+    st_ = eng.kv_stats
+    assert rep.finished == 4
+    assert st_.spilled_blocks > 0 and st_.dram_read_bytes > 0
+    phases = {e.phase for e in eng.timeline.events
+              if isinstance(e, C2CTransfer)}
+    assert {"kv_spill", "kv_fetch"} <= phases
+    spill_bytes = sum(e.nbytes for e in eng.timeline.events
+                      if isinstance(e, C2CTransfer)
+                      and e.phase == "kv_spill")
+    assert spill_bytes == st_.spilled_bytes
+    r_inf = serve_trace(cfg, replay_trace(rows), max_batch=4)
+    assert rep.wall_s > r_inf.wall_s          # exposed remote-read stalls
+    assert rep.energy_J > r_inf.energy_J      # link + DRAM access energy
+    assert rep.tokens_per_J < r_inf.tokens_per_J
+
+
+def test_admission_waits_for_blocks_not_just_slots(cfg):
+    """Free slots but no free blocks: admission must hold the request in
+    the queue (not reject it) until residents finish and free blocks."""
+    kvc = _kvc(cfg, n_blocks=20)            # 320 tokens of KV
+    trace = replay_trace([(0.0, 150, 30), (0.0, 150, 30), (0.0, 150, 8)])
+    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+        max_batch=8, kv_cache=kvc))         # slots are NOT the binding cap
+    rep = eng.run(trace)
+    assert rep.finished == 3 and rep.rejected == 0
+    # with 8 slots free throughout, occupancy was block-bound: the third
+    # request could not be co-resident from the start
+    assert rep.mean_batch_occupancy < 3.0
+
+
+def test_infeasible_request_rejected_upfront(cfg):
+    """A request that cannot fit even an EMPTY cache is rejected at
+    admission, not deadlocked."""
+    kvc = KVCacheConfig(n_blocks=4, block_tokens=16,
+                        bytes_per_token=kv_bytes_per_token(cfg))
+    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+        max_batch=2, kv_cache=kvc))
+    rep = eng.run(replay_trace([(0.0, 1000, 4), (0.0, 20, 4)]))
+    assert rep.rejected == 1 and rep.finished == 1
+    assert eng.kv_stats.infeasible_rejects == 1
+
+
+def test_chunked_prefill_bounds_decode_stall(cfg):
+    """A long prompt must not monopolize an iteration: with chunking the
+    resident stream's max inter-token gap collapses (the whole point),
+    while the total work only grows by the re-paid pipeline fills."""
+    rows = [(0.0, 64, 400), (0.001, 8192, 4)]
+
+    def run(chunk):
+        eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+            max_batch=4, chunked_prefill_tokens=chunk))
+        rep = eng.run(replay_trace(rows))
+        ts = [e.t0 for e in eng.timeline.events
+              if isinstance(e, TokenEmit) and e.request_id == 0]
+        return rep, max(b - a for a, b in zip(ts, ts[1:]))
+
+    rep_mono, gap_mono = run(0)
+    rep_chunk, gap_chunk = run(256)
+    assert rep_chunk.finished == rep_mono.finished == 2
+    assert gap_chunk < 0.25 * gap_mono
+    assert rep_mono.busy_s < rep_chunk.busy_s < 1.1 * rep_mono.busy_s
+
+
+def test_chunked_prefill_partial_is_preemptible(cfg):
+    """An in-flight chunked prefill holds KV blocks outside the slots;
+    when a lone resident's growth exhausts the cache it must be able to
+    evict the partial (recompute-on-resume) instead of crashing — the
+    same trace completes with chunking off, so it must with it on."""
+    kvc = KVCacheConfig(n_blocks=84, block_tokens=16,
+                        bytes_per_token=kv_bytes_per_token(cfg))
+    rows = [(0.0, 20, 600), (0.001, 1200, 8)]
+    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+        max_batch=4, kv_cache=kvc, chunked_prefill_tokens=16,
+        decode_quantum=4))
+    trace = replay_trace(rows)
+    rep = eng.run(trace)          # used to raise RuntimeError
+    assert rep.finished == 2 and rep.rejected == 0
+    assert eng.kv_stats.preemptions > 0
+    for r in trace:
+        assert r.generated == r.max_new
+        assert r.context == r.prompt_len + r.max_new
+    assert eng.kv.free_total() == eng.kv.cfg.total_blocks
+
+
+def test_chunked_prefill_cycles_compose(cfg):
+    """One whole-prompt chunk is EXACTLY the classic prefill (golden
+    identity); summed chunks cost slightly more (pipeline re-fill)."""
+    cm = CycleModel()
+    alloc = allocate_chiplets(cfg)
+    whole, whole_c2c = cm.prefill_cycles(cfg, alloc, 1024)
+    one, one_c2c = cm.prefill_chunk_cycles(cfg, alloc, 1024, 0)
+    assert (one, one_c2c) == (whole, whole_c2c)
+    tot = tot_c2c = 0
+    for off in range(0, 1024, 256):
+        c, b = cm.prefill_chunk_cycles(cfg, alloc, 256, off)
+        tot += c
+        tot_c2c += b
+    assert whole < tot < 1.1 * whole
+    assert tot_c2c == whole_c2c              # same activation traffic
+
+
+def test_rerunning_a_trace_is_idempotent(cfg):
+    """run() resets the mutable per-request state: the resume/recompute
+    paths branch on it, so a second run over the same TrackedRequest
+    objects must reproduce the first run's report exactly (with and
+    without paging)."""
+    for kvc in (None, _kvc(cfg, n_blocks=40)):
+        eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+            max_batch=4, kv_cache=kvc))
+        trace = replay_trace([(0.0, 100, 8), (0.01, 64, 8)])
+        r1 = eng.run(trace)
+        r2 = eng.run(trace)
+        assert r1.row() == r2.row()
+        assert r1.tokens_generated == r2.tokens_generated == 16
+
+
+def test_default_engine_has_no_kv_state(cfg):
+    eng = ContinuousBatchingEngine(cfg)
+    assert eng.kv is None and eng.kv_stats is None
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention kernel vs oracle (interpret mode, fast lane)
+# ---------------------------------------------------------------------------
+
+def _random_paged_case(seed, B=3, H=4, Hkv=2, D=64, bt=16, n_blocks=32,
+                       ctxs=(37, 16, 1)):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(n_blocks, bt, Hkv, D)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(n_blocks, bt, Hkv, D)), jnp.float32)
+    ctx = np.asarray(ctxs, np.int32)
+    max_blocks = max(-(-int(c) // bt) for c in ctxs)
+    tables = np.zeros((B, max_blocks), np.int32)
+    perm = rng.permutation(n_blocks)       # scattered physical blocks
+    off = 0
+    for b in range(B):
+        n = -(-int(ctx[b]) // bt)
+        tables[b, :n] = perm[off:off + n]
+        off += n
+    return q, kc, vc, tables, ctx
+
+
+def test_paged_attention_matches_oracle():
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    q, kc, vc, tables, ctx = _random_paged_case(0)
+    o = ops.paged_attention(q, kc, vc, jnp.asarray(tables),
+                            jnp.asarray(ctx))
+    r = ref.ref_paged_attention(q, kc, vc, tables, ctx)
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-5
+
+
+def test_paged_attention_gqa_and_ragged_contexts():
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    # context lengths straddle block boundaries; H == 8 over H_kv == 2
+    q, kc, vc, tables, ctx = _random_paged_case(
+        1, B=4, H=8, Hkv=2, D=32, bt=8, n_blocks=24, ctxs=(8, 9, 23, 1))
+    o = ops.paged_attention(q, kc, vc, jnp.asarray(tables),
+                            jnp.asarray(ctx))
+    r = ref.ref_paged_attention(q, kc, vc, tables, ctx)
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-5
+
+
+def test_paged_attention_ignores_stale_table_entries():
+    """Entries past ceil(ctx/bt) must never be read: poisoning them with
+    out-of-range garbage-free ids pointing at NaN blocks must not change
+    the output."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    q, kc, vc, tables, ctx = _random_paged_case(2)
+    used = {int(tables[b, i]) for b in range(tables.shape[0])
+            for i in range(-(-int(ctx[b]) // 16))}
+    poison = next(i for i in range(kc.shape[0]) if i not in used)
+    kc = kc.at[poison].set(jnp.nan)
+    vc = vc.at[poison].set(jnp.nan)
+    o1 = ops.paged_attention(q, kc, vc, jnp.asarray(tables),
+                             jnp.asarray(ctx))
+    poisoned = tables.copy()
+    for b in range(tables.shape[0]):
+        n = -(-int(ctx[b]) // 16)
+        poisoned[b, n:] = poison           # stale slots -> poison block
+    o2 = ops.paged_attention(q, kc, vc, jnp.asarray(poisoned),
+                             jnp.asarray(ctx))
+    assert bool(jnp.all(o1 == o2))
+    assert not bool(jnp.any(jnp.isnan(o1)))
+
+
+def test_paged_attention_pwl_close_to_scu_softmax():
+    """PWL mode: the online rescaling composes PWL segments across
+    blocks, so it approximates (not bit-matches) the dense one-pass SCU
+    softmax — bounded deviation, exact path unaffected."""
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    q, kc, vc, tables, ctx = _random_paged_case(3)
+    o = ops.paged_attention(q, kc, vc, jnp.asarray(tables),
+                            jnp.asarray(ctx), use_pwl=True)
+    r = ref.ref_paged_attention(q, kc, vc, tables, ctx, use_pwl=True)
+    assert float(jnp.max(jnp.abs(o - r))) < 0.05
+
+
+def test_paged_attention_matches_contiguous_flash_decode():
+    """Identity block table + contiguous cache == plain causal decode
+    attention over the same K/V (cross-check against the dense oracle of
+    the existing flash kernel)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(4)
+    B, H, D, bt, L = 2, 4, 32, 8, 40
+    n_blocks = L // bt * B + B
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, L, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, L, H, D)), jnp.float32)
+    # pack each sequence's K/V into consecutive blocks
+    nb = L // bt
+    kc = jnp.concatenate([k[b].reshape(nb, bt, H, D) for b in range(B)])
+    vc = jnp.concatenate([v[b].reshape(nb, bt, H, D) for b in range(B)])
+    tables = np.asarray([[b * nb + i for i in range(nb)]
+                         for b in range(B)], np.int32)
+    ctx = np.full((B,), L, np.int32)
+    o = ops.paged_attention(q[:, 0], kc, vc, jnp.asarray(tables),
+                            jnp.asarray(ctx))
+    # dense oracle: single query attending over the full context
+    r = ref.ref_flash_attention(q, k, v, causal=False)[:, 0]
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-5

@@ -263,6 +263,25 @@ def test_no_finishes_reports_nan_percentiles(cfg):
     assert np.isnan(rep.p50_ttft_s) and np.isnan(rep.p99_ttft_s)
 
 
+def test_all_rejected_row_is_json_safe(cfg):
+    """finished == 0 keeps NaN percentiles in the report (locked above),
+    but row() must map them to None: `json.dumps` would otherwise emit
+    bare `NaN` tokens that strict parsers (and the bench-regression
+    gate) reject."""
+    import json
+    rep = serve_trace(cfg, replay_trace([(0.0, 16, 4)]), max_batch=1,
+                      queue_limit=0)
+    assert rep.finished == 0
+    row = rep.row()
+    for k in ("p50_latency_s", "p99_latency_s", "p50_ttft_s",
+              "p99_ttft_s"):
+        assert row[k] is None
+    # a finished run keeps real numbers in the same keys
+    ok = serve_trace(cfg, replay_trace([(0.0, 16, 4)]), max_batch=1)
+    assert all(ok.row()[k] is not None for k in ok.row())
+    json.dumps(row, allow_nan=False)       # must not raise
+
+
 def test_prefill_only_request_generates_nothing(cfg):
     """max_new == 0 (scoring / prefill-only) must not emit a token."""
     rep = serve_trace(cfg, replay_trace([(0.0, 16, 0), (0.0, 16, 4)]),
