@@ -2,12 +2,27 @@
 vs the committed baseline.
 
 Compares ``artifacts/bench/BENCH_*.json`` (produced by ``benchmarks/run.py``
-in the same CI run) against ``artifacts/bench/baseline/BENCH_*.json``
-(committed to the repo).  Only *headline* metrics are gated — throughput
-(tok/s) and efficiency (tok/J) families, where higher is better; latency
-percentiles, byte counts and error percentages are informational.  The
-simulator is deterministic, so a >10% drop is a real modeling/scheduling
-regression, not machine noise.
+and ``benchmarks/microbench.py`` in the same CI run) against
+``artifacts/bench/baseline/BENCH_*.json`` (committed to the repo).  Only
+*headline* metrics are gated, DIRECTION-AWARE:
+
+  * higher-is-better families (throughput tok/s, efficiency tok/J,
+    speedups) fail when the current value drops >tolerance below the
+    baseline;
+  * lower-is-better families (``wall_ms`` wall clocks from the simulator
+    microbench) fail when the current value rises >tolerance ABOVE the
+    baseline.
+
+Wall-clock benches (any doc carrying a ``host_ops_per_s`` calibration,
+i.e. ``BENCH_speed.json``) are only compared when the baseline was
+recorded on a similar-speed host (within ``HOST_TOL``) AND on the same
+workload size (``smoke`` flag) — a slower CI runner is not a code
+regression.  On foreign hosts the microbench's own ``--min-speedup``
+floor is the (host-independent) gate.
+
+Everything else (latency percentiles, byte counts, error percentages) is
+informational.  The simulator itself is deterministic, so a >10% drop in
+a simulated metric is a real modeling/scheduling regression, not noise.
 
   python benchmarks/check_regression.py             # gate (exit 1 on fail)
   python benchmarks/check_regression.py --refresh   # accept current as baseline
@@ -34,6 +49,17 @@ BASELINE_DIR = BENCH_DIR / "baseline"
 HEADLINE = ("tokens_per_s", "tokens_per_J", "throughput_tok_s",
             "efficiency_tok_J", "speedup", "eff_impr",
             "paged_vs_infinite_tput")
+# lower-is-better families: real wall clocks (see microbench.py)
+LOWER_IS_BETTER = ("wall_ms",)
+# max relative host-calibration mismatch for wall-clock comparability
+HOST_TOL = 0.30
+# measured wall clocks jitter far more than the deterministic simulated
+# metrics even on one host (scheduler noise, neighbors, cache state —
+# observed same-host best-of-5 swings up to ~35%): wall-clock benches
+# gate at this floor tolerance instead — wide enough to ignore
+# run-to-run noise, tight enough to catch "the fast path lost its
+# speedup" (a real regression there is 3-15x, not 50%)
+WALL_BENCH_TOL = 0.50
 
 
 def _flatten(prefix: str, obj, out: dict) -> None:
@@ -44,11 +70,32 @@ def _flatten(prefix: str, obj, out: dict) -> None:
         out[prefix] = float(obj)
 
 
+def metric_direction(key: str) -> str:
+    """'lower' | 'higher' | '' (not a gated headline metric)."""
+    if any(h in key for h in LOWER_IS_BETTER):
+        return "lower"
+    if any(h in key for h in HEADLINE):
+        return "higher"
+    return ""
+
+
 def headline_metrics(doc: dict) -> dict:
     flat: dict = {}
     _flatten("", doc.get("metrics", {}), flat)
-    return {k: v for k, v in flat.items()
-            if any(h in k for h in HEADLINE)}
+    return {k: v for k, v in flat.items() if metric_direction(k)}
+
+
+def hosts_comparable(base_doc: dict, cur_doc: dict) -> bool:
+    """Wall clocks are only gated between runs on similar-speed hosts
+    and identical workload sizes; benches that carry no calibration are
+    always comparable (their metrics are simulated, not measured)."""
+    b = base_doc.get("host_ops_per_s")
+    c = cur_doc.get("host_ops_per_s")
+    if b is None or c is None or b <= 0:
+        return True
+    if base_doc.get("smoke") != cur_doc.get("smoke"):
+        return False
+    return abs(c / b - 1.0) <= HOST_TOL
 
 
 def compare(tolerance: float) -> int:
@@ -62,19 +109,44 @@ def compare(tolerance: float) -> int:
             failures.append(f"{base_path.name}: current run produced no "
                             f"artifact (bench removed or failed?)")
             continue
-        base = headline_metrics(json.loads(base_path.read_text()))
-        cur = headline_metrics(json.loads(cur_path.read_text()))
+        base_doc = json.loads(base_path.read_text())
+        cur_doc = json.loads(cur_path.read_text())
+        base = headline_metrics(base_doc)
+        cur = headline_metrics(cur_doc)
+        if not hosts_comparable(base_doc, cur_doc):
+            # every metric in a wall-clock bench is host-sensitive
+            # (speedup ratios included) — the microbench's own
+            # --min-speedup floor gates foreign hosts instead
+            print(f"{base_path.name}: host calibration / workload "
+                  f"differs (host_ops_per_s "
+                  f"{base_doc.get('host_ops_per_s')} vs "
+                  f"{cur_doc.get('host_ops_per_s')}, smoke "
+                  f"{base_doc.get('smoke')} vs {cur_doc.get('smoke')}); "
+                  f"skipping its wall-clock gates")
+            continue
+        tol = tolerance
+        if base_doc.get("host_ops_per_s") is not None:
+            tol = max(tolerance, WALL_BENCH_TOL)
         for key, b in sorted(base.items()):
+            direction = metric_direction(key)
             if key not in cur:
                 failures.append(f"{base_path.name}:{key}: metric vanished")
                 continue
             checked += 1
             c = cur[key]
-            if b > 0 and c < (1.0 - tolerance) * b:
+            if b <= 0:
+                continue
+            if direction == "higher" and c < (1.0 - tol) * b:
                 failures.append(
                     f"{base_path.name}:{key}: {c:.4g} < "
-                    f"{(1 - tolerance) * b:.4g} "
+                    f"{(1 - tol) * b:.4g} "
                     f"(baseline {b:.4g}, -{100 * (1 - c / b):.1f}%)")
+            elif direction == "lower" and c > (1.0 + tol) * b:
+                failures.append(
+                    f"{base_path.name}:{key}: {c:.4g} > "
+                    f"{(1 + tol) * b:.4g} "
+                    f"(baseline {b:.4g}, +{100 * (c / b - 1):.1f}% "
+                    f"wall-clock slowdown)")
     for cur_path in sorted(BENCH_DIR.glob("BENCH_*.json")):
         if not (BASELINE_DIR / cur_path.name).exists():
             new.append(cur_path.name)

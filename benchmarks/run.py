@@ -477,7 +477,9 @@ def export_trace(path):
     """--trace-out: export a chrome://tracing JSON of one dynamic-CCPG
     Llama-1B 512/64 walk — every TimelineIR category (ComputeSpan,
     C2CTransfer, ClusterWake, ClusterSleep, EnergySample, TokenEmit) in
-    one trace.  Open with chrome://tracing or ui.perfetto.dev."""
+    one trace.  Open with chrome://tracing or ui.perfetto.dev.  The
+    export STREAMS (Timeline.dump_chrome_trace): no materialized event
+    list, so million-event traces stay in constant memory."""
     from repro.configs import get_config
     from repro.core import PicnicSimulator, Timeline
     t0 = time.time()
@@ -486,7 +488,7 @@ def export_trace(path):
     sim.run(get_config("llama3.2-1b"), 512, 64, ccpg=True,
             dynamic_ccpg=True, timeline=tl)
     tl.save_chrome_trace(path)
-    _emit("trace_export", t0, f"events={len(tl.events)}_path={path}")
+    _emit("trace_export", t0, f"events={tl.n_events}_path={path}")
 
 
 BENCHES = {

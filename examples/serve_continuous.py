@@ -10,6 +10,7 @@ without CCPG (chiplet clustering & power gating, paper §II-E), plus the
   PYTHONPATH=src python examples/serve_continuous.py
 """
 import sys
+import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
@@ -31,9 +32,16 @@ reports = {}
 for ccpg in (False, True):
     trace = poisson_trace(N_REQUESTS, RATE_RPS, seed=0,
                           prompt_len=PROMPT_LEN, max_new=MAX_NEW)
+    t0 = time.perf_counter()
     rep = serve_trace(cfg, trace, max_batch=MAX_BATCH, ccpg=ccpg)
+    wall = time.perf_counter() - t0
     reports[ccpg] = rep
     print(rep.summary())
+    sim_tokens = rep.tokens_generated + rep.tokens_prefilled
+    print(f"  engine speed      {sim_tokens / wall / 1e6:.1f}M simulated "
+          f"tokens per wall-second ({wall * 1e3:.0f} ms, single cold "
+          f"run; benchmarks/microbench.py measures the warmed fast-vs-"
+          f"reference comparison)")
     print()
 
 # the 1-at-a-time baseline on the SAME trace (what launch/serve.py's

@@ -67,7 +67,8 @@ for label, kw in [("ccpg static ", dict(ccpg=True)),
     if kw.get("dynamic_ccpg"):
         eng_trace = OUT / "serving_dynamic_ccpg.json"
         eng.timeline.save_chrome_trace(eng_trace, process_name="picnic-serve")
-        print(f"  -> {eng_trace} ({len(eng.timeline.events)} events)")
+        print(f"  -> {eng_trace} ({eng.timeline.n_events} events, "
+              f"streamed — no materialized event list)")
         d = json.loads(eng_trace.read_text())
         cats = {e.get("cat") for e in d["traceEvents"]}
         assert {c.__name__ for c in EVENT_CATEGORIES} <= cats

@@ -51,7 +51,9 @@ class CCPGModel:
     def wake_overhead_cycles(self, alloc: ChipletAllocation) -> int:
         """Per decode token: each cluster transition wakes the next cluster.
         Wake-up is overlapped with the previous cluster's tail compute
-        (pre-wake one cluster ahead), leaving a small exposed residue."""
+        (pre-wake one cluster ahead), leaving a small exposed residue.
+        (Cheap arithmetic on purpose — the serving engine snapshots the
+        residue once per run rather than calling this per iteration.)"""
         n_transitions = max(0, alloc.n_clusters - 1)
         exposed = max(0, self.wake_cycles - 2000)   # pre-wake hides ~2us
         return n_transitions * exposed + n_transitions * 16  # ctrl overhead

@@ -19,8 +19,9 @@ Table II.
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from .energy import TileSpec
 from .mapping import map_layer
@@ -146,6 +147,14 @@ class CycleModel:
     mesh: MeshConfig = field(default_factory=MeshConfig)
     pe: PEArraySpec = field(default_factory=PEArraySpec)
     alpha: float = 1.0
+    # Memoize per-shape cycle costs (the serving fast path).  The decode
+    # cost of one iteration depends only on (batch, sum(contexts)) given
+    # an allocation, and is AFFINE in sum(contexts) — verified against
+    # the direct layer walk at cache-fill time, so a subclass with a
+    # non-affine override transparently falls back to the walk.  All
+    # calibration constants participate in the cache key, so mutating
+    # `alpha` & friends (tests do) can never serve a stale entry.
+    memoize: bool = True
     # --- calibrated constants (least-squares fit on the nine Table II rows;
     #     all rows reproduced within +-7%, see EXPERIMENTS.md) -------------
     # 1. Per-token SMAC cost: 'cycles_per_tile' per active 256x256 crossbar
@@ -172,6 +181,40 @@ class CycleModel:
     #    tile pipeline).  KV-scratchpad reads and C2C activation traffic do
     #    NOT amortize: every request owns its context.
     batch_issue_frac: float = 0.18
+
+    # the decode affinity check probes the direct walk at these ctx sums;
+    # a mismatch at any of them marks the (alloc, b) entry non-affine
+    _AFFINE_PROBES = (1, 1009, 65537)
+    _DECODE_MEMO_MAX = 256
+    _PREFILL_MEMO_MAX = 4096
+    # any assignment to these invalidates the memo (via the version
+    # stamp baked into every cache key); mutating a nested MeshConfig /
+    # PEArraySpec IN PLACE is not observable — replace the object instead
+    _CALIBRATION_FIELDS = frozenset({
+        "mesh", "pe", "alpha", "cycles_per_tile", "ctx_cycles_per_pos",
+        "layer_fixed_cycles", "softmax_overhead", "c2c_bytes_per_cycle",
+        "c2c_latency", "batch_issue_frac"})
+
+    def __setattr__(self, name, value):
+        object.__setattr__(self, name, value)
+        if name in self._CALIBRATION_FIELDS:
+            # bump the memo-key version; tests mutate alpha & friends
+            # freely and must never see a stale cached cost
+            object.__setattr__(self, "_cal_ver",
+                               getattr(self, "_cal_ver", 0) + 1)
+            object.__setattr__(self, "_decode_hot", None)
+
+    def __post_init__(self):
+        # (key) -> (base_cycles, n_attn | None, c2c_cyc, c2c_bytes, alloc)
+        # and (key) -> ((cycles, c2c_bytes), alloc); the alloc strong ref
+        # pins id(alloc) for the lifetime of its entries
+        self._decode_memo: "OrderedDict" = OrderedDict()
+        self._decode_hot: Optional[tuple] = None   # last (key, entry)
+        self._prefill_memo: "OrderedDict" = OrderedDict()
+        object.__setattr__(self, "_cal_ver", getattr(self, "_cal_ver", 0))
+
+    def _decode_key(self, cfg, alloc: ChipletAllocation, b: int) -> tuple:
+        return (id(alloc), cfg.d_model, b, self._cal_ver)
 
     def smac_cycles(self, ld: LayerDesc) -> int:
         return int(self.cycles_per_tile * layer_tiles(ld, self.pe))
@@ -249,19 +292,99 @@ class CycleModel:
 
     def batched_token_decode_cycles_split(
             self, cfg, alloc: ChipletAllocation,
-            contexts: List[int]) -> Tuple[int, int, int]:
+            contexts: Sequence[int]) -> Tuple[int, int, int]:
         """(compute_cycles, c2c_cycles, c2c_bytes) — the pre-``alpha``
         decomposition of one batched decode iteration, separating the
         layer compute wave from the chiplet-boundary C2C transfers so
-        the timeline layer can model compute/C2C overlap explicitly."""
+        the timeline layer can model compute/C2C overlap explicitly.
+
+        ``contexts`` may be any sequence (list or numpy array — the SoA
+        serving engine passes its context column directly).  With
+        ``memoize`` on, the O(layers) walk runs once per distinct
+        ``(alloc, batch)`` shape; every later call is an O(1) affine
+        lookup in ``sum(contexts)`` — bit-identical to the walk, which
+        adds one independently truncated ``int(ctx_cycles_per_pos *
+        ctx_sum)`` term per attention layer."""
         b = len(contexts)
         if b == 0:
             return 0, 0, 0
+        ctx_sum = int(contexts.sum()) if hasattr(contexts, "sum") \
+            else sum(contexts)
+        if not self.memoize:
+            return self._decode_split_walk(cfg, alloc, ctx_sum, b)
+        key = self._decode_key(cfg, alloc, b)
+        hot = self._decode_hot            # last (key, entry): the serving
+        if hot is not None and hot[0] == key:  # loop repeats one shape
+            entry = hot[1]
+            base, n_attn, c2c_cyc, c2c_bytes, _ = entry
+            if n_attn is not None:
+                return (base
+                        + n_attn * int(self.ctx_cycles_per_pos * ctx_sum),
+                        c2c_cyc, c2c_bytes)
+        memo = self._decode_memo
+        entry = memo.get(key)
+        if entry is None:
+            base, c2c_cyc, c2c_bytes = \
+                self._decode_split_walk(cfg, alloc, 0, b)
+            n_attn = sum(1 for ld, _ in alloc.assignments
+                         if ld.kind == "attn")
+            affine = all(
+                self._decode_split_walk(cfg, alloc, p, b)[0]
+                == base + n_attn * int(self.ctx_cycles_per_pos * p)
+                for p in self._AFFINE_PROBES)
+            entry = (base, n_attn if affine else None, c2c_cyc,
+                     c2c_bytes, alloc)
+            memo[key] = entry
+            while len(memo) > self._DECODE_MEMO_MAX:
+                memo.popitem(last=False)
+        else:
+            memo.move_to_end(key)
+        self._decode_hot = (key, entry)
+        base, n_attn, c2c_cyc, c2c_bytes, _ = entry
+        if n_attn is None:      # non-affine subclass: direct walk
+            return self._decode_split_walk(cfg, alloc, ctx_sum, b)
+        return (base + n_attn * int(self.ctx_cycles_per_pos * ctx_sum),
+                c2c_cyc, c2c_bytes)
+
+    def decode_affine(self, cfg, alloc: ChipletAllocation, b: int
+                      ) -> Optional[Tuple[int, int, int, float, float, int]]:
+        """Fast-path export of the memoized decode decomposition:
+        ``(base_cycles, n_attn, c2c_bytes, ctx_cycles_per_pos, alpha,
+        cal_ver)`` such that one batch-``b`` iteration costs exactly
+
+            int((base_cycles + n_attn * int(ctx_cycles_per_pos
+                                            * sum(contexts))) * alpha)
+
+        pre-CCPG cycles (``base_cycles`` already folds the serialized C2C
+        transfer cycles in).  The serving engine inlines this as plain
+        arithmetic in its round loop; the snapshot is valid while the
+        returned ``cal_ver`` equals the model's current one.  ``None``
+        when memoization is off or a subclass made the cost non-affine —
+        callers must fall back to :meth:`batched_token_decode_cycles`."""
+        if not self.memoize or b <= 0:
+            return None
+        key = self._decode_key(cfg, alloc, b)
+        hot = self._decode_hot
+        entry = hot[1] if (hot is not None and hot[0] == key) \
+            else self._decode_memo.get(key)
+        if entry is None:
+            self._decode_hot = None      # force split() to (re)build
+            self.batched_token_decode_cycles_split(cfg, alloc, [0] * b)
+            entry = self._decode_memo[key]
+        base, n_attn, c2c_cyc, c2c_bytes, _ = entry
+        if n_attn is None:
+            return None
+        return (base + c2c_cyc, n_attn, c2c_bytes,
+                self.ctx_cycles_per_pos, self.alpha, self._cal_ver)
+
+    def _decode_split_walk(self, cfg, alloc: ChipletAllocation,
+                           ctx_sum: int, b: int) -> Tuple[int, int, int]:
+        """The direct per-layer walk (the reference path memoization is
+        verified against)."""
         compute_cyc = 0
         c2c_cyc = 0
         c2c_bytes = 0
         d = cfg.d_model
-        ctx_sum = sum(contexts)
         prev_chips: Optional[List[int]] = None
         for ld, chips in alloc.assignments:
             compute_cyc += self.layer_decode_cycles_batched(ld, ctx_sum, b)
@@ -295,7 +418,29 @@ class CycleModel:
         (new queries attending to cached context) on top of the causal
         triangle within the chunk.  Each chunk re-pays the pipeline fill;
         summing chunks therefore costs slightly MORE than one monolithic
-        prefill — the price of interleaving."""
+        prefill — the price of interleaving.
+
+        LRU-memoized on the exact ``(chunk, ctx_before)`` shape (the
+        quadratic attention term has no affine shortcut): the serving
+        engine re-prices the queue head's prefill every admission check,
+        so repeated shapes dominate."""
+        if self.memoize:
+            key = (id(alloc), cfg.d_model, cfg.q_dim, chunk, ctx_before,
+                   self._cal_ver)
+            memo = self._prefill_memo
+            entry = memo.get(key)
+            if entry is not None:
+                memo.move_to_end(key)
+                return entry[0]
+            result = self._prefill_chunk_walk(cfg, alloc, chunk, ctx_before)
+            memo[key] = (result, alloc)
+            while len(memo) > self._PREFILL_MEMO_MAX:
+                memo.popitem(last=False)
+            return result
+        return self._prefill_chunk_walk(cfg, alloc, chunk, ctx_before)
+
+    def _prefill_chunk_walk(self, cfg, alloc: ChipletAllocation,
+                            chunk: int, ctx_before: int) -> Tuple[int, int]:
         d = cfg.d_model
         stages = len(alloc.assignments)
         # Prefill is token-PIPELINED through the chiplet chain (weight

@@ -40,8 +40,19 @@ prompts over several iterations.  The default (``kv_cache=None``,
 capacity unbounded) stays byte-identical to the pre-paging engine —
 locked by tests/golden/timeline_golden.json.
 
-Pure Python + numpy on top of ``repro.core`` — no JAX import, so a
-64-request trace simulates in well under a second.
+Pure Python + numpy on top of ``repro.core`` — no JAX import.  The
+iteration loop is the repo's FAST SIMULATION CORE (ISSUE 5): slot state
+lives in structure-of-arrays form (a numpy admit-seq column whose argmax
+picks preemption victims, parallel slot-ordered active index/request/id/
+context-offset lists, a running resident-context sum, an O(1)
+request-id -> slot map, and a deferred-finish heap on the capacity-
+unbounded path), per-iteration cycle costs come from the memoized
+`CycleModel` (one O(layers) walk per distinct batch shape, O(1) affine
+lookups after), and every event lands in the columnar TimelineIR
+recorder — all byte-identical to the reference object path
+(`EngineConfig.columnar_timeline=False` + `CycleModel(memoize=False)`),
+locked by tests/test_fastpath.py and measured by
+benchmarks/microbench.py.
 
   PYTHONPATH=src python examples/serve_continuous.py
 """
@@ -49,7 +60,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from bisect import bisect_left
 from collections import deque
+from heapq import heappop, heappush
 from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -95,7 +108,9 @@ def poisson_trace(n_requests: int, rate_rps: float, *, seed: int = 0,
                   deadline_ttft: Optional[float] = None
                   ) -> List[TrackedRequest]:
     """Open-loop Poisson arrivals at ``rate_rps`` requests/second, with
-    prompt lengths jittered uniformly by +-``prompt_jitter``."""
+    prompt lengths jittered uniformly by +-``prompt_jitter``.  Arrivals
+    are monotone by construction (cumulative exponential gaps), so
+    ``run()`` never has to re-sort this trace."""
     rng = np.random.default_rng(seed)
     t = 0.0
     out: List[TrackedRequest] = []
@@ -114,7 +129,9 @@ def replay_trace(rows: Iterable) -> List[TrackedRequest]:
     """Replay recorded arrivals.  ``rows`` are ``(arrival_s, prompt_len,
     max_new)`` or ``(arrival_s, prompt_len, max_new, deadline_ttft)``
     tuples, or dicts with those keys (``deadline_ttft`` optional in both
-    forms)."""
+    forms).  The returned trace is sorted by arrival ONCE here (stable,
+    after request ids are assigned in row order) so every ``run()``
+    re-use skips the per-run re-sort."""
     out: List[TrackedRequest] = []
     for i, row in enumerate(rows):
         if isinstance(row, dict):
@@ -130,6 +147,7 @@ def replay_trace(rows: Iterable) -> List[TrackedRequest]:
                 arrival=float(arrival), request_id=i,
                 prompt_len=int(prompt_len), max_new=int(max_new),
                 deadline_ttft=None if deadline is None else float(deadline)))
+    out.sort()          # stable on arrival — same order `sorted()` gave
     return out
 
 
@@ -154,6 +172,11 @@ class EngineConfig:
     # of at most this many tokens, one chunk per engine iteration, so a
     # long prompt cannot monopolize an iteration (0 = off)
     chunked_prefill_tokens: int = 0
+    # columnar TimelineIR recording (the fast simulation core).  False
+    # restores the one-dataclass-per-append reference recorder — both
+    # are byte-identical (tests/test_fastpath.py); the toggle exists for
+    # the equivalence tests and the microbench before/after measurement.
+    columnar_timeline: bool = True
 
 
 @dataclasses.dataclass
@@ -268,6 +291,10 @@ class ContinuousBatchingEngine:
         # static mode folds the pre-wake residue into the iteration cost;
         # dynamic mode charges the full walk as ClusterWake events instead
         self._residue_ccpg = self.engine.ccpg and not self.engine.dynamic_ccpg
+        self._dyn_wake = self.engine.ccpg and self.engine.dynamic_ccpg
+        self._bandwidth_Bps = self.sim.link.bandwidth_Bps
+        self._cm = self.sim.cycle_model
+        self._decode_names: Dict[int, str] = {}   # b -> "decode:b{b}"
         self.reset()
 
     # ------------------------------------------------------------------
@@ -275,9 +302,59 @@ class ContinuousBatchingEngine:
         e = self.engine
         # ALL time/energy accounting lives in the TimelineIR accumulator —
         # the engine appends per-round events and never charges privately
-        self.timeline = Timeline(link=self.sim.link)
+        self.timeline = Timeline(link=self.sim.link,
+                                 columnar=e.columnar_timeline)
         self.queue: Deque[TrackedRequest] = deque()
         self.slots: List[Optional[TrackedRequest]] = [None] * e.max_batch
+        # -- SoA mirrors of the slot table (the fast-path state): the
+        # per-iteration decisions read these columns and running
+        # aggregates instead of walking the request-object list.
+        #   _seq_col              per-slot admit-seq column (victim pick =
+        #                         one argmax; -1 encodes a free slot)
+        #   _active_idx           sorted occupied-slot indices (the round's
+        #                         iteration order, no occupancy scan)
+        #   _ctx_sum              running sum of resident contexts (the
+        #                         batched cycle model's only context input)
+        #   _slot_of              O(1) request-id -> slot map replacing the
+        #                         `next(i for i, s ...)` identity scans
+        self._seq_col = np.full(e.max_batch, -1, dtype=np.int64)
+        # _active_idx / _active_reqs / _active_rids / _active_ctx0 are
+        # PARALLEL lists in slot order — the decode round reads them
+        # directly instead of rebuilding per-round comprehensions over
+        # `slots`.  _active_ctx0 holds each resident's context MINUS the
+        # round counter at admission: every resident gains one context
+        # token per round, so its exact current context is
+        # ``ctx0 + _round_no`` at any time — no per-round writes needed
+        # to hand the cycle-model fallback a real per-request list.
+        self._active_idx: List[int] = []
+        self._active_reqs: List[TrackedRequest] = []
+        self._active_rids: List[int] = []
+        self._active_ctx0: List[int] = []
+        self._ctx_sum = 0
+        self._slot_of: Dict[int, int] = {}
+        # deferred-finish schedule (capacity-unbounded path only): decode
+        # is preemption-free and every resident advances one token per
+        # round, so a request admitted with `k` tokens to go finishes in
+        # EXACTLY `k` rounds — (finish_round, slot) entries in a heap
+        # replace the per-round per-resident countdown, and the request
+        # object's generated/context are synced (to their exact final
+        # values) at finish.  The paged path keeps per-round object
+        # updates: preemption reads resident state mid-flight.
+        self._round_no = 0
+        self._finish_heap: List[Tuple[int, int]] = []
+        # decode-cost affine snapshot per batch size (see CycleModel
+        # .decode_affine): valid at overlap == 0, revalidated against the
+        # model's calibration version every round, with the CCPG residue
+        # and clock frequency snapshotted per run
+        self._affine_by_b: Dict[int, tuple] = {}
+        self._use_affine = e.overlap == 0.0
+        self._residue_cyc = (self.sim.ccpg_model.wake_overhead_cycles(
+            self.alloc) if self._residue_ccpg else 0)
+        self._freq_hz = self.sim.tile.frequency_hz
+        # cleared by run() when no request in the trace carries a TTFT
+        # deadline (the at-risk test is then statically False); direct
+        # step() drivers keep the full per-iteration check
+        self._any_deadline = True
         self.decode_credit = 0
         self.rejected = 0
         self.events: List[Tuple[float, EventKind, int]] = []
@@ -315,14 +392,39 @@ class ContinuousBatchingEngine:
             infeasible_rejects=self._kv_rejected_infeasible)
 
     # ------------------------------------------------------------------
+    # SoA slot bookkeeping: `slots` (request objects) and the numpy
+    # columns are updated together through these two helpers only.
+    def _slot_occupy(self, i: int, req: TrackedRequest) -> None:
+        self.slots[i] = req
+        self._seq_col[i] = req.admit_seq
+        pos = bisect_left(self._active_idx, i)
+        self._active_idx.insert(pos, i)
+        self._active_reqs.insert(pos, req)
+        self._active_rids.insert(pos, req.request_id)
+        self._active_ctx0.insert(pos, req.context - self._round_no)
+        self._ctx_sum += req.context
+        self._slot_of[req.request_id] = i
+
+    def _slot_release(self, i: int) -> TrackedRequest:
+        req = self.slots[i]
+        self.slots[i] = None
+        self._seq_col[i] = -1
+        pos = bisect_left(self._active_idx, i)
+        del self._active_idx[pos]
+        del self._active_reqs[pos]
+        del self._active_rids[pos]
+        del self._active_ctx0[pos]
+        self._ctx_sum -= req.context
+        del self._slot_of[req.request_id]
+        return req
+
     def _free_slot(self) -> Optional[int]:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                return i
-        return None
+        if len(self._active_idx) == len(self.slots):
+            return None
+        return self.slots.index(None)      # C-level scan: lowest free slot
 
     def _active(self) -> List[TrackedRequest]:
-        return [s for s in self.slots if s is not None]
+        return list(self._active_reqs)
 
     def _wake_walk(self) -> None:
         """Dynamic CCPG: the iteration's cluster walk pays the FULL wake
@@ -342,19 +444,20 @@ class ContinuousBatchingEngine:
                           dur_s=self.sim.kv_transfer_seconds(nbytes))
 
     def _admit_arrivals(self, pending: Deque[TrackedRequest]) -> None:
-        while pending and pending[0].arrival <= self.clock:
+        now = self.timeline.now
+        while pending and pending[0].arrival <= now:
             req = pending.popleft()
             if self.kv is not None and not self.kv.feasible(
                     req.prompt_len + max(req.max_new, 1)):
                 # could never fit, even with the whole cache to itself
                 self.rejected += 1
                 self._kv_rejected_infeasible += 1
-                self.events.append((self.clock, EventKind.REJECT,
+                self.events.append((now, EventKind.REJECT,
                                     req.request_id))
                 continue
             if len(self.queue) >= self.engine.queue_limit:
                 self.rejected += 1
-                self.events.append((self.clock, EventKind.REJECT,
+                self.events.append((now, EventKind.REJECT,
                                     req.request_id))
                 continue
             self.queue.append(req)
@@ -371,12 +474,15 @@ class ContinuousBatchingEngine:
         need = head.prompt_len + head.generated + 1
         # (only reached with no chunked prefill in flight: step() keeps
         # the prefill pipeline for the partial and skips this check)
-        reserve = self.kv.cfg.watermark_blocks if self._active() else 0
+        reserve = self.kv.cfg.watermark_blocks if self._active_idx else 0
         return self.kv.can_admit(need, reserve=reserve)
 
     def _deadline_at_risk(self) -> bool:
         head = self.queue[0] if self.queue else None
-        if head is None:
+        if head is None or head.deadline_ttft is None:
+            # deadline-free heads short-circuit BEFORE pricing the
+            # prefill: `deadline_at_risk` would discard it anyway, and
+            # this check runs on every admission-eligible iteration
             return False
         dt, _ = self.sim.prefill_seconds(
             self.cfg, self.alloc, head.prompt_len + head.generated,
@@ -407,7 +513,7 @@ class ContinuousBatchingEngine:
                 t0 = self.timeline.now
                 self.timeline.compute(
                     dt, kind="prefill", power_W=self._busy_power,
-                    batch=len(self._active()) + 1,
+                    batch=len(self._active_idx) + 1,
                     name=f"prefill:r{req.request_id}")
                 if c2c:
                     # burst rides under the compute wave: anchor at start
@@ -424,7 +530,7 @@ class ContinuousBatchingEngine:
         self._wake_walk()
         t0 = self.timeline.now
         self.timeline.compute(dt, kind="prefill", power_W=self._busy_power,
-                              batch=len(self._active()) + 1,
+                              batch=len(self._active_idx) + 1,
                               name=f"prefill:r{req.request_id}@{done}")
         if c2c:
             self.timeline.c2c(c2c, phase="prefill", t0=t0,
@@ -469,7 +575,11 @@ class ContinuousBatchingEngine:
         else:
             req.admit_seq = self._admit_counter
             self._admit_counter += 1
-            self.slots[slot] = req
+            self._slot_occupy(slot, req)
+            if self.kv is None:
+                heappush(self._finish_heap,
+                         (self._round_no + req.max_new - req.generated,
+                          slot))
         self.decode_credit = 0
 
     # -- paged-KV round bookkeeping ------------------------------------
@@ -489,14 +599,18 @@ class ContinuousBatchingEngine:
     def _preempt_one(self, exclude: int = -1) -> bool:
         """Evict the most-recently-admitted resident (vLLM recompute
         policy): free its blocks, return it to the queue FRONT; its KV is
-        recomputed at re-prefill."""
-        cands = [r for r in self.slots
-                 if r is not None and r.request_id != exclude]
-        if cands:
-            victim = max(cands, key=lambda r: r.admit_seq)
-            # identity, not ==: dataclass eq compares arrival times only
-            idx = next(i for i, s in enumerate(self.slots) if s is victim)
-            self.slots[idx] = None
+        recomputed at re-prefill.  The victim is argmax over the SoA
+        admit-seq column (unoccupied slots carry -1), and `_slot_of`
+        resolves the excluded request in O(1) — no object-identity scan.
+        """
+        seqs = self._seq_col
+        excl_slot = self._slot_of.get(exclude, -1)
+        if excl_slot >= 0:
+            seqs = seqs.copy()
+            seqs[excl_slot] = -1
+        idx = int(seqs.argmax())
+        if seqs[idx] >= 0:
+            victim = self._slot_release(idx)
             self.kv.free(victim.request_id)
             self._preemptions += 1
             self.queue.appendleft(victim)
@@ -544,32 +658,61 @@ class ContinuousBatchingEngine:
                     or len(active) <= 1):
                 break
             self._preempt_one()
-        for r in list(self._active()):
+        for r in self._active():
             self._kv_ensure(r, r.context + 1)
 
     def _decode_round(self) -> None:
         if self.kv is not None:
             self._kv_prepare_round()
-        active = self._active()
-        if not active:        # everything was preempted back to the queue
+        if not self._active_idx:  # everything was preempted back to the queue
             return
-        contexts = [r.context for r in active]
-        dt, c2c = self.sim.decode_iteration_seconds(
-            self.cfg, self.alloc, contexts, ccpg=self._residue_ccpg,
-            overlap=self.engine.overlap)
-        self._wake_walk()
-        t0 = self.timeline.now
-        self.timeline.compute(dt, kind="decode", power_W=self._busy_power,
-                              batch=len(active), name=f"decode:b{len(active)}")
+        b = len(self._active_idx)
+        # the cycle model only needs (batch, sum of contexts) — both are
+        # running SoA aggregates.  At overlap == 0 the memoized affine
+        # decomposition is inlined as plain arithmetic (bit-identical to
+        # the decode_iteration_seconds chain, which remains the fallback
+        # for overlap > 0 / memoization off / non-affine subclasses).
+        aff = self._affine_by_b.get(b) if self._use_affine else None
+        cm = self._cm
+        if aff is None or aff[5] != cm._cal_ver:
+            aff = cm.decode_affine(self.cfg, self.alloc, b) \
+                if self._use_affine else None
+            if aff is not None:
+                self._affine_by_b[b] = aff
+        if aff is not None:
+            base, n_attn, c2c, cpp, alpha, _ = aff
+            cyc = base + n_attn * int(cpp * self._ctx_sum)
+            cyc = int(cyc * alpha)
+            dt = (cyc + self._residue_cyc) / self._freq_hz
+        else:
+            # real per-request contexts for the fallback (a CycleModel
+            # subclass may legitimately iterate them): every resident
+            # gains one token per round, so ctx0 + round counter is the
+            # exact current value — no per-round bookkeeping needed
+            rn = self._round_no
+            contexts = [c + rn for c in self._active_ctx0]
+            dt, c2c = self.sim.decode_iteration_seconds(
+                self.cfg, self.alloc, contexts,
+                ccpg=self._residue_ccpg, overlap=self.engine.overlap)
+        if self._dyn_wake:
+            self._wake_walk()
+        tl = self.timeline
+        name = self._decode_names.get(b)
+        if name is None:
+            name = self._decode_names[b] = f"decode:b{b}"
+        t0 = tl.now
+        tl.compute(dt, kind="decode", power_W=self._busy_power,
+                   batch=b, name=name)
         if c2c:
-            self.timeline.c2c(c2c, phase="decode", t0=t0,
-                              dur_s=c2c / self.sim.link.bandwidth_Bps)
+            tl.c2c(c2c, phase="decode", t0=t0,
+                   dur_s=c2c / self._bandwidth_Bps)
         if self.kv is not None:
             # DRAM-resident context is re-read over the photonic link
             # every iteration: an EXPOSED remote-memory stall (advancing
             # C2C) — the cost Sangam/Photonic-Fabric price for the tier
-            fetch = sum(self.kv.dram_tokens(r.request_id)
-                        for r in active) * self.kv.cfg.bytes_per_token
+            fetch = sum(self.kv.dram_tokens(self.slots[i].request_id)
+                        for i in self._active_idx) \
+                * self.kv.cfg.bytes_per_token
             if fetch:
                 # the chiplets keep burning busy power while stalled
                 self.timeline.c2c(fetch, phase="kv_fetch",
@@ -577,25 +720,48 @@ class ContinuousBatchingEngine:
                                   advance=True, power_W=self._busy_power)
                 self._kv_fetch_bytes += fetch
         self.decode_credit += 1
-        self.events.append((self.clock, EventKind.DECODE, -1))
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            req.generated += 1
+        clock = tl.now
+        events = self.events
+        events.append((clock, EventKind.DECODE, -1))
+        # batched timeline append: one TokenEmit per resident, C-level
+        # column extends (stream-identical to per-request token() calls)
+        tl.token_each(self._active_rids)
+        self._ctx_sum += b                  # every resident grew by one
+        rn = self._round_no = self._round_no + 1
+        kv = self.kv
+        if kv is None:
+            # deferred finish: pop exactly the residents whose countdown
+            # elapsed this round (slot-ordered ties match the old loop)
+            # and sync their objects to the exact final values
+            heap = self._finish_heap
+            while heap and heap[0][0] <= rn:
+                i = heappop(heap)[1]
+                req = self.slots[i]
+                req.generated = req.max_new
+                req.context = req.prompt_len + req.max_new
+                req.finished_at = clock
+                events.append((clock, EventKind.FINISH, req.request_id))
+                self._slot_release(i)
+            return
+        # paged path: preemption can interrupt any resident mid-decode,
+        # so per-round object state must stay exact
+        act_list = list(self._active_idx)   # copies: releases mutate them
+        residents = list(self._active_reqs)
+        for i, req in zip(act_list, residents):
+            gen = req.generated = req.generated + 1
             req.context += 1
-            self.timeline.token(1, request_id=req.request_id)
-            if req.generated >= req.max_new:
-                req.finished_at = self.clock
-                self.events.append((self.clock, EventKind.FINISH,
-                                    req.request_id))
-                self.slots[i] = None
-                if self.kv is not None:
-                    self.kv.free(req.request_id)
+            if gen >= req.max_new:
+                req.finished_at = clock
+                events.append((clock, EventKind.FINISH, req.request_id))
+                self._slot_release(i)
+                kv.free(req.request_id)
 
     def step(self, pending: Deque[TrackedRequest]) -> EventKind:
         """One engine iteration; returns what was scheduled."""
-        self._admit_arrivals(pending)
-        self.queue_depth.append((self.clock, len(self.queue)))
+        now = self.timeline.now
+        if pending and pending[0].arrival <= now:
+            self._admit_arrivals(pending)
+        self.queue_depth.append((now, len(self.queue)))
 
         if self._partial is not None:
             # an in-flight chunked prefill owns the prefill pipeline (and
@@ -608,15 +774,16 @@ class ContinuousBatchingEngine:
         else:
             slot = self._free_slot()
             want_prefill = (bool(self.queue) and slot is not None
-                            and self._kv_can_admit())
-            must_prefill = want_prefill and self._deadline_at_risk()
+                            and (self.kv is None or self._kv_can_admit()))
+            must_prefill = (want_prefill and self._any_deadline
+                            and self._deadline_at_risk())
         may_prefill = want_prefill and (
             self.decode_credit >= self.engine.decode_quantum
-            or not self._active())
+            or not self._active_idx)
         if must_prefill or may_prefill:
             self._prefill(slot)
             return EventKind.PREFILL
-        if self._active():
+        if self._active_idx:
             self._decode_round()
             return EventKind.DECODE
         if pending:
@@ -641,9 +808,21 @@ class ContinuousBatchingEngine:
             r.first_token_at = None
             r.finished_at = None
             r.admit_seq = -1
-        pending: Deque[TrackedRequest] = deque(sorted(trace))
+        # poisson_trace / replay_trace hand back arrival-sorted traces;
+        # verify monotonicity in one O(n) pass and only re-sort (stable,
+        # same order the old per-run `sorted(trace)` produced) when a
+        # hand-built trace violates it
+        arr = list(trace)
+        prev = -math.inf
+        for r in arr:
+            if r.arrival < prev:
+                arr.sort()
+                break
+            prev = r.arrival
+        self._any_deadline = any(r.deadline_ttft is not None for r in arr)
+        pending: Deque[TrackedRequest] = deque(arr)
         it = 0
-        while (pending or self.queue or self._active()
+        while (pending or self.queue or self._active_idx
                or self._partial is not None):
             it += 1
             if it > self.engine.max_iters:

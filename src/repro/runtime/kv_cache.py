@@ -28,8 +28,9 @@ stays fast and import-light.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 class OutOfBlocks(RuntimeError):
@@ -86,10 +87,22 @@ class KVCacheConfig:
 
 @dataclass
 class BlockTable:
-    """One request's ordered physical block ids (oldest tokens first)."""
+    """One request's ordered physical block ids (oldest tokens first).
+
+    ``n_dram`` counts the DRAM-resident ids in ``blocks`` (maintained
+    incrementally so per-iteration residency queries are O(1)), and
+    ``scan`` is the oldest-scratch-block search hint: positions only
+    ever convert scratch -> DRAM, so the hint advances monotonically and
+    victim lookup is amortized O(1) over the table's lifetime."""
     request_id: int
     blocks: List[int] = field(default_factory=list)
     tokens: int = 0                  # context tokens currently stored
+    n_dram: int = 0                  # DRAM-resident entries of `blocks`
+    scan: int = 0                    # first index that may be scratch
+
+    @property
+    def n_scratch(self) -> int:
+        return len(self.blocks) - self.n_dram
 
 
 class BlockAllocator:
@@ -111,6 +124,13 @@ class BlockAllocator:
         self._free_dram: List[int] = list(
             range(cfg.n_blocks, cfg.n_blocks + cfg.dram_blocks))[::-1]
         self.tables: Dict[int, BlockTable] = {}
+        # spill-victim index: a lazy max-heap of (-n_scratch, rid)
+        # snapshots.  Every scratch-count change pushes the table's NEW
+        # state, so the heap always contains one entry matching each
+        # table's current count; stale snapshots are discarded on pop.
+        # Selection is O(log n) amortized instead of the former
+        # sorted(self.tables) + per-block enumeration scan.
+        self._victim_heap: List[Tuple[int, int]] = []
         # lifetime stats
         self.spilled_blocks = 0
         self.spilled_bytes = 0
@@ -145,10 +165,11 @@ class BlockAllocator:
 
     def dram_tokens(self, request_id: int) -> int:
         """Context tokens resident in the DRAM-hub tier — the per-decode-
-        iteration remote-read volume for this request."""
+        iteration remote-read volume for this request.  O(1): the table
+        carries its DRAM-entry count instead of re-scanning its blocks
+        every serving iteration."""
         t = self.tables[request_id]
-        n_dram = sum(1 for b in t.blocks if self.is_dram(b))
-        return min(n_dram * self.cfg.block_tokens, t.tokens)
+        return min(t.n_dram * self.cfg.block_tokens, t.tokens)
 
     # -- allocation ----------------------------------------------------
     def ensure(self, request_id: int, n_tokens: int) -> int:
@@ -169,6 +190,11 @@ class BlockAllocator:
                 t.tokens = max(t.tokens, min(n_tokens, len(t.blocks) * bt))
                 raise
             t.blocks.append(block)
+            if self.is_dram(block):
+                t.n_dram += 1
+            else:
+                heapq.heappush(self._victim_heap,
+                               (-t.n_scratch, t.request_id))
             grown += 1
         t.tokens = max(t.tokens, n_tokens)
         used = self.used_blocks()
@@ -197,6 +223,9 @@ class BlockAllocator:
             dram_id = self._free_dram.pop()
             scratch_id = table.blocks[idx]
             table.blocks[idx] = dram_id        # cold block moves to DRAM
+            table.n_dram += 1
+            heapq.heappush(self._victim_heap,
+                           (-table.n_scratch, table.request_id))
             self.spilled_blocks += 1
             self.spilled_bytes += self.cfg.block_bytes
             if self.on_spill is not None:
@@ -210,7 +239,33 @@ class BlockAllocator:
         """(table, index) of the coldest scratchpad-resident block: the
         oldest scratch block of the request holding the most scratch
         blocks (ties to the lowest request id) — deterministic, keeps
-        the hottest context chiplet-local."""
+        the hottest context chiplet-local.
+
+        O(log n) amortized via the lazy snapshot heap: the top entry is
+        valid iff it matches its table's CURRENT scratch count (every
+        count change pushed a fresh snapshot, so the current state is
+        always present); stale or zero-count snapshots are popped.  The
+        heap's (-count, rid) ordering reproduces the reference scan's
+        ``(-len(idxs), rid)`` min-key exactly — locked against
+        :meth:`_spill_victim_reference` by the hypothesis random-walk
+        test in tests/test_kv_cache.py."""
+        heap = self._victim_heap
+        while heap:
+            neg_n, rid = heap[0]
+            t = self.tables.get(rid)
+            if t is None or -neg_n != t.n_scratch or neg_n == 0:
+                heapq.heappop(heap)            # stale / empty snapshot
+                continue
+            # oldest scratch block: advance the monotone scan hint past
+            # entries that have since been converted to DRAM
+            while self.is_dram(t.blocks[t.scan]):
+                t.scan += 1
+            return t, t.scan
+        return None
+
+    def _spill_victim_reference(self):
+        """The original O(n_tables * blocks) selection scan, kept as the
+        oracle the heap-based index is property-tested against."""
         best = None
         best_key = None
         for rid in sorted(self.tables):

@@ -1,0 +1,114 @@
+"""Bench-regression gate: direction-aware metric handling and the
+host-calibration guard for wall-clock benches (benchmarks/
+check_regression.py is loaded from its file — benchmarks/ is a script
+directory, not a package)."""
+import importlib.util
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_regression",
+    Path(__file__).resolve().parents[1] / "benchmarks"
+    / "check_regression.py")
+cr = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(cr)
+
+
+def test_metric_direction_families():
+    assert cr.metric_direction("speedup.serving") == "higher"
+    assert cr.metric_direction("tokens_per_s.b8_ccpg0") == "higher"
+    assert cr.metric_direction("efficiency_tok_J.llama") == "higher"
+    assert cr.metric_direction("wall_ms.serving_fast") == "lower"
+    # informational, never gated
+    assert cr.metric_direction("p99_latency_s.x") == ""
+    assert cr.metric_direction("sim_tokens_per_wall_s.serving_fast") == ""
+    assert cr.metric_direction("events_per_wall_s.serving") == ""
+
+
+def test_headline_metrics_flattening_and_filter():
+    doc = {"metrics": {"speedup": {"a": 2.0}, "wall_ms": {"a_fast": 5.0},
+                       "notes": {"p99_latency_s": 1.0},
+                       "flag": True}}
+    m = cr.headline_metrics(doc)
+    assert m == {"speedup.a": 2.0, "wall_ms.a_fast": 5.0}
+
+
+def test_hosts_comparable_guard():
+    doc = {"host_ops_per_s": 1000.0, "smoke": False}
+    assert cr.hosts_comparable(doc, dict(doc))
+    assert cr.hosts_comparable(doc, {"host_ops_per_s": 1200.0,
+                                     "smoke": False})      # within 30%
+    assert not cr.hosts_comparable(doc, {"host_ops_per_s": 2000.0,
+                                         "smoke": False})  # 2x host
+    assert not cr.hosts_comparable(doc, {"host_ops_per_s": 1000.0,
+                                         "smoke": True})   # workload size
+    # simulated benches carry no calibration -> always comparable
+    assert cr.hosts_comparable({}, {})
+    assert cr.hosts_comparable({}, doc)
+
+
+def _gate(tmp_path, monkeypatch, base_doc, cur_doc, tolerance=0.10):
+    import json
+    bench = tmp_path / "bench"
+    baseline = bench / "baseline"
+    baseline.mkdir(parents=True, exist_ok=True)
+    (baseline / "BENCH_x.json").write_text(json.dumps(base_doc))
+    (bench / "BENCH_x.json").write_text(json.dumps(cur_doc))
+    monkeypatch.setattr(cr, "BENCH_DIR", bench)
+    monkeypatch.setattr(cr, "BASELINE_DIR", baseline)
+    return cr.compare(tolerance)
+
+
+def _doc(speedup, wall_ms, host=1000.0):
+    return {"host_ops_per_s": host, "smoke": False,
+            "metrics": {"speedup": {"serving": speedup},
+                        "wall_ms": {"serving_fast": wall_ms}}}
+
+
+def test_gate_passes_within_tolerance(tmp_path, monkeypatch):
+    # wall-clock benches use the widened WALL_BENCH_TOL (measured-time
+    # noise), so a -30% speedup wobble passes
+    assert _gate(tmp_path, monkeypatch, _doc(10.0, 5.0),
+                 _doc(7.0, 6.5)) == 0
+
+
+def test_gate_fails_on_speedup_drop(tmp_path, monkeypatch):
+    assert _gate(tmp_path, monkeypatch, _doc(10.0, 5.0),
+                 _doc(4.0, 5.0)) == 1
+
+
+def test_gate_fails_on_wall_clock_slowdown(tmp_path, monkeypatch):
+    """The direction-aware half: wall_ms RISING beyond tolerance fails
+    even while every higher-is-better metric is fine."""
+    assert _gate(tmp_path, monkeypatch, _doc(10.0, 5.0),
+                 _doc(10.0, 9.0)) == 1
+
+
+def test_gate_simulated_benches_keep_tight_tolerance(tmp_path,
+                                                     monkeypatch):
+    """Docs WITHOUT a host calibration are deterministic simulated
+    benches: the plain 10% tolerance applies."""
+    base = {"metrics": {"tokens_per_s": {"b8": 100.0}}}
+    assert _gate(tmp_path, monkeypatch, base,
+                 {"metrics": {"tokens_per_s": {"b8": 85.0}}}) == 1
+    assert _gate(tmp_path, monkeypatch, base,
+                 {"metrics": {"tokens_per_s": {"b8": 95.0}}}) == 0
+
+
+def test_gate_skips_wall_bench_on_foreign_host(tmp_path, monkeypatch):
+    """A 3x-slower host is not a code regression: the whole wall-clock
+    bench is skipped (microbench --min-speedup floors foreign hosts)."""
+    assert _gate(tmp_path, monkeypatch, _doc(10.0, 5.0),
+                 _doc(6.0, 50.0, host=300.0)) == 0
+
+
+def test_gate_fails_on_missing_current_artifact(tmp_path, monkeypatch):
+    import json
+    bench = tmp_path / "bench"
+    baseline = bench / "baseline"
+    baseline.mkdir(parents=True)
+    (baseline / "BENCH_x.json").write_text(json.dumps(_doc(10.0, 5.0)))
+    monkeypatch.setattr(cr, "BENCH_DIR", bench)
+    monkeypatch.setattr(cr, "BASELINE_DIR", baseline)
+    assert cr.compare(0.10) == 1

@@ -25,7 +25,9 @@ def cfg():
 
 def _check_invariants(a: BlockAllocator):
     """Every physical id free XOR owned by exactly one table; counts add
-    up; tables never over-allocate by more than one partial block."""
+    up; tables never over-allocate by more than one partial block; the
+    incremental DRAM counts / scan hints match a recount; and the heap
+    spill-victim index selects exactly what the reference scan would."""
     c = a.cfg
     owned = [b for t in a.tables.values() for b in t.blocks]
     assert len(owned) == len(set(owned)), "block double-owned"
@@ -35,6 +37,17 @@ def _check_invariants(a: BlockAllocator):
     for t in a.tables.values():
         assert len(t.blocks) == c.blocks_for(t.tokens)
         assert len(t.blocks) * c.block_tokens >= t.tokens
+        assert t.n_dram == sum(1 for b in t.blocks if a.is_dram(b))
+        # everything before the oldest-scratch scan hint is DRAM
+        assert all(a.is_dram(b) for b in t.blocks[:t.scan])
+    # victim-order equivalence: O(log n) heap index == reference scan
+    # (_spill_victim only prunes stale heap snapshots — state-safe)
+    fast, ref = a._spill_victim(), a._spill_victim_reference()
+    if ref is None:
+        assert fast is None
+    else:
+        assert fast is not None
+        assert fast[0] is ref[0] and fast[1] == ref[1]
 
 
 # ---------------------------------------------------------------------------
