@@ -84,6 +84,11 @@ class TrackedRequest(Request):
     cycle model charges for (KV-scratchpad reads are per-request)."""
     context: int = dataclasses.field(compare=False, default=0)
     admit_seq: int = dataclasses.field(compare=False, default=-1)
+    # prompt token ids (prefix sharing only): the allocator chain-hashes
+    # these to find/index shareable prefix blocks.  None = this request
+    # never shares (the simulator otherwise has no token identities).
+    prompt_tokens: Optional[Tuple[int, ...]] = dataclasses.field(
+        compare=False, default=None, repr=False)
 
     @property
     def latency(self) -> Optional[float]:
@@ -102,15 +107,28 @@ class TrackedRequest(Request):
 # Arrival traces
 # ---------------------------------------------------------------------------
 
+_TOKEN_STRIDE = 1 << 24     # id-space stride between synthetic vocab pools
+
+
 def poisson_trace(n_requests: int, rate_rps: float, *, seed: int = 0,
                   prompt_len: int = 512, max_new: int = 64,
                   prompt_jitter: float = 0.25,
-                  deadline_ttft: Optional[float] = None
-                  ) -> List[TrackedRequest]:
+                  deadline_ttft: Optional[float] = None,
+                  prefix_len: int = 0, prefix_frac: float = 0.9,
+                  prefix_groups: int = 1) -> List[TrackedRequest]:
     """Open-loop Poisson arrivals at ``rate_rps`` requests/second, with
     prompt lengths jittered uniformly by +-``prompt_jitter``.  Arrivals
     are monotone by construction (cumulative exponential gaps), so
-    ``run()`` never has to re-sort this trace."""
+    ``run()`` never has to re-sort this trace.
+
+    With ``prefix_len > 0`` every request carries synthetic
+    ``prompt_tokens``: a ``prefix_frac`` share of requests open with one
+    of ``prefix_groups`` shared system prompts of ``prefix_len`` tokens
+    (positive ids, disjoint per group) followed by per-request unique
+    tokens (negative ids, disjoint per request) — the prefix-heavy
+    workload the sharing allocator deduplicates.  ``prefix_len = 0``
+    (the default) draws nothing extra from the RNG, so default traces
+    are byte-identical to the pre-sharing generator."""
     rng = np.random.default_rng(seed)
     t = 0.0
     out: List[TrackedRequest] = []
@@ -119,9 +137,22 @@ def poisson_trace(n_requests: int, rate_rps: float, *, seed: int = 0,
         p = max(1, int(round(prompt_len
                              * (1.0 + prompt_jitter
                                 * float(rng.uniform(-1.0, 1.0))))))
+        tokens: Optional[Tuple[int, ...]] = None
+        if prefix_len > 0:
+            shares = float(rng.uniform()) < prefix_frac
+            g = int(rng.integers(prefix_groups)) if prefix_groups > 1 else 0
+            uniq = -(i * _TOKEN_STRIDE + 1)     # request-private pool
+            if shares:
+                pre = min(prefix_len, p - 1)
+                tokens = (tuple(g * _TOKEN_STRIDE + 1 + j
+                                for j in range(pre))
+                          + tuple(uniq - j for j in range(p - pre)))
+            else:
+                tokens = tuple(uniq - j for j in range(p))
         out.append(TrackedRequest(arrival=t, request_id=i, prompt_len=p,
                                   max_new=max_new,
-                                  deadline_ttft=deadline_ttft))
+                                  deadline_ttft=deadline_ttft,
+                                  prompt_tokens=tokens))
     return out
 
 
@@ -194,6 +225,15 @@ class KVCacheStats:
     recomputed_tokens: int      # prefill work re-done after preemption
     peak_blocks_used: int
     infeasible_rejects: int     # could never fit even an empty cache
+    # -- prefix sharing / copy-on-write (zeroed when sharing is off) ----
+    prefix_sharing: bool = False
+    prefix_hits: int = 0        # whole blocks adopted from the index
+    prefix_hit_tokens: int = 0  # prompt tokens never (re)computed
+    prefix_hit_rate: float = 0.0   # hit tokens / total prompt tokens
+    cow_forks: int = 0
+    cow_copied_bytes: int = 0
+    shared_blocks_now: int = 0  # blocks with >= 2 readers at run end
+    shared_blocks_peak: int = 0
 
     def row(self) -> Dict:
         return dataclasses.asdict(self)
@@ -362,8 +402,16 @@ class ContinuousBatchingEngine:
         self._tokens_prefilled = 0
         # -- paged KV state (None/zeroed on the default infinite path) --
         self.kv: Optional[BlockAllocator] = (
-            BlockAllocator(e.kv_cache, on_spill=self._on_kv_spill)
+            BlockAllocator(e.kv_cache, on_spill=self._on_kv_spill,
+                           on_cow=self._on_kv_cow)
             if e.kv_cache is not None else None)
+        self._prefix_on = (e.kv_cache is not None
+                           and e.kv_cache.prefix_sharing)
+        # chain-hash + probe memos: hashing a prompt is O(len/block) — do
+        # it once per request, and re-probe the index only after it
+        # changed (the admission check runs every iteration)
+        self._chain_cache: Dict[int, List[int]] = {}
+        self._probe_cache: Dict[int, Tuple[int, int]] = {}
         self._partial: Optional[List] = None   # [req, done, target, slot]
         self._admit_counter = 0
         self._kv_fetch_bytes = 0
@@ -381,15 +429,26 @@ class ContinuousBatchingEngine:
         if self.kv is None:
             return None
         c = self.kv.cfg
+        kv = self.kv
+        prompt_total = self._tokens_prefilled + kv.shared_tokens_saved
         return KVCacheStats(
             n_blocks=c.n_blocks, dram_blocks=c.dram_blocks,
             block_tokens=c.block_tokens, preemptions=self._preemptions,
-            spilled_blocks=self.kv.spilled_blocks,
-            spilled_bytes=self.kv.spilled_bytes,
+            spilled_blocks=kv.spilled_blocks,
+            spilled_bytes=kv.spilled_bytes,
             dram_read_bytes=self._kv_fetch_bytes,
             recomputed_tokens=self._recomputed_tokens,
-            peak_blocks_used=self.kv.peak_used,
-            infeasible_rejects=self._kv_rejected_infeasible)
+            peak_blocks_used=kv.peak_used,
+            infeasible_rejects=self._kv_rejected_infeasible,
+            prefix_sharing=c.prefix_sharing,
+            prefix_hits=kv.prefix_hits,
+            prefix_hit_tokens=kv.shared_tokens_saved,
+            prefix_hit_rate=(kv.shared_tokens_saved / prompt_total
+                             if prompt_total else 0.0),
+            cow_forks=kv.cow_forks,
+            cow_copied_bytes=kv.cow_copied_bytes,
+            shared_blocks_now=kv.n_shared_blocks,
+            shared_blocks_peak=kv.peak_shared_blocks)
 
     # ------------------------------------------------------------------
     # SoA slot bookkeeping: `slots` (request objects) and the numpy
@@ -443,6 +502,38 @@ class ContinuousBatchingEngine:
         self.timeline.c2c(nbytes, phase="kv_spill",
                           dur_s=self.sim.kv_transfer_seconds(nbytes))
 
+    def _on_kv_cow(self, nbytes: int) -> None:
+        """Allocator copy-on-write callback: the matching head of a
+        divergence block is copied pad-to-pad over the C2C fabric — a
+        non-advancing DMA like kv_spill (phase "kv_cow"; no new
+        TimelineIR event KIND, per the back-compat contract)."""
+        self.timeline.c2c(nbytes, phase="kv_cow",
+                          dur_s=self.sim.kv_transfer_seconds(nbytes))
+
+    # -- prefix-sharing helpers (all no-ops unless prefix_sharing) ------
+    def _prefix_hashes(self, req: TrackedRequest) -> Optional[List[int]]:
+        if not self._prefix_on or req.prompt_tokens is None:
+            return None
+        h = self._chain_cache.get(req.request_id)
+        if h is None:
+            h = self._chain_cache[req.request_id] = \
+                self.kv.chunk_hashes(req.prompt_tokens)
+        return h
+
+    def _probe_shared(self, req: TrackedRequest) -> int:
+        """Blocks ``req`` would adopt if admitted now (admission credit),
+        memoized on the allocator's index version."""
+        hashes = self._prefix_hashes(req)
+        if hashes is None:
+            return 0
+        ver = self.kv.index_version
+        hit = self._probe_cache.get(req.request_id)
+        if hit is not None and hit[0] == ver:
+            return hit[1]
+        n = self.kv.probe_prefix(req.prompt_tokens, hashes)
+        self._probe_cache[req.request_id] = (ver, n)
+        return n
+
     def _admit_arrivals(self, pending: Deque[TrackedRequest]) -> None:
         now = self.timeline.now
         while pending and pending[0].arrival <= now:
@@ -475,7 +566,8 @@ class ContinuousBatchingEngine:
         # (only reached with no chunked prefill in flight: step() keeps
         # the prefill pipeline for the partial and skips this check)
         reserve = self.kv.cfg.watermark_blocks if self._active_idx else 0
-        return self.kv.can_admit(need, reserve=reserve)
+        return self.kv.can_admit(need, reserve=reserve,
+                                 shared_blocks=self._probe_shared(head))
 
     def _deadline_at_risk(self) -> bool:
         head = self.queue[0] if self.queue else None
@@ -498,17 +590,35 @@ class ContinuousBatchingEngine:
             # recompute-on-resume: a preempted request re-prefills its
             # prompt PLUS everything it had already generated
             target = req.prompt_len + req.generated
+            # prefix sharing: adopt indexed blocks (+ COW fork) FIRST —
+            # the adopted tokens need no prefill compute, only the
+            # unshared suffix is priced below.  shared == 0 whenever
+            # sharing is off, keeping every expression byte-identical.
+            shared = 0
+            hashes = self._prefix_hashes(req)
+            if hashes is not None:
+                shared = self.kv.adopt_prefix(
+                    req.request_id, req.prompt_tokens, hashes)
             if req.generated:
-                self._recomputed_tokens += target
+                self._recomputed_tokens += target - shared
             chunk_cap = self.engine.chunked_prefill_tokens
-            if chunk_cap and target > chunk_cap:
-                self._partial = [req, 0, target, slot]
+            if chunk_cap and target - shared > chunk_cap:
+                self._partial = [req, shared, target, slot]
             else:
                 # monolithic path — the default-config fast path; with
                 # paging off its float sequence is byte-identical to the
-                # pre-paging engine (timeline golden)
-                dt, c2c = self.sim.prefill_seconds(
-                    self.cfg, self.alloc, target, ccpg=self._residue_ccpg)
+                # pre-paging engine (timeline golden).  A shared prefix
+                # turns it into one suffix "chunk" at context `shared`
+                # (prefill_chunk_cycles(n, 0) == prefill_cycles(n), so
+                # the two calls agree exactly at shared == 0).
+                if shared:
+                    dt, c2c = self.sim.prefill_chunk_seconds(
+                        self.cfg, self.alloc, target - shared, shared,
+                        ccpg=self._residue_ccpg)
+                else:
+                    dt, c2c = self.sim.prefill_seconds(
+                        self.cfg, self.alloc, target,
+                        ccpg=self._residue_ccpg)
                 self._wake_walk()
                 t0 = self.timeline.now
                 self.timeline.compute(
@@ -519,7 +629,7 @@ class ContinuousBatchingEngine:
                     # burst rides under the compute wave: anchor at start
                     self.timeline.c2c(c2c, phase="prefill", t0=t0,
                                       dur_s=c2c / self.sim.link.bandwidth_Bps)
-                self._tokens_prefilled += target
+                self._tokens_prefilled += target - shared
                 self._finish_prefill(req, slot)
                 return
         # chunked continuation: one chunk per engine iteration
@@ -563,6 +673,11 @@ class ContinuousBatchingEngine:
         req.context = req.prompt_len + req.generated
         if self.kv is not None:
             self._kv_ensure(req, max(req.context, 1))
+            hashes = self._prefix_hashes(req)
+            if hashes is not None:
+                # the prompt's blocks now hold final KV — publish them
+                self.kv.register_prefix(req.request_id,
+                                        req.prompt_tokens, hashes)
         if new_tokens:
             self.timeline.token(new_tokens, request_id=req.request_id)
         self.events.append((self.clock, EventKind.PREFILL, req.request_id))

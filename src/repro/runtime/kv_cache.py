@@ -22,6 +22,17 @@ schedule against:
     ``C2CTransfer`` on the TimelineIR plus DRAM access energy.
   * When both tiers are exhausted, ``OutOfBlocks`` is raised and the
     engine preempts (recompute-on-resume, watermark-gated).
+  * With ``prefix_sharing`` enabled (ISSUE 6), every block carries a
+    **refcount** and full prompt blocks are indexed by the chain hash of
+    their token chunks (vLLM automatic-prefix-caching style): a new
+    request whose prompt matches an indexed chain *adopts* the shared
+    physical blocks instead of recomputing them, and at the first
+    divergent token it **forks copy-on-write** — a private block whose
+    matching head is copied (``on_cow(nbytes)``) and whose tail the
+    request writes itself.  Shared blocks are immutable; spilling one
+    re-tiers it in EVERY reader's table; freeing one reader only
+    decrements the refcount — the block returns to the free list (and
+    leaves the prefix index) when the last reader releases it.
 
 Pure Python — no jax, no numpy — so the discrete-event serving loop
 stays fast and import-light.
@@ -30,7 +41,7 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import (Callable, Dict, List, Optional, Sequence, Set, Tuple)
 
 
 class OutOfBlocks(RuntimeError):
@@ -51,12 +62,19 @@ class KVCacheConfig:
                         preempts before allocating
     ``bytes_per_token`` KV bytes one token occupies across all layers
                         (see :func:`kv_bytes_per_token`)
+    ``prefix_sharing``  enable vLLM-style prefix reuse: full prompt
+                        blocks are hash-indexed, matching requests adopt
+                        them (refcounted) and fork copy-on-write at the
+                        first divergent token.  OFF by default — the
+                        default path stays byte-identical to the
+                        pre-sharing allocator/engine (golden-locked)
     """
     n_blocks: int
     block_tokens: int = 16
     dram_blocks: int = 0
     watermark_frac: float = 0.05
     bytes_per_token: int = 4096
+    prefix_sharing: bool = False
 
     def __post_init__(self):
         if self.n_blocks < 1:
@@ -105,25 +123,56 @@ class BlockTable:
         return len(self.blocks) - self.n_dram
 
 
+_CHAIN_SEED = 0x9E3779B9   # root of every prefix hash chain
+
+
 class BlockAllocator:
-    """Two-tier block allocator with spill-to-DRAM and exact accounting.
+    """Two-tier block allocator with spill-to-DRAM, refcounted prefix
+    sharing / copy-on-write, and exact accounting.
 
     Invariants (property-tested in tests/test_kv_cache.py):
-      * every physical id is either free or in exactly one table;
-      * ``free_scratch + free_dram + sum(len(t.blocks)) == total_blocks``;
+      * every physical id is either free or owned by >= 1 table, never
+        both; ``refcnt[b]`` == the number of tables containing ``b``
+        (a table never contains the same block twice);
+      * ``free_scratch + free_dram + distinct owned == total_blocks``;
       * a table covers its token count: ``len(blocks) * block_tokens >=
-        tokens`` with no over-allocation beyond one partial block.
+        tokens`` with no over-allocation beyond one partial block;
+      * an indexed (shareable) block's token contents never change while
+        any table references it — shared blocks are immutable, divergent
+        writers fork copy-on-write instead.
     """
 
     def __init__(self, cfg: KVCacheConfig,
-                 on_spill: Optional[Callable[[int], None]] = None):
+                 on_spill: Optional[Callable[[int], None]] = None,
+                 on_cow: Optional[Callable[[int], None]] = None):
         self.cfg = cfg
         self.on_spill = on_spill
+        self.on_cow = on_cow
         # stacks: pop() from the end keeps allocation order deterministic
         self._free_scratch: List[int] = list(range(cfg.n_blocks))[::-1]
         self._free_dram: List[int] = list(
             range(cfg.n_blocks, cfg.n_blocks + cfg.dram_blocks))[::-1]
         self.tables: Dict[int, BlockTable] = {}
+        # block ownership: physical id -> reader count / reader set.
+        # Maintained on every path (refcnt is 1 everywhere with sharing
+        # off) so spill re-tiering and free stay one code path.
+        self.refcnt: Dict[int, int] = {}
+        self._refs: Dict[int, Set[int]] = {}
+        # prefix index (prefix_sharing only): chain hash of a prompt's
+        # full token chunks -> the physical block holding that chunk.
+        #   _hash_of / _parent_of   reverse maps for O(1) un-indexing
+        #   _next                   parent hash -> first indexed child
+        #                           (the COW divergence candidate)
+        #   _tok_of                 indexed block -> its token chunk
+        #                           (compared at COW fork time)
+        self._index: Dict[int, int] = {}
+        self._hash_of: Dict[int, int] = {}
+        self._parent_of: Dict[int, int] = {}
+        self._next: Dict[int, int] = {}
+        self._tok_of: Dict[int, Tuple] = {}
+        # bumped whenever the set of indexed chains changes, so callers
+        # (the engine's admission probe) can cache lookup results
+        self.index_version = 0
         # spill-victim index: a lazy max-heap of (-n_scratch, rid)
         # snapshots.  Every scratch-count change pushes the table's NEW
         # state, so the heap always contains one entry matching each
@@ -135,6 +184,12 @@ class BlockAllocator:
         self.spilled_blocks = 0
         self.spilled_bytes = 0
         self.peak_used = 0
+        self.prefix_hits = 0          # whole blocks adopted via the index
+        self.shared_tokens_saved = 0  # prompt tokens never recomputed
+        self.cow_forks = 0
+        self.cow_copied_bytes = 0
+        self.n_shared_blocks = 0      # blocks with refcnt >= 2 right now
+        self.peak_shared_blocks = 0
 
     # -- tier predicates ----------------------------------------------
     def is_dram(self, block_id: int) -> bool:
@@ -154,10 +209,15 @@ class BlockAllocator:
         """Could a request of ``n_tokens`` EVER fit (both tiers empty)?"""
         return self.cfg.blocks_for(n_tokens) <= self.cfg.total_blocks
 
-    def can_admit(self, n_tokens: int, *, reserve: int = 0) -> bool:
+    def can_admit(self, n_tokens: int, *, reserve: int = 0,
+                  shared_blocks: int = 0) -> bool:
         """Are there enough free blocks (both tiers) to admit a request
-        needing ``n_tokens``, keeping ``reserve`` blocks of headroom?"""
-        return self.cfg.blocks_for(n_tokens) + reserve <= self.free_total()
+        needing ``n_tokens``, keeping ``reserve`` blocks of headroom?
+        ``shared_blocks`` credits blocks the request would ADOPT from the
+        prefix index instead of allocating (see :meth:`probe_prefix`) —
+        admission sees EFFECTIVE demand, net of sharing."""
+        need = max(0, self.cfg.blocks_for(n_tokens) - shared_blocks)
+        return need + reserve <= self.free_total()
 
     def scratch_tokens(self, request_id: int) -> int:
         t = self.tables[request_id]
@@ -189,12 +249,7 @@ class BlockAllocator:
                 # and a retry (after preemption) continues from here
                 t.tokens = max(t.tokens, min(n_tokens, len(t.blocks) * bt))
                 raise
-            t.blocks.append(block)
-            if self.is_dram(block):
-                t.n_dram += 1
-            else:
-                heapq.heappush(self._victim_heap,
-                               (-t.n_scratch, t.request_id))
+            self._append_new(t, block)
             grown += 1
         t.tokens = max(t.tokens, n_tokens)
         used = self.used_blocks()
@@ -203,12 +258,55 @@ class BlockAllocator:
         return grown
 
     def free(self, request_id: int) -> int:
-        """Release every block of ``request_id``; returns block count."""
+        """Release ``request_id``'s reference on every block of its
+        table; a block returns to the free list (and leaves the prefix
+        index) only when its LAST reader releases it.  Returns the
+        table's block count."""
         t = self.tables.pop(request_id)
         for b in reversed(t.blocks):
-            (self._free_dram if self.is_dram(b)
-             else self._free_scratch).append(b)
+            self._release_block(b, request_id)
         return len(t.blocks)
+
+    # -- refcount plumbing ---------------------------------------------
+    def _append_new(self, t: BlockTable, block: int) -> None:
+        """Append a freshly allocated (refcount 1) block to a table."""
+        t.blocks.append(block)
+        self.refcnt[block] = 1
+        self._refs[block] = {t.request_id}
+        if self.is_dram(block):
+            t.n_dram += 1
+        else:
+            heapq.heappush(self._victim_heap,
+                           (-t.n_scratch, t.request_id))
+
+    def _append_shared(self, t: BlockTable, block: int) -> None:
+        """Append an existing block as an additional reader."""
+        t.blocks.append(block)
+        n = self.refcnt[block] = self.refcnt[block] + 1
+        self._refs[block].add(t.request_id)
+        if n == 2:
+            self.n_shared_blocks += 1
+            if self.n_shared_blocks > self.peak_shared_blocks:
+                self.peak_shared_blocks = self.n_shared_blocks
+        if self.is_dram(block):
+            t.n_dram += 1
+        else:
+            heapq.heappush(self._victim_heap,
+                           (-t.n_scratch, t.request_id))
+
+    def _release_block(self, block: int, request_id: int) -> None:
+        n = self.refcnt[block] - 1
+        self._refs[block].discard(request_id)
+        if n >= 1:
+            self.refcnt[block] = n
+            if n == 1:
+                self.n_shared_blocks -= 1
+            return
+        del self.refcnt[block]
+        del self._refs[block]
+        self._unindex(block)
+        (self._free_dram if self.is_dram(block)
+         else self._free_scratch).append(block)
 
     # -- internals -----------------------------------------------------
     def _take_block(self) -> int:
@@ -222,10 +320,7 @@ class BlockAllocator:
             table, idx = victim
             dram_id = self._free_dram.pop()
             scratch_id = table.blocks[idx]
-            table.blocks[idx] = dram_id        # cold block moves to DRAM
-            table.n_dram += 1
-            heapq.heappush(self._victim_heap,
-                           (-table.n_scratch, table.request_id))
+            self._retier(scratch_id, dram_id, table, idx)
             self.spilled_blocks += 1
             self.spilled_bytes += self.cfg.block_bytes
             if self.on_spill is not None:
@@ -234,6 +329,173 @@ class BlockAllocator:
         raise OutOfBlocks(
             f"KV cache exhausted: {self.cfg.n_blocks} scratchpad + "
             f"{self.cfg.dram_blocks} DRAM blocks all in use")
+
+    def _retier(self, old: int, new: int, victim: BlockTable,
+                idx_hint: int) -> None:
+        """Move block ``old`` (scratch) to physical id ``new`` (DRAM) in
+        EVERY reader's table.  Shared prefix blocks sit at the same table
+        position in every reader (the prefix invariant), so ``idx_hint``
+        from the victim table almost always applies; ``.index`` is the
+        defensive fallback."""
+        for rid in self._refs[old]:
+            t = victim if rid == victim.request_id else self.tables[rid]
+            i = idx_hint if (idx_hint < len(t.blocks)
+                             and t.blocks[idx_hint] == old) \
+                else t.blocks.index(old)
+            t.blocks[i] = new
+            t.n_dram += 1
+            heapq.heappush(self._victim_heap, (-t.n_scratch, rid))
+        # ownership + prefix-index metadata follow the content to its id
+        self.refcnt[new] = self.refcnt.pop(old)
+        self._refs[new] = self._refs.pop(old)
+        h = self._hash_of.pop(old, None)
+        if h is not None:
+            self._hash_of[new] = h
+            if self._index.get(h) == old:
+                self._index[h] = new
+            parent = self._parent_of.pop(old)
+            self._parent_of[new] = parent
+            if self._next.get(parent) == old:
+                self._next[parent] = new
+            self._tok_of[new] = self._tok_of.pop(old)
+            self.index_version += 1
+
+    # -- prefix sharing / copy-on-write --------------------------------
+    def chunk_hashes(self, tokens: Sequence[int]) -> List[int]:
+        """Chain hashes of ``tokens``' FULL ``block_tokens``-sized chunks:
+        ``h_i = hash((h_{i-1}, chunk_i))`` from ``_CHAIN_SEED``, so equal
+        hashes imply equal whole prefixes (vLLM APC hashing).  Python
+        hashes ints/tuples deterministically (PYTHONHASHSEED only
+        randomizes str/bytes), so chains are stable across runs."""
+        bt = self.cfg.block_tokens
+        h = _CHAIN_SEED
+        out: List[int] = []
+        for i in range(len(tokens) // bt):
+            h = hash((h, tuple(tokens[i * bt:(i + 1) * bt])))
+            out.append(h)
+        return out
+
+    def probe_prefix(self, tokens: Sequence[int],
+                     hashes: Optional[Sequence[int]] = None) -> int:
+        """How many WHOLE leading blocks of this prompt are currently
+        indexed (read-only — used by admission to credit ``can_admit``'s
+        ``shared_blocks``).  Capped so at least one prompt token is left
+        to prefill: a request must still produce its first KV write."""
+        if not self.cfg.prefix_sharing:
+            return 0
+        if hashes is None:
+            hashes = self.chunk_hashes(tokens)
+        cap = max(0, (len(tokens) - 1) // self.cfg.block_tokens)
+        n = 0
+        for h in hashes[:cap]:
+            if h not in self._index:
+                break
+            n += 1
+        return n
+
+    def adopt_prefix(self, request_id: int, tokens: Sequence[int],
+                     hashes: Optional[Sequence[int]] = None) -> int:
+        """Map the longest indexed prefix of ``tokens`` into a NEW table
+        for ``request_id`` (refcount++ per block), then fork copy-on-
+        write at the divergence block if its indexed sibling shares a
+        head run of tokens.  Returns the number of context tokens the
+        request now holds (== tokens it need not prefill).  Never raises:
+        if the COW fork cannot get a block the fork is skipped and the
+        request simply prefills from the shared boundary."""
+        if not self.cfg.prefix_sharing:
+            return 0
+        t = self.tables.get(request_id)
+        if t is not None and t.blocks:
+            return t.tokens        # resumed request: keep what it has
+        if hashes is None:
+            hashes = self.chunk_hashes(tokens)
+        n = self.probe_prefix(tokens, hashes)
+        if n == 0:
+            return 0
+        bt = self.cfg.block_tokens
+        t = self.tables.setdefault(request_id, BlockTable(request_id))
+        for h in hashes[:n]:
+            self._append_shared(t, self._index[h])
+        shared = n * bt
+        self.prefix_hits += n
+        # copy-on-write fork: the indexed child of the last matched hash
+        # holds the divergence chunk of some earlier prompt; copy its
+        # matching token head into a PRIVATE block so those tokens need
+        # no recompute either (the tail diverges and is prefilled).
+        prev_h = hashes[n - 1]
+        cand = self._next.get(prev_h)
+        if cand is not None:
+            have = self._tok_of.get(cand, ())
+            want = tokens[shared:shared + bt]
+            m = 0
+            while m < len(have) and m < len(want) and have[m] == want[m]:
+                m += 1
+            m = min(m, len(tokens) - 1 - shared)   # leave >= 1 to prefill
+            if m > 0:
+                try:
+                    block = self._take_block()
+                except OutOfBlocks:
+                    block = None               # no room: skip the fork
+                if block is not None:
+                    self._append_new(t, block)
+                    nbytes = m * self.cfg.bytes_per_token
+                    self.cow_forks += 1
+                    self.cow_copied_bytes += nbytes
+                    if self.on_cow is not None:
+                        self.on_cow(nbytes)
+                    shared += m
+        self.shared_tokens_saved += shared
+        t.tokens = max(t.tokens, shared)
+        used = self.used_blocks()
+        if used > self.peak_used:
+            self.peak_used = used
+        return shared
+
+    def register_prefix(self, request_id: int, tokens: Sequence[int],
+                        hashes: Optional[Sequence[int]] = None) -> int:
+        """Index ``request_id``'s full prompt blocks under their chain
+        hashes so later requests can adopt them.  Called after prefill
+        completes (the blocks now hold final, immutable KV).  Returns the
+        number of newly indexed blocks."""
+        if not self.cfg.prefix_sharing:
+            return 0
+        t = self.tables.get(request_id)
+        if t is None:
+            return 0
+        if hashes is None:
+            hashes = self.chunk_hashes(tokens)
+        n_full = min(len(hashes), len(t.blocks))
+        added = 0
+        prev = _CHAIN_SEED
+        bt = self.cfg.block_tokens
+        for i in range(n_full):
+            h = hashes[i]
+            if h not in self._index:
+                b = t.blocks[i]
+                if b not in self._hash_of:     # one hash per physical id
+                    self._index[h] = b
+                    self._hash_of[b] = h
+                    self._parent_of[b] = prev
+                    self._next.setdefault(prev, b)
+                    self._tok_of[b] = tuple(tokens[i * bt:(i + 1) * bt])
+                    added += 1
+            prev = h
+        if added:
+            self.index_version += 1
+        return added
+
+    def _unindex(self, block: int) -> None:
+        """Drop a dying block from the prefix index (last reader left)."""
+        h = self._hash_of.pop(block, None)
+        if h is None:
+            return
+        if self._index.get(h) == block:
+            del self._index[h]
+        parent = self._parent_of.pop(block)
+        if self._next.get(parent) == block:
+            del self._next[parent]
+        self._tok_of.pop(block, None)
+        self.index_version += 1
 
     def _spill_victim(self):
         """(table, index) of the coldest scratchpad-resident block: the

@@ -204,6 +204,36 @@ def test_fast_engine_matches_reference_paged(n, seed, n_blocks, dram,
     assert fast.timeline.events == ref.timeline.events
 
 
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 99), n_blocks=st.integers(32, 80),
+       dram=st.sampled_from([0, 40]), chunk=st.sampled_from([0, 64]),
+       prefix_len=st.sampled_from([96, 120]))
+def test_fast_engine_matches_reference_prefix_sharing(seed, n_blocks,
+                                                      dram, chunk,
+                                                      prefix_len):
+    """Randomized PREFIX-SHARING traces (adopt/COW/register on top of
+    preemption/spill/chunked prefill): the SoA fast core and the
+    reference recorder must stay bit-identical — reports, kv_stats
+    (including the new sharing counters) and both event streams."""
+    cfg = get_config("llama3.2-1b")
+    kvc = KVCacheConfig(n_blocks=n_blocks, block_tokens=16,
+                        dram_blocks=dram,
+                        bytes_per_token=kv_bytes_per_token(cfg),
+                        prefix_sharing=True)
+    kw = dict(max_batch=4, ccpg=True, kv_cache=kvc,
+              chunked_prefill_tokens=chunk)
+    trace = poisson_trace(10, rate_rps=80, seed=seed, prompt_len=160,
+                          max_new=24, prefix_len=prefix_len,
+                          prefix_frac=0.8, prefix_groups=2)
+    fast, ref = _engine_pair(cfg, **kw)
+    r_fast = fast.run(list(trace))
+    r_ref = ref.run(list(trace))
+    assert _hexdict(r_fast) == _hexdict(r_ref)
+    assert fast.kv_stats.row() == ref.kv_stats.row()
+    assert fast.events == ref.events
+    assert fast.timeline.events == ref.timeline.events
+
+
 def test_fast_engine_matches_reference_with_deadlines(cfg):
     rows = [(0.0, 256, 64), (0.01, 64, 8, 0.02), (0.02, 32, 4, None),
             (0.03, 128, 16, 0.5)]

@@ -186,3 +186,146 @@ def test_ssd_kernel_property_random(seed):
     o = ops.ssd_scan(x, dt, a, B_, C_, chunk=16)
     r = ref.ref_ssd_recurrent(x, dt, a, B_, C_)
     assert float(jnp.max(jnp.abs(o - r))) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# paged attention over SHARED / COW-forked block tables (ISSUE 6):
+# the kernel reads aliased physical blocks through per-request tables
+# built by the real sharing allocator — differential vs ref.py per request
+# ---------------------------------------------------------------------------
+
+def _tok_kv(tok: int, hkv: int, d: int):
+    """Deterministic K/V rows from a token identity: identical tokens
+    yield identical KV, which is exactly the contract that makes a
+    shared physical block valid for every reader."""
+    r = np.random.default_rng(tok % (2 ** 32))
+    return r.normal(size=(hkv, d)), r.normal(size=(hkv, d))
+
+
+def _alloc_shared_case(prompts, *, bt=8, n_blocks=64, dram=0,
+                       h=4, hkv=2, d=32, seed=0):
+    """Drive the REAL sharing allocator (adopt -> ensure -> register per
+    request, in order), then materialize physical caches by writing each
+    request's token-derived KV through its own table.  Shared blocks get
+    written by several readers — asserting those writes agree IS the
+    aliasing check: a request may only share a block whose contents it
+    would have produced itself."""
+    from repro.runtime.kv_cache import BlockAllocator, KVCacheConfig
+    cfg = KVCacheConfig(n_blocks=n_blocks, block_tokens=bt,
+                        dram_blocks=dram, bytes_per_token=4,
+                        prefix_sharing=True)
+    a = BlockAllocator(cfg)
+    for rid, toks in enumerate(prompts):
+        hs = a.chunk_hashes(toks)
+        a.adopt_prefix(rid, toks, hs)
+        a.ensure(rid, len(toks))
+        a.register_prefix(rid, toks, hs)
+    B = len(prompts)
+    max_blocks = max(len(a.tables[r].blocks) for r in range(B))
+    tables = np.zeros((B, max_blocks), np.int32)
+    kc = np.zeros((cfg.total_blocks, bt, hkv, d), np.float32)
+    vc = np.zeros((cfg.total_blocks, bt, hkv, d), np.float32)
+    writers = {}
+    for rid, toks in enumerate(prompts):
+        blocks = a.tables[rid].blocks
+        tables[rid, :len(blocks)] = blocks
+        for i, b in enumerate(blocks):
+            for j, tok in enumerate(toks[i * bt:(i + 1) * bt]):
+                prev = writers.setdefault((b, j), tok)
+                assert prev == tok, \
+                    f"aliased block {b}@{j} holds {prev}, reader wants {tok}"
+                kc[b, j], vc[b, j] = _tok_kv(tok, hkv, d)
+    ctx = np.asarray([len(t) for t in prompts], np.int32)
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, h, d)), jnp.float32)
+    return a, q, jnp.asarray(kc), jnp.asarray(vc), tables, ctx
+
+
+def _private_copy_case(prompts, tables, ctx, *, bt, hkv, d):
+    """The same logical caches with NO aliasing: every request gets
+    private consecutive blocks holding its own token-derived KV."""
+    B = len(prompts)
+    nb = [(-(-int(c) // bt)) for c in ctx]
+    kc = np.zeros((sum(nb) + 1, bt, hkv, d), np.float32)
+    vc = np.zeros_like(kc)
+    priv = np.zeros_like(tables)
+    off = 0
+    for rid, toks in enumerate(prompts):
+        for i in range(nb[rid]):
+            priv[rid, i] = off
+            for j, tok in enumerate(toks[i * bt:(i + 1) * bt]):
+                kc[off, j], vc[off, j] = _tok_kv(tok, hkv, d)
+            off += 1
+    return jnp.asarray(kc), jnp.asarray(vc), priv
+
+
+# the divergence structure the allocator must represent: a long shared
+# system prompt, a mid-block COW fork, a fork exactly at a block
+# boundary, and a non-sharing stranger — ragged lengths throughout
+_SHARED_PROMPTS = [
+    [100 + j for j in range(20)],                       # r0: indexes 2 blocks
+    [100 + j for j in range(13)] + [-201, -202, -203],  # r1: COW mid-block
+    [100 + j for j in range(16)] + [-301, -302],        # r2: boundary fork
+    [-400 - j for j in range(9)],                       # r3: no sharing
+]
+
+
+def test_paged_attention_shared_forked_tables_match_oracle():
+    a, q, kc, vc, tables, ctx = _alloc_shared_case(_SHARED_PROMPTS)
+    assert a.prefix_hits > 0 and a.cow_forks > 0      # case really shares
+    assert a.n_shared_blocks > 0
+    o = ops.paged_attention(q, kc, vc, jnp.asarray(tables),
+                            jnp.asarray(ctx))
+    r = ref.ref_paged_attention(q, kc, vc, tables, ctx)
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-5
+    # aliased layout == fully private layout: sharing is invisible to
+    # attention outputs (the whole point of COW block tables)
+    kp, vp, priv = _private_copy_case(_SHARED_PROMPTS, tables, ctx,
+                                      bt=8, hkv=2, d=32)
+    op = ops.paged_attention(q, kp, vp, jnp.asarray(priv),
+                             jnp.asarray(ctx))
+    assert float(jnp.max(jnp.abs(o - op))) < 1e-5
+
+
+def test_paged_attention_gqa_over_shared_tables():
+    a, q, kc, vc, tables, ctx = _alloc_shared_case(
+        _SHARED_PROMPTS, h=8, hkv=1, d=16, seed=3)
+    o = ops.paged_attention(q, kc, vc, jnp.asarray(tables),
+                            jnp.asarray(ctx))
+    r = ref.ref_paged_attention(q, kc, vc, tables, ctx)
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-5
+
+
+def test_paged_attention_spilled_shared_tables_match_oracle():
+    """Shared blocks re-tiered to the DRAM id range mid-adoption: the
+    tables mix scratch and DRAM physical ids, outputs unchanged."""
+    a, q, kc, vc, tables, ctx = _alloc_shared_case(
+        _SHARED_PROMPTS, n_blocks=4, dram=8, seed=5)
+    assert a.spilled_blocks > 0                       # re-tiering happened
+    assert tables.max() >= 4                          # DRAM ids in tables
+    o = ops.paged_attention(q, kc, vc, jnp.asarray(tables),
+                            jnp.asarray(ctx))
+    r = ref.ref_paged_attention(q, kc, vc, tables, ctx)
+    assert float(jnp.max(jnp.abs(o - r))) < 1e-5
+
+
+def test_paged_attention_poisoned_stale_shared_block():
+    """Free one reader of every shared block, poison every FREED
+    physical block with NaN: the survivors' outputs must not change —
+    no table may still point at a released block."""
+    a, q, kc, vc, tables, ctx = _alloc_shared_case(_SHARED_PROMPTS)
+    keep = np.asarray([1, 2, 3])
+    before = ops.paged_attention(q, kc, vc, jnp.asarray(tables),
+                                 jnp.asarray(ctx))[keep]
+    a.free(0)                                         # r0 leaves
+    freed = set(a._free_scratch) | set(a._free_dram)
+    live = {b for rid in keep for b in a.tables[rid].blocks}
+    assert freed and not (freed & live)
+    for b in freed:
+        kc = kc.at[b].set(jnp.nan)
+        vc = vc.at[b].set(jnp.nan)
+    after = ops.paged_attention(q[keep], kc, vc,
+                                jnp.asarray(tables[keep]),
+                                jnp.asarray(ctx[keep]))
+    assert bool(jnp.all(before == after))
+    assert not bool(jnp.any(jnp.isnan(after)))

@@ -1,7 +1,11 @@
-"""Paged KV-cache subsystem: block-allocator invariants, capacity-aware
-serving (admission by blocks, watermark preemption with recompute-on-
-resume, DRAM-hub spill traffic on the timeline, chunked prefill), and the
-paged-attention Pallas kernel vs its dense oracle (interpret mode)."""
+"""Paged KV-cache subsystem: block-allocator invariants (refcounted
+prefix sharing / copy-on-write included, differentially tested against a
+content-addressed naive model), capacity-aware serving (admission by
+blocks, watermark preemption with recompute-on-resume, DRAM-hub spill
+traffic on the timeline, chunked prefill), and the paged-attention
+Pallas kernel vs its dense oracle (interpret mode)."""
+from collections import Counter
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -24,22 +28,45 @@ def cfg():
 
 
 def _check_invariants(a: BlockAllocator):
-    """Every physical id free XOR owned by exactly one table; counts add
-    up; tables never over-allocate by more than one partial block; the
-    incremental DRAM counts / scan hints match a recount; and the heap
-    spill-victim index selects exactly what the reference scan would."""
+    """Every physical id free XOR owned (refcnt == number of tables
+    holding it, never twice in one table); counts add up over DISTINCT
+    ids; tables never over-allocate by more than one partial block; the
+    incremental DRAM counts / scan hints match a recount; the prefix
+    index is coherent (only live blocks, inverse maps agree); and the
+    heap spill-victim index selects exactly what the reference scan
+    would."""
     c = a.cfg
     owned = [b for t in a.tables.values() for b in t.blocks]
-    assert len(owned) == len(set(owned)), "block double-owned"
+    counts = Counter(owned)
+    # refcounts always match live mappings, sharing on or off
+    assert dict(counts) == a.refcnt, "refcnt drifted from live tables"
+    for b, readers in a._refs.items():
+        assert readers == {t.request_id for t in a.tables.values()
+                           if b in t.blocks}, "reader set drifted"
+    if not c.prefix_sharing:
+        assert all(n == 1 for n in counts.values()), "block double-owned"
+    assert a.n_shared_blocks == sum(1 for n in counts.values() if n >= 2)
+    distinct = set(owned)
     free = a._free_scratch + a._free_dram
-    assert not (set(owned) & set(free)), "block both free and owned"
-    assert len(owned) + len(free) == c.total_blocks
+    assert len(free) == len(set(free)), "block double-freed"
+    assert not (distinct & set(free)), "block both free and owned"
+    assert len(distinct) + len(free) == c.total_blocks
     for t in a.tables.values():
+        assert len(t.blocks) == len(set(t.blocks)), "block twice in table"
         assert len(t.blocks) == c.blocks_for(t.tokens)
         assert len(t.blocks) * c.block_tokens >= t.tokens
         assert t.n_dram == sum(1 for b in t.blocks if a.is_dram(b))
         # everything before the oldest-scratch scan hint is DRAM
         assert all(a.is_dram(b) for b in t.blocks[:t.scan])
+    # prefix-index coherence: indexed blocks are live, maps are inverse
+    for h, b in a._index.items():
+        assert b in a.refcnt, "index points at a freed block"
+        assert a._hash_of.get(b) == h
+        assert len(a._tok_of[b]) == c.block_tokens
+    for b in a._hash_of:
+        assert a._index.get(a._hash_of[b]) == b
+    for parent, b in a._next.items():
+        assert b in a.refcnt and a._parent_of.get(b) == parent
     # victim-order equivalence: O(log n) heap index == reference scan
     # (_spill_victim only prunes stale heap snapshots — state-safe)
     fast, ref = a._spill_victim(), a._spill_victim_reference()
@@ -172,6 +199,334 @@ def test_allocator_invariants_random_walk(n_blocks, dram, block_tokens,
         for rid, tokens in live.items():
             assert a.tables[rid].tokens >= tokens * 0  # table exists
     assert a.peak_used <= a.cfg.total_blocks
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing / copy-on-write
+# ---------------------------------------------------------------------------
+
+def _pcfg(n_blocks=8, block_tokens=4, dram_blocks=0, **kw):
+    return KVCacheConfig(n_blocks=n_blocks, block_tokens=block_tokens,
+                         dram_blocks=dram_blocks, bytes_per_token=8,
+                         prefix_sharing=True, **kw)
+
+
+def test_prefix_probe_adopt_register_roundtrip():
+    a = BlockAllocator(_pcfg())
+    toks = list(range(1, 13))                 # 12 tokens = 3 full blocks
+    assert a.probe_prefix(toks) == 0          # nothing indexed yet
+    a.ensure(1, 12)
+    a.register_prefix(1, toks)
+    _check_invariants(a)
+    # cap: at least one token must remain to prefill -> 2 of 3 blocks
+    assert a.probe_prefix(toks) == 2
+    assert a.probe_prefix(toks + [99]) == 3   # 13 tokens: all 3 adoptable
+    shared = a.adopt_prefix(2, toks)
+    _check_invariants(a)
+    # 2 whole blocks + COW head of the divergence block (tokens 9..11,
+    # capped to leave token 12 for prefill)
+    assert shared == 2 * 4 + 3
+    assert a.cow_forks == 1 and a.cow_copied_bytes == 3 * 8
+    assert a.prefix_hits == 2 and a.shared_tokens_saved == 11
+    t1, t2 = a.tables[1], a.tables[2]
+    assert t2.blocks[:2] == t1.blocks[:2]     # physically aliased
+    assert t2.blocks[2] != t1.blocks[2]       # forked private block
+    assert a.refcnt[t1.blocks[0]] == 2 and a.refcnt[t1.blocks[2]] == 1
+    a.ensure(2, 12)
+    _check_invariants(a)
+    a.free(1)
+    _check_invariants(a)
+    # survivor keeps the (formerly shared) blocks; they stay indexed
+    assert a.refcnt[t2.blocks[0]] == 1
+    assert a.probe_prefix(toks) == 2
+    a.free(2)
+    _check_invariants(a)
+    assert a.free_total() == a.cfg.total_blocks
+    assert a.probe_prefix(toks) == 0          # index fully drained
+
+
+def test_adopt_identical_prompt_shares_all_but_last_token():
+    a = BlockAllocator(_pcfg())
+    toks = list(range(100, 116))              # 16 tokens = 4 blocks
+    a.ensure(1, 16)
+    a.register_prefix(1, toks)
+    shared = a.adopt_prefix(2, toks)          # same prompt entirely
+    # 3 whole blocks + 3-token COW head of block 4 = 15 of 16 tokens
+    assert shared == 15
+    assert a.tables[2].tokens == 15
+    a.ensure(2, 16)
+    _check_invariants(a)
+    assert a.used_blocks() == 4 + 1           # one private fork block
+
+
+def test_cow_fork_at_block_boundary_copies_nothing():
+    """Divergence exactly at a block boundary: whole-block adoption, no
+    COW copy (the fork block's head match is empty)."""
+    a = BlockAllocator(_pcfg())
+    base = list(range(1, 9))                  # 2 shared blocks
+    a.ensure(1, 8)
+    a.register_prefix(1, base)
+    shared = a.adopt_prefix(2, base[:8] + [777, 778])
+    assert shared == 8                        # 2 blocks, zero COW bytes
+    assert a.cow_forks == 0 and a.cow_copied_bytes == 0
+    _check_invariants(a)
+
+
+def test_adopt_skips_fork_when_out_of_blocks():
+    """The COW fork must never raise: with zero free blocks the fork is
+    skipped and only whole-block sharing happens."""
+    a = BlockAllocator(_pcfg(n_blocks=3, dram_blocks=0))
+    toks = list(range(1, 13))
+    a.ensure(1, 12)                           # all 3 blocks
+    a.register_prefix(1, toks)
+    shared = a.adopt_prefix(2, toks)
+    assert shared == 8                        # 2 whole blocks, no fork
+    assert a.cow_forks == 0
+    _check_invariants(a)
+
+
+def test_sharing_off_prefix_api_is_inert():
+    a = BlockAllocator(KVCacheConfig(n_blocks=8, block_tokens=4))
+    toks = list(range(1, 13))
+    a.ensure(1, 12)
+    assert a.register_prefix(1, toks) == 0
+    assert a.probe_prefix(toks) == 0
+    assert a.adopt_prefix(2, toks) == 0
+    assert 2 not in a.tables
+    assert a.prefix_hits == a.cow_forks == a.shared_tokens_saved == 0
+    _check_invariants(a)
+
+
+def test_free_one_reader_of_spilled_shared_block_keeps_survivor():
+    """ISSUE 6 satellite: a block that is both SHARED and SPILLED must
+    survive one reader's free with the other reader's DRAM accounting
+    intact — re-tiering rewrites every reader's table, and freeing only
+    drops one refcount."""
+    spills = []
+    a = BlockAllocator(_pcfg(n_blocks=4, dram_blocks=4),
+                       on_spill=spills.append)
+    toks = list(range(1, 17))                 # 16 tokens = 4 blocks
+    a.ensure(1, 16)                           # all 4 scratch blocks
+    a.register_prefix(1, toks)
+    shared = a.adopt_prefix(2, toks)          # 3 shared + COW fork
+    # the fork had no free scratch: it spilled the coldest block — which
+    # is SHARED (r1's oldest == r2's first) — to DRAM for BOTH readers
+    assert shared == 15 and a.cow_forks == 1
+    assert spills and a.spilled_blocks == 1
+    _check_invariants(a)
+    assert a.dram_tokens(1) == 4 and a.dram_tokens(2) == 4
+    t1_blocks = list(a.tables[1].blocks)
+    assert a.tables[2].blocks[0] == t1_blocks[0]  # same re-tiered id
+    a.free(2)
+    _check_invariants(a)
+    # the survivor still sees its spilled block as DRAM-resident, the
+    # DRAM free list did NOT absorb a block another table still reads
+    assert a.dram_tokens(1) == 4
+    assert a.tables[1].blocks == t1_blocks
+    assert t1_blocks[0] not in a._free_dram
+    a.free(1)
+    _check_invariants(a)
+    assert a.free_total() == a.cfg.total_blocks
+
+
+def test_retier_updates_index_metadata():
+    """Spilling an INDEXED block keeps it adoptable: the prefix index
+    follows the content to its new physical id."""
+    a = BlockAllocator(_pcfg(n_blocks=2, dram_blocks=4))
+    toks = list(range(1, 9))                  # 2 blocks
+    a.ensure(1, 8)
+    a.register_prefix(1, toks)
+    a.ensure(2, 4)                            # forces a spill of r1[0]
+    _check_invariants(a)
+    assert a.dram_tokens(1) == 4
+    longer = toks + [55, 56, 57, 58]
+    n = a.probe_prefix(longer)
+    assert n == 2                             # both blocks still indexed
+    shared = a.adopt_prefix(3, longer)
+    assert shared == 8
+    assert a.tables[3].blocks[:2] == a.tables[1].blocks[:2]
+    _check_invariants(a)
+
+
+# -- differential: allocator vs a content-addressed naive model ------------
+
+class _NaiveSharingModel:
+    """Independent reference model of the sharing allocator's OBSERVABLE
+    state.  Blocks are identified by *content*: a shared prefix block by
+    its whole token-prefix tuple, a private block by (rid, position) —
+    no physical ids, free-list stacks, tiers or heaps.  Mirrors the
+    adopt/register/free contract with plain dicts."""
+
+    def __init__(self, cfg: KVCacheConfig):
+        self.bt = cfg.block_tokens
+        self.total = cfg.total_blocks
+        self.keys = {}       # rid -> list of content keys
+        self.readers = {}    # key -> set of rids
+        self.index = {}      # prefix tuple -> key
+        self.key_prefix = {}  # key -> the prefix tuple it is indexed as
+        self.child = {}      # parent prefix -> (divergence chunk, key)
+        self.hits = 0
+        self.saved = 0
+        self.forks = 0
+
+    def used(self) -> int:
+        return len(self.readers)
+
+    def _add(self, rid, key):
+        self.keys.setdefault(rid, []).append(key)
+        self.readers.setdefault(key, set()).add(rid)
+
+    def admit(self, rid, toks, can_fork: bool) -> int:
+        """Adopt the longest indexed prefix + optional COW fork; returns
+        the predicted shared token count."""
+        bt = self.bt
+        cap = max(0, (len(toks) - 1) // bt)
+        n = 0
+        while n < cap and tuple(toks[:(n + 1) * bt]) in self.index:
+            n += 1
+        if n == 0:
+            self.grow(rid, len(toks))
+            return 0
+        for i in range(n):
+            self._add(rid, self.index[tuple(toks[:(i + 1) * bt])])
+        self.hits += n
+        shared = n * bt
+        cand = self.child.get(tuple(toks[:shared]))
+        if cand is not None:
+            chunk = cand[0]
+            want = toks[shared:shared + bt]
+            m = 0
+            while m < len(chunk) and m < len(want) and chunk[m] == want[m]:
+                m += 1
+            m = min(m, len(toks) - 1 - shared)
+            if m > 0 and can_fork:
+                self._add(rid, ("fork", rid, n))
+                self.forks += 1
+                shared += m
+        self.saved += shared
+        self.grow(rid, len(toks))
+        return shared
+
+    def grow(self, rid, n_tokens) -> None:
+        have = self.keys.setdefault(rid, [])
+        while len(have) * self.bt < n_tokens:
+            self._add(rid, ("priv", rid, len(have)))
+
+    def register(self, rid, toks) -> None:
+        keys = self.keys[rid]
+        prev = ()
+        for i in range(min(len(toks) // self.bt, len(keys))):
+            pre = tuple(toks[:(i + 1) * self.bt])
+            if pre not in self.index and keys[i] not in self.key_prefix:
+                self.index[pre] = keys[i]
+                self.key_prefix[keys[i]] = pre
+                self.child.setdefault(
+                    prev, (tuple(toks[i * self.bt:(i + 1) * self.bt]),
+                           keys[i]))
+            prev = pre
+
+    def free(self, rid) -> None:
+        for key in self.keys.pop(rid):
+            r = self.readers[key]
+            r.discard(rid)
+            if not r:
+                del self.readers[key]
+                pre = self.key_prefix.pop(key, None)
+                if pre is not None:
+                    del self.index[pre]
+                    parent = pre[:-self.bt]
+                    if self.child.get(parent, (None, None))[1] == key:
+                        del self.child[parent]
+
+
+def _assert_matches_naive(a: BlockAllocator, naive: _NaiveSharingModel):
+    """The allocator's sharing structure must be ISOMORPHIC to the naive
+    model: same distinct-block usage, same stats, and a consistent
+    physical-id <-> content-key bijection across every table."""
+    assert a.used_blocks() == naive.used()
+    assert a.prefix_hits == naive.hits
+    assert a.shared_tokens_saved == naive.saved
+    assert a.cow_forks == naive.forks
+    assert set(a.tables) == set(naive.keys)
+    phys_of, key_of = {}, {}
+    for rid, keys in naive.keys.items():
+        blocks = a.tables[rid].blocks
+        assert len(blocks) == len(keys), (rid, blocks, keys)
+        for b, k in zip(blocks, keys):
+            assert phys_of.setdefault(k, b) == b, "key maps to two ids"
+            assert key_of.setdefault(b, k) == k, "id maps to two keys"
+    for b, k in key_of.items():
+        assert a.refcnt[b] == len(naive.readers[k])
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_blocks=st.integers(3, 14), dram=st.integers(0, 10),
+       block_tokens=st.integers(2, 6), seed=st.integers(0, 9999))
+def test_sharing_cow_random_walk_vs_naive_reference(n_blocks, dram,
+                                                    block_tokens, seed):
+    """Random admit(adopt+grow+register)/extend/free walks over a small
+    family of overlapping prompts: after EVERY operation the allocator
+    passes the full invariant check, indexed block contents never change
+    while referenced, and its observable state equals the naive
+    content-addressed model replayed on the same walk."""
+    rng = np.random.default_rng(seed)
+    cfg_ = KVCacheConfig(n_blocks=n_blocks, block_tokens=block_tokens,
+                         dram_blocks=dram, bytes_per_token=8,
+                         prefix_sharing=True)
+    a = BlockAllocator(cfg_)
+    naive = _NaiveSharingModel(cfg_)
+    live = {}                       # rid -> token list
+    frozen_chunks = {}              # chain hash -> first-seen chunk
+    next_rid = 1
+    for op in rng.integers(0, 4, size=60):
+        if op <= 1 or not live:                       # admit a request
+            rid, next_rid = next_rid, next_rid + 1
+            g = int(rng.integers(0, 2))               # shared family
+            cut = int(rng.integers(0, 4 * block_tokens))
+            p = cut + int(rng.integers(1, 2 * block_tokens))
+            toks = [g * 1000 + j for j in range(cut)] \
+                + [-(rid * 1000 + j) for j in range(p - cut)]
+            free0 = a.free_total()
+            hashes = a.chunk_hashes(toks)
+            shared = a.adopt_prefix(rid, toks, hashes)
+            try:
+                a.ensure(rid, len(toks))
+                ok = True
+            except OutOfBlocks:
+                ok = False
+            if ok:
+                a.register_prefix(rid, toks, hashes)
+                want = naive.admit(rid, toks, can_fork=free0 > 0)
+                assert shared == want, (shared, want)
+                naive.register(rid, toks)
+                live[rid] = toks
+            else:
+                a.free(rid)       # walk policy: drop on failed admit
+                naive.admit(rid, toks, can_fork=free0 > 0)
+                naive.free(rid)
+        elif op == 2:                                 # decode growth
+            rid = int(rng.choice(list(live)))
+            want = a.tables[rid].tokens \
+                + int(rng.integers(1, block_tokens + 1))
+            try:
+                a.ensure(rid, want)
+            except OutOfBlocks:
+                pass              # partial growth kept (covered below)
+            naive.grow(rid, a.tables[rid].tokens)
+        else:                                         # free a request
+            rid = int(rng.choice(list(live)))
+            a.free(rid)
+            naive.free(rid)
+            del live[rid]
+        _check_invariants(a)
+        _assert_matches_naive(a, naive)
+        # shared blocks are immutable: an indexed chunk's contents must
+        # never change for as long as any chain entry references it
+        for h, b in a._index.items():
+            assert frozen_chunks.setdefault(h, a._tok_of[b]) \
+                == a._tok_of[b], "indexed block mutated in place"
+    assert a.peak_used <= cfg_.total_blocks
+    assert a.peak_shared_blocks >= a.n_shared_blocks
 
 
 # ---------------------------------------------------------------------------

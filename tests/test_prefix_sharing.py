@@ -1,0 +1,185 @@
+"""Serving-level prefix sharing / copy-on-write (ISSUE 6): the engine
+wiring on top of the refcounted allocator — token-carrying traces are
+inert with sharing OFF (byte-identical reports and event streams),
+sharing ON recovers batch occupancy on prefix-heavy workloads without
+changing any request's results, COW copies land on the TimelineIR as
+``kv_cow`` C2C transfers (no new event kinds), preemption/resume
+re-adopts cleanly, and the whole shared path is pinned by a committed
+golden (tests/golden/prefix_golden.json)."""
+import dataclasses
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.timeline import C2CTransfer
+from repro.launch.serving_engine import (ContinuousBatchingEngine,
+                                         EngineConfig, poisson_trace)
+from repro.runtime.kv_cache import KVCacheConfig, kv_bytes_per_token
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "prefix_golden.json"
+
+
+def _hexdict(obj) -> dict:
+    d = dataclasses.asdict(obj)
+    d.pop("queue_depth", None)
+    return {k: (v.hex() if isinstance(v, float) else v) for k, v in d.items()}
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama3.2-1b")
+
+
+def _kvc(cfg, share: bool, n_blocks=120, dram=120):
+    return KVCacheConfig(n_blocks=n_blocks, block_tokens=16,
+                         dram_blocks=dram,
+                         bytes_per_token=kv_bytes_per_token(cfg),
+                         prefix_sharing=share)
+
+
+def _prefix_trace(prefix_len=256, n=12, prompt_len=320, max_new=24,
+                  seed=3, groups=2):
+    return poisson_trace(n, rate_rps=80, seed=seed, prompt_len=prompt_len,
+                         max_new=max_new, prefix_len=prefix_len,
+                         prefix_frac=0.85, prefix_groups=groups)
+
+
+def _run(cfg, share: bool, trace, **kv_kw):
+    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+        max_batch=4, ccpg=True, kv_cache=_kvc(cfg, share, **kv_kw),
+        chunked_prefill_tokens=64))
+    rep = eng.run(trace)
+    return eng, rep
+
+
+# ---------------------------------------------------------------------------
+# Back-compat: sharing OFF ignores tokens byte-for-byte
+# ---------------------------------------------------------------------------
+
+def test_tokens_inert_when_sharing_off(cfg):
+    """With prefix_sharing=False a token-carrying trace must reproduce
+    the tokenless run byte-for-byte: same report floats, same timeline
+    event stream, same kv accounting — prompt_tokens is dead weight."""
+    with_tokens = _prefix_trace()
+    stripped = [dataclasses.replace(r, prompt_tokens=None)
+                for r in with_tokens]
+    e1, r1 = _run(cfg, share=False, trace=with_tokens)
+    e2, r2 = _run(cfg, share=False, trace=stripped)
+    assert _hexdict(r1) == _hexdict(r2)
+    assert e1.timeline.events == e2.timeline.events
+    assert e1.kv_stats.row() == e2.kv_stats.row()
+    st = e1.kv_stats
+    assert not st.prefix_sharing
+    assert st.prefix_hits == st.cow_forks == st.shared_blocks_peak == 0
+
+
+# ---------------------------------------------------------------------------
+# Sharing ON: same results, better occupancy, coherent accounting
+# ---------------------------------------------------------------------------
+
+def test_sharing_preserves_results_and_improves_occupancy(cfg):
+    trace = _prefix_trace()
+    e_off, r_off = _run(cfg, share=False, trace=list(trace))
+    off_final = {r.request_id: (r.generated, r.context) for r in trace}
+    e_on, r_on = _run(cfg, share=True, trace=list(trace))
+    assert r_on.finished == r_off.finished == len(trace)
+    # every request produces the same tokens/context either way
+    for r in trace:
+        assert (r.generated, r.context) == off_final[r.request_id]
+        assert r.generated == r.max_new
+        assert r.context == r.prompt_len + r.max_new
+    st = e_on.kv_stats
+    assert st.prefix_sharing and st.prefix_hits > 0
+    assert 0.0 < st.prefix_hit_rate <= 1.0
+    assert st.prefix_hit_tokens > 0
+    assert st.shared_blocks_peak > 0
+    # dedup can only help the capacity path
+    assert r_on.mean_batch_occupancy >= r_off.mean_batch_occupancy
+    assert e_on.kv.peak_used <= e_off.kv.peak_used
+    # shared prompts skip prefill compute for their adopted tokens
+    assert r_on.tokens_prefilled < r_off.tokens_prefilled
+    # cache fully drained: refcounts all resolved
+    assert e_on.kv.free_total() == e_on.kv.cfg.total_blocks
+    assert e_on.kv.n_shared_blocks == 0
+
+
+def test_cow_copies_land_on_timeline_as_kv_cow(cfg):
+    """A prefix length that is NOT a block multiple forces mid-block
+    divergence: the fork's copied head must appear on the timeline as
+    ``kv_cow`` C2C transfers whose bytes total cow_copied_bytes — and as
+    a phase of the existing C2CTransfer kind, not a new event type."""
+    trace = _prefix_trace(prefix_len=250)
+    eng, rep = _run(cfg, share=True, trace=trace)
+    st = eng.kv_stats
+    assert st.cow_forks > 0 and st.cow_copied_bytes > 0
+    cow = [e for e in eng.timeline.events
+           if isinstance(e, C2CTransfer) and e.phase == "kv_cow"]
+    assert len(cow) == st.cow_forks
+    assert sum(e.nbytes for e in cow) == st.cow_copied_bytes
+    kinds = {type(e).__name__ for e in eng.timeline.events}
+    assert kinds <= {"ComputeSpan", "C2CTransfer", "ClusterWake",
+                     "ClusterSleep", "EnergySample", "TokenEmit"}
+
+
+def test_preempted_sharer_readopts_and_finishes(cfg):
+    """A cache tight enough to preempt sharers mid-decode: recompute-on-
+    resume re-adopts whatever is still indexed, every request finishes
+    with exact context, and the allocator drains to empty."""
+    trace = _prefix_trace(n=8, prompt_len=256, max_new=48, prefix_len=192)
+    eng, rep = _run(cfg, share=True, trace=trace, n_blocks=40, dram=0)
+    st = eng.kv_stats
+    assert rep.finished == len(trace) and rep.rejected == 0
+    assert st.preemptions > 0
+    for r in trace:
+        assert r.generated == r.max_new
+        assert r.context == r.prompt_len + r.max_new
+    assert eng.kv.free_total() == eng.kv.cfg.total_blocks
+
+
+def test_admission_credits_shared_blocks(cfg):
+    """can_admit with a fully indexed prefix admits a prompt that the
+    raw free-block count would refuse."""
+    kvc = _kvc(cfg, share=True, n_blocks=24, dram=0)
+    from repro.runtime.kv_cache import BlockAllocator
+    a = BlockAllocator(kvc)
+    toks = list(range(1, 24 * 16 - 31))      # fills 22 blocks
+    a.ensure(1, len(toks))
+    a.register_prefix(1, toks)
+    free = a.free_total()
+    assert not a.can_admit(len(toks) + 1)    # raw demand > free blocks
+    shared = a.probe_prefix(toks + [99])
+    assert shared > 0
+    assert a.can_admit(len(toks) + 1, shared_blocks=shared)
+    assert a.cfg.blocks_for(len(toks) + 1) - shared <= free
+
+
+# ---------------------------------------------------------------------------
+# Prefix-heavy serving golden: the SHARED path is pinned too
+# ---------------------------------------------------------------------------
+
+def _golden_payload(cfg) -> dict:
+    trace = _prefix_trace(prefix_len=250, n=10, prompt_len=320,
+                          max_new=16, seed=7)
+    eng, rep = _run(cfg, share=True, trace=trace)
+    st = eng.kv_stats
+    return {
+        "report": _hexdict(rep),
+        "kv": st.row(),
+        "n_events": eng.timeline.n_events,
+        "clock": eng.timeline.now.hex(),
+        "energy_J": eng.timeline.energy_J.hex(),
+    }
+
+
+def test_prefix_serving_golden_byte_identical(cfg):
+    golden = json.loads(GOLDEN_PATH.read_text())
+    assert _golden_payload(cfg) == golden
+
+
+if __name__ == "__main__":          # regenerate the golden after an
+    # INTENTIONAL behavior change:  PYTHONPATH=src python tests/test_prefix_sharing.py
+    payload = _golden_payload(get_config("llama3.2-1b"))
+    GOLDEN_PATH.write_text(json.dumps(payload, indent=1, sort_keys=True))
+    print(f"wrote {GOLDEN_PATH}")
