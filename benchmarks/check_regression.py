@@ -20,6 +20,11 @@ workload size (``smoke`` flag) — a slower CI runner is not a code
 regression.  On foreign hosts the microbench's own ``--min-speedup``
 floor is the (host-independent) gate.
 
+Individual metrics can override the tolerance via ``TOLERANCE_OVERRIDES``
+(longest key-prefix match per bench file) — so noisy wall-clock sweep
+metrics gate loose while deterministic simulated outputs in the same doc
+gate tight.
+
 Everything else (latency percentiles, byte counts, error percentages) is
 informational.  The simulator itself is deterministic, so a >10% drop in
 a simulated metric is a real modeling/scheduling regression, not noise.
@@ -48,7 +53,7 @@ BASELINE_DIR = BENCH_DIR / "baseline"
 # higher-is-better headline families (substring match on the metric key)
 HEADLINE = ("tokens_per_s", "tokens_per_J", "throughput_tok_s",
             "efficiency_tok_J", "speedup", "eff_impr",
-            "paged_vs_infinite_tput")
+            "paged_vs_infinite_tput", "cells_per_s")
 # lower-is-better families: real wall clocks (see microbench.py)
 LOWER_IS_BETTER = ("wall_ms",)
 # max relative host-calibration mismatch for wall-clock comparability
@@ -60,6 +65,36 @@ HOST_TOL = 0.30
 # run-to-run noise, tight enough to catch "the fast path lost its
 # speedup" (a real regression there is 3-15x, not 50%)
 WALL_BENCH_TOL = 0.50
+
+# Per-metric tolerance overrides: (bench artifact name, flattened-key
+# prefix) -> tolerance; the longest matching prefix wins, and an
+# override beats both the CLI tolerance and the wall-clock widening.
+# This lets one doc mix metric classes: BENCH_sweep.json carries noisy
+# wall-clock-derived numbers (speedup / cells-per-second — loose) NEXT
+# TO deterministic simulated outputs (per-cell tokens_per_s — tight),
+# which the doc-level WALL_BENCH_TOL widening alone cannot express.
+# The table is documented in EXPERIMENTS.md §Sweep-throughput.
+TOLERANCE_OVERRIDES = {
+    # ratio of two wall clocks in the same run: steadier than absolute
+    # walls, but still host-scheduler noise on both sides
+    ("BENCH_sweep.json", "sweep_speedup"): 0.35,
+    ("BENCH_sweep.json", "cells_per_s"): 0.50,
+    ("BENCH_sweep.json", "wall_ms"): 0.50,
+    # deterministic simulator outputs: exact, gate tight even though
+    # the doc carries a host calibration
+    ("BENCH_sweep.json", "tokens_per_s"): 0.10,
+}
+
+
+def metric_tolerance(bench: str, key: str, default: float) -> float:
+    """Effective tolerance for one metric: longest-prefix override for
+    ``(bench, key)`` if any, else ``default``."""
+    best = None
+    for (b, prefix), tol in TOLERANCE_OVERRIDES.items():
+        if b == bench and key.startswith(prefix):
+            if best is None or len(prefix) > best[0]:
+                best = (len(prefix), tol)
+    return default if best is None else best[1]
 
 
 def _flatten(prefix: str, obj, out: dict) -> None:
@@ -136,15 +171,16 @@ def compare(tolerance: float) -> int:
             c = cur[key]
             if b <= 0:
                 continue
-            if direction == "higher" and c < (1.0 - tol) * b:
+            tol_k = metric_tolerance(base_path.name, key, tol)
+            if direction == "higher" and c < (1.0 - tol_k) * b:
                 failures.append(
                     f"{base_path.name}:{key}: {c:.4g} < "
-                    f"{(1 - tol) * b:.4g} "
+                    f"{(1 - tol_k) * b:.4g} "
                     f"(baseline {b:.4g}, -{100 * (1 - c / b):.1f}%)")
-            elif direction == "lower" and c > (1.0 + tol) * b:
+            elif direction == "lower" and c > (1.0 + tol_k) * b:
                 failures.append(
                     f"{base_path.name}:{key}: {c:.4g} > "
-                    f"{(1 + tol) * b:.4g} "
+                    f"{(1 + tol_k) * b:.4g} "
                     f"(baseline {b:.4g}, +{100 * (c / b - 1):.1f}% "
                     f"wall-clock slowdown)")
     for cur_path in sorted(BENCH_DIR.glob("BENCH_*.json")):

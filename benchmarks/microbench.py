@@ -133,6 +133,69 @@ def bench_paged_path(smoke: bool, repeats: int):
                              chunked_prefill_tokens=512), repeats)
 
 
+def bench_sweep_path(smoke: bool, repeats: int):
+    """Batched sweep engine vs the scalar fast engine cell-by-cell
+    (ISSUE 7): the same paged grid both ways, asserted report- and
+    kv_stats-identical per cell before timing.  The scalar side
+    constructs a fresh simulator + engine per cell — exactly what every
+    sweep bench did before launch/sweep_engine existed."""
+    import copy
+    import dataclasses
+    from repro.configs import get_config
+    from repro.core import PicnicSimulator
+    from repro.launch.serving_engine import (ContinuousBatchingEngine,
+                                             EngineConfig, poisson_trace)
+    from repro.launch.sweep_engine import SweepCell, sweep_serve
+    from repro.runtime.kv_cache import kv_cache_from_model
+    cfg = get_config("llama3.2-1b")
+    kvc = dataclasses.replace(
+        kv_cache_from_model(cfg, kv_frac=0.5, dram_frac=1.0),
+        block_tokens=1024, n_blocks=24, dram_blocks=24)
+    sim = PicnicSimulator()
+    sim.ccpg_model.include_dram_hub = True
+    ctxs = (256,) if smoke else (256, 512)
+    mns = (1024,) if smoke else (512, 1024)
+    cells = [SweepCell(f"c{ctx}r{rate}b{mb}n{mn}", cfg,
+                       poisson_trace(6, rate_rps=rate, seed=0,
+                                     prompt_len=ctx, max_new=mn),
+                       EngineConfig(max_batch=mb, ccpg=True, kv_cache=kvc,
+                                    chunked_prefill_tokens=512), sim=sim)
+             for ctx in ctxs for rate in (20, 60) for mb in (4, 8)
+             for mn in mns]
+
+    def scalar():
+        out = []
+        for c in cells:
+            s2 = PicnicSimulator()
+            s2.ccpg_model.include_dram_hub = True
+            eng = ContinuousBatchingEngine(c.cfg, sim=s2, engine=c.engine)
+            rep = eng.run([copy.copy(r) for r in c.trace])
+            out.append((rep, eng.kv_stats))
+        return out
+
+    res = sweep_serve(cells)
+    for c, r, (rep, st) in zip(cells, res, scalar()):
+        assert r.report.row() == rep.row(), \
+            f"sweep cell {c.key}: batched engine diverged from scalar"
+        assert r.kv_stats.row() == st.row(), \
+            f"sweep cell {c.key}: batched kv_stats diverged from scalar"
+
+    wall_fast, _ = _best_wall(lambda: sweep_serve(cells), repeats)
+    wall_ref, _ = _best_wall(scalar, repeats)
+    tokens = sum(r.report.tokens_generated + r.report.tokens_prefilled
+                 for r in res)
+    return {
+        "name": "sweep",
+        "n_cells": len(cells),
+        "sim_tokens": tokens,
+        "wall_fast_s": wall_fast,
+        "wall_reference_s": wall_ref,
+        "speedup": wall_ref / wall_fast,
+        "tokens_per_wall_s_fast": tokens / wall_fast,
+        "tokens_per_wall_s_reference": tokens / wall_ref,
+    }
+
+
 def bench_table_ii_path(smoke: bool, repeats: int):
     """The analytic Table-II walk: columnar vs object TimelineIR (the
     cycle-model memo hits across the 9-row sweep's repeated shapes)."""
@@ -196,6 +259,7 @@ def main() -> int:
         bench_serving_path(args.smoke, repeats),
         bench_paged_path(args.smoke, repeats),
         bench_table_ii_path(args.smoke, repeats),
+        bench_sweep_path(args.smoke, repeats),
     ]
 
     doc = {
@@ -216,7 +280,7 @@ def main() -> int:
                 for c in cases},
             "events_per_wall_s": {
                 c["name"]: round(c["events_per_wall_s_fast"], 1)
-                for c in cases},
+                for c in cases if "events_per_wall_s_fast" in c},
         },
         "rows": cases,
     }
@@ -230,7 +294,7 @@ def main() -> int:
         print(f"{c['name']},{c['speedup']:.2f},"
               f"{c['tokens_per_wall_s_fast']:.0f},"
               f"{c['tokens_per_wall_s_reference']:.0f},"
-              f"{c['events_per_wall_s_fast']:.0f}")
+              f"{c.get('events_per_wall_s_fast', float('nan')):.0f}")
     print(f"wrote {args.out}")
 
     if args.min_speedup is not None:

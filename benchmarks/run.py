@@ -13,6 +13,8 @@ stays machine-readable across PRs (uploaded by CI).
 """
 from __future__ import annotations
 
+import dataclasses
+import itertools
 import json
 import sys
 import time
@@ -49,15 +51,63 @@ def _save(name, obj):
         json.dump(obj, f, indent=1, default=str)
 
 
-def _bench_artifact(name, metrics, rows=None):
+def _bench_artifact(name, metrics, rows=None, extra=None):
     """BENCH_<name>.json — one stable schema per bench across PRs so the
-    perf trajectory is machine-diffable (CI uploads these)."""
+    perf trajectory is machine-diffable (CI uploads these).  ``extra``
+    merges additional top-level keys (e.g. the ``host_ops_per_s``
+    calibration fingerprint that check_regression.py uses to decide
+    wall-clock comparability)."""
     ART.mkdir(parents=True, exist_ok=True)
     doc = {"bench": name, "schema": 1, "metrics": metrics}
     if rows is not None:
         doc["rows"] = rows
+    if extra:
+        doc.update(extra)
     with open(ART / f"BENCH_{name}.json", "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True, default=str)
+
+
+@dataclasses.dataclass
+class Cell:
+    """One point of a benchmark sweep grid: ordered ``(axis, value)``
+    pairs plus the abbreviation map used to render its artifact key."""
+    axes: tuple
+    abbrev: dict
+
+    def __getitem__(self, name):
+        for k, v in self.axes:
+            if k == name:
+                return v
+        raise KeyError(name)
+
+    def get(self, name, default=None):
+        return next((v for k, v in self.axes if k == name), default)
+
+    def key(self, *, without=()) -> str:
+        """Stable artifact key: ``<abbrev><value>`` fragments joined by
+        ``_`` in axis order.  Bools render as 0/1; a ``None`` axis value
+        is skipped (sparse axes — e.g. ``prefix_sharing`` only appears
+        on the prefix cells); ``without`` drops axes (the paged bench's
+        tier-free keys)."""
+        parts = []
+        for name, value in self.axes:
+            if name in without or value is None:
+                continue
+            if isinstance(value, bool):
+                value = int(value)
+            parts.append(f"{self.abbrev.get(name, name)}{value}")
+        return "_".join(parts)
+
+
+def cell_grid(axes, abbrev=None):
+    """Cartesian product of named axes -> list of :class:`Cell` in
+    row-major (last axis fastest) order.  Replaces the ad-hoc per-bench
+    key builders (the `_prefix{0,1}` disambiguation pattern) with one
+    stable naming scheme shared by every sweep bench."""
+    abbrev = abbrev or {}
+    names = list(axes)
+    return [Cell(tuple(zip(names, vals)), abbrev)
+            for vals in itertools.product(*axes.values())]
 
 
 # ---------------------------------------------------------------------------
@@ -199,20 +249,29 @@ def bench_fig10_timeline():
 def bench_serving():
     """Continuous-batching serving engine: the same 64-request Poisson
     trace (Llama-1B 512/64) served 1-at-a-time vs batch-8, ccpg off/on.
-    Headline: batched decode throughput at batch 8 vs sequential."""
+    Headline: batched decode throughput at batch 8 vs sequential.  The
+    four cells run as one batched pass through launch/sweep_engine
+    (byte-identical to the scalar engine per cell — locked by the sweep
+    differential suite)."""
     from repro.configs import get_config
-    from repro.launch.serving_engine import poisson_trace, serve_trace
+    from repro.core import PicnicSimulator
+    from repro.launch.serving_engine import EngineConfig, poisson_trace
+    from repro.launch.sweep_engine import SweepCell, sweep_serve
     t0 = time.time()
     cfg = get_config("llama3.2-1b")
-    rows = []
-    tput = {}
-    for batch in (1, 8):
-        for ccpg in (False, True):
-            trace = poisson_trace(64, rate_rps=40, seed=0,
-                                  prompt_len=512, max_new=64)
-            rep = serve_trace(cfg, trace, max_batch=batch, ccpg=ccpg)
-            tput[(batch, ccpg)] = rep.tokens_per_s
-            rows.append({"max_batch": batch, **rep.row()})
+    sim = PicnicSimulator()
+    grid = cell_grid({"max_batch": (1, 8), "ccpg": (False, True)})
+    cells = [SweepCell(c.key(), cfg,
+                       poisson_trace(64, rate_rps=40, seed=0,
+                                     prompt_len=512, max_new=64),
+                       EngineConfig(max_batch=c["max_batch"],
+                                    ccpg=c["ccpg"]), sim=sim)
+             for c in grid]
+    results = sweep_serve(cells)
+    rows = [{"max_batch": c["max_batch"], **r.report.row()}
+            for c, r in zip(grid, results)]
+    tput = {(c["max_batch"], c["ccpg"]): r.report.tokens_per_s
+            for c, r in zip(grid, results)}
     speedup = tput[(8, False)] / tput[(1, False)]
     _save("serving", rows)
     _bench_artifact("serving", {
@@ -239,93 +298,169 @@ def bench_paged():
     throughput the paged engine keeps at the longest context — plus the
     ISSUE 6 prefix-heavy cell, where copy-on-write prefix sharing
     recovers the batch occupancy that long shared system prompts cost."""
-    import dataclasses
     from repro.configs import get_config
     from repro.core import PicnicSimulator
-    from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                             EngineConfig, poisson_trace)
+    from repro.launch.serving_engine import EngineConfig, poisson_trace
+    from repro.launch.sweep_engine import SweepCell, sweep_serve
     from repro.runtime.kv_cache import kv_cache_from_model
     t0 = time.time()
     arch = "llama3.2-1b"
     cfg = get_config(arch)
     kvc = kv_cache_from_model(cfg, kv_frac=0.5, dram_frac=1.0)
-    rows = []
-    tput = {}
-    for ctx in (512, 2048, 8192):
-        for rate in (20, 60):
-            for paged in (False, True):
-                sim = PicnicSimulator()
-                if paged:
-                    sim.ccpg_model.include_dram_hub = True
-                eng = ContinuousBatchingEngine(cfg, sim=sim, engine=EngineConfig(
-                    max_batch=8, ccpg=True,
-                    kv_cache=kvc if paged else None,
-                    chunked_prefill_tokens=512 if paged else 0))
-                # max_new keeps residents decoding long enough to build
-                # co-residency — the regime where capacity binds (short
-                # decodes are prefill-serial and never stress the cache)
-                trace = poisson_trace(16, rate_rps=rate, seed=0,
-                                      prompt_len=ctx, max_new=256)
-                rep = eng.run(trace)
-                st = eng.kv_stats
-                tput[(ctx, rate, paged)] = rep.tokens_per_s
-                rows.append({
-                    "ctx": ctx, "rate_rps": rate, "paged": paged,
-                    **rep.row(),
-                    **({"kv": st.row()} if st is not None else {}),
-                })
-    keep = tput[(8192, 60, True)] / tput[(8192, 60, False)]
-
-    # prefix-heavy cell (ISSUE 6): 90% of requests carry a long shared
+    abbrev = {"rate_rps": "r", "paged": "p", "prefix_sharing": "prefix"}
+    grid = cell_grid({"ctx": (512, 2048, 8192), "rate_rps": (20, 60),
+                      "paged": (False, True)}, abbrev=abbrev)
+    # prefix-heavy cells (ISSUE 6): 90% of requests carry a long shared
     # system prefix (8064 of 8192 prompt tokens) at the capacity-bound
     # corner — without sharing each sharer pays the full footprint and
     # mean batch collapses to ~2.4; COW prefix sharing dedups the common
     # blocks and recovers most of the occupancy
-    mean_batch = {}
-    for share in (False, True):
-        sim = PicnicSimulator()
-        sim.ccpg_model.include_dram_hub = True
-        eng = ContinuousBatchingEngine(cfg, sim=sim, engine=EngineConfig(
-            max_batch=8, ccpg=True,
-            kv_cache=dataclasses.replace(kvc, prefix_sharing=share),
-            chunked_prefill_tokens=512))
-        trace = poisson_trace(24, rate_rps=60, seed=0, prompt_len=8192,
-                              max_new=512, prefix_len=8064, prefix_frac=0.9)
-        rep = eng.run(trace)
-        mean_batch[share] = rep.mean_batch_occupancy
-        rows.append({
-            "ctx": 8192, "rate_rps": 60, "paged": True,
-            "prefix": True, "prefix_sharing": share,
-            **rep.row(), "kv": eng.kv_stats.row(),
-        })
+    grid += cell_grid({"ctx": (8192,), "rate_rps": (60,), "paged": (True,),
+                       "prefix_sharing": (False, True)}, abbrev=abbrev)
+    sim_plain = PicnicSimulator()
+    sim_hub = PicnicSimulator()
+    sim_hub.ccpg_model.include_dram_hub = True
+    cells = []
+    for c in grid:
+        share = c.get("prefix_sharing")
+        if share is None:
+            # max_new keeps residents decoding long enough to build
+            # co-residency — the regime where capacity binds (short
+            # decodes are prefill-serial and never stress the cache)
+            kv = kvc if c["paged"] else None
+            trace = poisson_trace(16, rate_rps=c["rate_rps"], seed=0,
+                                  prompt_len=c["ctx"], max_new=256)
+        else:
+            kv = dataclasses.replace(kvc, prefix_sharing=share)
+            trace = poisson_trace(24, rate_rps=60, seed=0, prompt_len=8192,
+                                  max_new=512, prefix_len=8064,
+                                  prefix_frac=0.9)
+        cells.append(SweepCell(
+            c.key(), cfg, trace,
+            EngineConfig(max_batch=8, ccpg=True, kv_cache=kv,
+                         chunked_prefill_tokens=512 if kv else 0),
+            sim=sim_hub if c["paged"] else sim_plain))
+    results = sweep_serve(cells)
+
+    rows, tput, mean_batch = [], {}, {}
+    for c, res in zip(grid, results):
+        rep, st = res.report, res.kv_stats
+        share = c.get("prefix_sharing")
+        if share is None:
+            tput[(c["ctx"], c["rate_rps"], c["paged"])] = rep.tokens_per_s
+            rows.append({
+                "ctx": c["ctx"], "rate_rps": c["rate_rps"],
+                "paged": c["paged"], **rep.row(),
+                **({"kv": st.row()} if st is not None else {}),
+            })
+        else:
+            mean_batch[share] = rep.mean_batch_occupancy
+            rows.append({
+                "ctx": c["ctx"], "rate_rps": c["rate_rps"], "paged": True,
+                "prefix": True, "prefix_sharing": share,
+                **rep.row(), "kv": st.row(),
+            })
+    keep = tput[(8192, 60, True)] / tput[(8192, 60, False)]
     recovery = mean_batch[True] / mean_batch[False]
 
-    def _key(r, tier=True):
-        k = f"ctx{r['ctx']}_r{r['rate_rps']}"
-        if tier:
-            k += f"_p{int(r['paged'])}"
-        if r.get("prefix"):
-            k += f"_prefix{int(r['prefix_sharing'])}"
-        return k
-
     _save("paged", rows)
+    keyed = list(zip((c.key() for c in grid), rows))
+    tiered = [(c.key(without=("paged",)), r)
+              for c, r in zip(grid, rows) if r["paged"]]
     _bench_artifact("paged", {
         "paged_vs_infinite_tput_at_8k": round(keep, 3),
         "prefix_batch_recovery_speedup": round(recovery, 3),
         "prefix_mean_batch": {"off": round(mean_batch[False], 2),
                               "on": round(mean_batch[True], 2)},
         "kv_blocks": kvc.n_blocks,
-        "tokens_per_s": {_key(r): r["tokens_per_s"] for r in rows},
-        "tokens_per_J": {_key(r): r["tokens_per_J"] for r in rows},
-        "p99_latency_s": {_key(r): r["p99_latency_s"] for r in rows},
-        "preemptions": {_key(r, tier=False): r["kv"]["preemptions"]
-                        for r in rows if r["paged"]},
-        "spilled_MB": {_key(r, tier=False):
-                       round(r["kv"]["spilled_bytes"] / 1e6, 2)
-                       for r in rows if r["paged"]},
+        "tokens_per_s": {k: r["tokens_per_s"] for k, r in keyed},
+        "tokens_per_J": {k: r["tokens_per_J"] for k, r in keyed},
+        "p99_latency_s": {k: r["p99_latency_s"] for k, r in keyed},
+        "preemptions": {k: r["kv"]["preemptions"] for k, r in tiered},
+        "spilled_MB": {k: round(r["kv"]["spilled_bytes"] / 1e6, 2)
+                       for k, r in tiered},
     }, rows=rows)
     _emit("paged", t0, f"paged_vs_infinite_tput_at_8k={keep:.3f} "
                        f"prefix_batch_recovery_speedup={recovery:.2f}x")
+    return rows
+
+
+def bench_sweep():
+    """Vectorized sweep engine (ISSUE 7 tentpole): a 64-cell paged
+    capacity grid — ctx x arrival-rate x max_batch x max_new in the
+    long-generation decode regime (reasoning-style workloads, coarse
+    2048-token KV blocks) — advanced in lockstep by launch/sweep_engine
+    vs the PR-5 scalar fast engine run cell-by-cell with a fresh
+    simulator per cell (exactly how this harness executed sweeps before
+    this refactor).  Every cell is asserted report-identical between the
+    two paths before any number is recorded, so the speedup can never be
+    bought with a behavior change.  The doc carries the host-calibration
+    fingerprint (see microbench.py); per-cell tokens_per_s values are
+    deterministic simulated outputs and gate tight via the
+    check_regression.py TOLERANCE_OVERRIDES table."""
+    import copy
+    from repro.configs import get_config
+    from repro.core import PicnicSimulator
+    from repro.launch.serving_engine import (ContinuousBatchingEngine,
+                                             EngineConfig, poisson_trace)
+    from repro.launch.sweep_engine import SweepCell, sweep_serve
+    from repro.runtime.kv_cache import kv_cache_from_model
+    try:
+        from benchmarks.microbench import _host_calibration
+    except ImportError:                     # `python benchmarks/run.py`
+        from microbench import _host_calibration
+    t0 = time.time()
+    cfg = get_config("llama3.2-1b")
+    kvc = dataclasses.replace(
+        kv_cache_from_model(cfg, kv_frac=0.5, dram_frac=1.0),
+        block_tokens=2048, n_blocks=24, dram_blocks=24)
+    sim = PicnicSimulator()
+    sim.ccpg_model.include_dram_hub = True
+    grid = cell_grid({"ctx": (256, 1024),
+                      "rate_rps": (10, 20, 30, 40, 50, 60, 80, 100),
+                      "max_batch": (4, 8), "max_new": (2048, 4096)},
+                     abbrev={"rate_rps": "r", "max_batch": "b",
+                             "max_new": "n"})
+    cells = [SweepCell(c.key(), cfg,
+                       poisson_trace(6, rate_rps=c["rate_rps"], seed=0,
+                                     prompt_len=c["ctx"],
+                                     max_new=c["max_new"]),
+                       EngineConfig(max_batch=c["max_batch"], ccpg=True,
+                                    kv_cache=kvc,
+                                    chunked_prefill_tokens=512),
+                       sim=sim)
+             for c in grid]
+    cal = _host_calibration()
+    t_sw = time.perf_counter()
+    results = sweep_serve(cells)
+    t_sw = time.perf_counter() - t_sw
+    t_sc = time.perf_counter()
+    refs = []
+    for c in cells:
+        s2 = PicnicSimulator()
+        s2.ccpg_model.include_dram_hub = True
+        eng = ContinuousBatchingEngine(c.cfg, sim=s2, engine=c.engine)
+        refs.append(eng.run([copy.copy(r) for r in c.trace]))
+    t_sc = time.perf_counter() - t_sc
+    for c, res, ref in zip(cells, results, refs):
+        assert res.fallback is None, (c.key, res.fallback)
+        assert res.report.row() == ref.row(), \
+            f"sweep cell {c.key}: batched engine diverged from scalar"
+    speedup = t_sc / t_sw
+    rows = [{"cell": c.key, **r.report.row()}
+            for c, r in zip(cells, results)]
+    _save("sweep", rows)
+    _bench_artifact("sweep", {
+        "sweep_speedup_64cell": round(speedup, 2),
+        "cells_per_s": round(len(cells) / t_sw, 1),
+        "wall_ms": {"sweep": round(t_sw * 1e3, 1),
+                    "scalar_per_cell": round(t_sc * 1e3, 1)},
+        "n_cells": len(cells),
+        "tokens_per_s": {c.key: r.report.tokens_per_s
+                         for c, r in zip(cells, results)},
+    }, rows=rows, extra={"host_ops_per_s": round(cal, 1)})
+    _emit("sweep", t0, f"speedup_vs_scalar_per_cell={speedup:.1f}x_"
+                       f"cells_per_s={len(cells) / t_sw:.0f}")
     return rows
 
 
@@ -537,6 +672,7 @@ BENCHES = {
     "fig10_timeline": bench_fig10_timeline,
     "serving": bench_serving,
     "paged": bench_paged,
+    "sweep": bench_sweep,
     "distributed": bench_distributed,
     "roofline": bench_roofline,
     "kernels": bench_kernels,

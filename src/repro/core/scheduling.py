@@ -23,6 +23,8 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .energy import TileSpec
 from .mapping import map_layer
 from .noc import Mesh2D, MeshConfig
@@ -155,6 +157,13 @@ class CycleModel:
     # calibration constants participate in the cache key, so mutating
     # `alpha` & friends (tests do) can never serve a stale entry.
     memoize: bool = True
+    # Memo capacities (entries, LRU-evicted).  Thousand-cell sweeps share
+    # one CycleModel across every cell of a grid; if the working set of
+    # (alloc, batch) / (chunk, ctx_before) shapes exceeds these, the LRU
+    # thrashes silently — memo_stats() exposes hit/miss/eviction counters
+    # so the thrash is visible and the knobs make it fixable.
+    decode_memo_max: int = 256
+    prefill_memo_max: int = 4096
     # --- calibrated constants (least-squares fit on the nine Table II rows;
     #     all rows reproduced within +-7%, see EXPERIMENTS.md) -------------
     # 1. Per-token SMAC cost: 'cycles_per_tile' per active 256x256 crossbar
@@ -185,6 +194,8 @@ class CycleModel:
     # the decode affinity check probes the direct walk at these ctx sums;
     # a mismatch at any of them marks the (alloc, b) entry non-affine
     _AFFINE_PROBES = (1, 1009, 65537)
+    # legacy class-level capacity aliases (pre-knob callers); the
+    # instance fields above are authoritative
     _DECODE_MEMO_MAX = 256
     _PREFILL_MEMO_MAX = 4096
     # any assignment to these invalidates the memo (via the version
@@ -211,7 +222,25 @@ class CycleModel:
         self._decode_memo: "OrderedDict" = OrderedDict()
         self._decode_hot: Optional[tuple] = None   # last (key, entry)
         self._prefill_memo: "OrderedDict" = OrderedDict()
+        self._stats = {
+            "decode_hot_hits": 0, "decode_hits": 0, "decode_misses": 0,
+            "decode_evictions": 0, "prefill_hits": 0, "prefill_misses": 0,
+            "prefill_evictions": 0,
+        }
         object.__setattr__(self, "_cal_ver", getattr(self, "_cal_ver", 0))
+
+    def memo_stats(self) -> Dict[str, int]:
+        """Hit/miss/eviction counters plus current sizes & capacities of
+        the decode and prefill memos.  Non-zero ``*_evictions`` on a sweep
+        means the LRU working set exceeds the capacity knobs
+        (``decode_memo_max`` / ``prefill_memo_max``) and the grid is
+        silently re-walking layer costs — raise the knob."""
+        out = dict(self._stats)
+        out["decode_size"] = len(self._decode_memo)
+        out["decode_max"] = self.decode_memo_max
+        out["prefill_size"] = len(self._prefill_memo)
+        out["prefill_max"] = self.prefill_memo_max
+        return out
 
     def _decode_key(self, cfg, alloc: ChipletAllocation, b: int) -> tuple:
         return (id(alloc), cfg.d_model, b, self._cal_ver)
@@ -318,12 +347,14 @@ class CycleModel:
             entry = hot[1]
             base, n_attn, c2c_cyc, c2c_bytes, _ = entry
             if n_attn is not None:
+                self._stats["decode_hot_hits"] += 1
                 return (base
                         + n_attn * int(self.ctx_cycles_per_pos * ctx_sum),
                         c2c_cyc, c2c_bytes)
         memo = self._decode_memo
         entry = memo.get(key)
         if entry is None:
+            self._stats["decode_misses"] += 1
             base, c2c_cyc, c2c_bytes = \
                 self._decode_split_walk(cfg, alloc, 0, b)
             n_attn = sum(1 for ld, _ in alloc.assignments
@@ -335,9 +366,11 @@ class CycleModel:
             entry = (base, n_attn if affine else None, c2c_cyc,
                      c2c_bytes, alloc)
             memo[key] = entry
-            while len(memo) > self._DECODE_MEMO_MAX:
+            while len(memo) > self.decode_memo_max:
                 memo.popitem(last=False)
+                self._stats["decode_evictions"] += 1
         else:
+            self._stats["decode_hits"] += 1
             memo.move_to_end(key)
         self._decode_hot = (key, entry)
         base, n_attn, c2c_cyc, c2c_bytes, _ = entry
@@ -430,12 +463,15 @@ class CycleModel:
             memo = self._prefill_memo
             entry = memo.get(key)
             if entry is not None:
+                self._stats["prefill_hits"] += 1
                 memo.move_to_end(key)
                 return entry[0]
+            self._stats["prefill_misses"] += 1
             result = self._prefill_chunk_walk(cfg, alloc, chunk, ctx_before)
             memo[key] = (result, alloc)
-            while len(memo) > self._PREFILL_MEMO_MAX:
+            while len(memo) > self.prefill_memo_max:
                 memo.popitem(last=False)
+                self._stats["prefill_evictions"] += 1
             return result
         return self._prefill_chunk_walk(cfg, alloc, chunk, ctx_before)
 
@@ -460,3 +496,106 @@ class CycleModel:
         cyc = stream_cyc + attn_cyc + fill
         c2c_bytes = chunk * d * max(0, alloc.n_chiplets - 1)
         return int(cyc * self.alpha), c2c_bytes
+
+
+# ---------------------------------------------------------------------------
+# Batched cost surface (the sweep engine's cell-major view)
+# ---------------------------------------------------------------------------
+
+class DecodeCostSurface:
+    """Cell-major batched view of :meth:`CycleModel.decode_affine`.
+
+    Where ``decode_affine`` exports the affine decode decomposition for one
+    ``(alloc, b)`` at a time, the surface tabulates it for every batch size
+    ``1..max_batch`` so a whole grid of cells can price one decode round in
+    a handful of numpy ops::
+
+        cyc = int((base[b] + n_attn[b] * int(cpp * ctx_sum)) * alpha)
+
+    evaluated elementwise over cell vectors ``b_vec`` / ``ctx_sum_vec``.
+    Each lane performs exactly the scalar engine's arithmetic (same
+    truncation points, same float64 ops), so per-cell results are
+    bit-identical to pricing the cells one at a time.
+
+    The surface shares the model's memo (building it populates the decode
+    LRU; rebuilds after a hit are O(1) lookups) and its invalidation
+    story: ``cal_ver`` snapshots the model's ``__setattr__`` calibration
+    stamp, so mutating ``alpha`` & friends on the shared model invalidates
+    every cell of every sweep at once — callers re-validate with
+    :meth:`refresh` before each use.
+
+    ``affine[b]`` is False for batch sizes where a subclass made the cost
+    non-affine (or ``memoize`` is off, in which case every lane is False);
+    cells at those batch sizes must fall back to the scalar walk.
+    """
+
+    def __init__(self, model: CycleModel, cfg, alloc: ChipletAllocation,
+                 max_batch: int):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.model = model
+        self.cfg = cfg
+        self.alloc = alloc
+        self.max_batch = int(max_batch)
+        self._build()
+
+    def _build(self) -> None:
+        m = self.model
+        n = self.max_batch + 1          # index directly by batch size
+        self.base = np.zeros(n, dtype=np.int64)
+        self.n_attn = np.zeros(n, dtype=np.int64)
+        self.c2c_bytes = np.zeros(n, dtype=np.int64)
+        self.affine = np.zeros(n, dtype=bool)
+        for b in range(1, n):
+            aff = m.decode_affine(self.cfg, self.alloc, b)
+            if aff is None:
+                continue
+            base, n_attn, c2cb, _cpp, _alpha, _ver = aff
+            self.base[b] = base
+            self.n_attn[b] = n_attn
+            self.c2c_bytes[b] = c2cb
+            self.affine[b] = True
+        self.cpp = float(m.ctx_cycles_per_pos)
+        self.alpha = float(m.alpha)
+        self.cal_ver = m._cal_ver
+
+    def valid(self) -> bool:
+        return self.cal_ver == self.model._cal_ver
+
+    def refresh(self) -> bool:
+        """Rebuild iff the model's calibration stamp moved since the last
+        build.  Returns True when a rebuild happened (callers holding
+        per-cell snapshots of base/n_attn must re-gather)."""
+        if self.valid():
+            return False
+        self._build()
+        return True
+
+    def decode_cycles(self, b_vec, ctx_sum_vec) -> np.ndarray:
+        """Pre-CCPG cycles of one decode round per cell — vectorized over
+        cells.  ``b_vec`` are per-cell batch sizes (1..max_batch, affine
+        lanes only), ``ctx_sum_vec`` per-cell context sums."""
+        b = np.asarray(b_vec, dtype=np.int64)
+        ctx = np.asarray(ctx_sum_vec, dtype=np.int64)
+        cyc = self.base[b] + self.n_attn[b] * (self.cpp * ctx).astype(np.int64)
+        return (cyc.astype(np.float64) * self.alpha).astype(np.int64)
+
+    def prefill_chunk_cycles(self, chunk_vec, ctx_before_vec
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """(cycles, c2c_bytes) per cell for prefill chunk shapes — array
+        in, array out, served from the model's shared prefill LRU (the
+        quadratic attention term has no affine shortcut, so this is a
+        memo-backed gather rather than closed-form arithmetic)."""
+        chunk = np.asarray(chunk_vec, dtype=np.int64)
+        before = np.asarray(ctx_before_vec, dtype=np.int64)
+        if chunk.shape != before.shape:
+            raise ValueError("chunk/ctx_before shape mismatch")
+        cyc = np.empty(chunk.shape, dtype=np.int64)
+        c2cb = np.empty(chunk.shape, dtype=np.int64)
+        m, cfg, alloc = self.model, self.cfg, self.alloc
+        flat_c, flat_b = chunk.ravel(), before.ravel()
+        out_c, out_b = cyc.ravel(), c2cb.ravel()
+        for i in range(flat_c.size):
+            out_c[i], out_b[i] = m.prefill_chunk_cycles(
+                cfg, alloc, int(flat_c[i]), int(flat_b[i]))
+        return cyc, c2cb

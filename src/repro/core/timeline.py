@@ -38,9 +38,19 @@ one-dataclass-per-append recorder; both modes run the same float
 arithmetic in the same order, so they are byte-identical — locked by
 tests/test_fastpath.py.
 
+``aggregate_only=True`` goes one step further: NO event stream at all —
+only the running per-(class, kind) sums and per-class counts that the
+columnar recorder already maintains internally.  Same accumulator
+arithmetic in the same append order (so every derived aggregate stays
+bit-identical to the other modes), but reading ``events`` / ``column``
+/ the trace exporters raises.  This is the sweep-engine recorder: a
+grid of N cells keeps N aggregate-only timelines, mirrored into one
+cell-major :class:`SweepAggregates` array block while the vectorized
+round loop advances all cells at once.
+
 Aggregate queries (`cycles()` / `span_seconds()` / `count()` /
 `total_energy_J()`) read running per-(class, kind) sums maintained on
-append — O(1) instead of an O(E) event scan — in BOTH modes.
+append — O(1) instead of an O(E) event scan — in ALL modes.
 """
 from __future__ import annotations
 
@@ -49,6 +59,8 @@ from collections import defaultdict
 from dataclasses import dataclass
 from typing import (Dict, Iterator, List, Optional, Sequence, Tuple, Type,
                     Union)
+
+import numpy as np
 
 from .interconnect import LinkSpec, OPTICAL, c2c_average_power
 
@@ -148,9 +160,11 @@ class Timeline:
     count aggregates behind `cycles()` / `span_seconds()` / `count()`.
     """
 
-    def __init__(self, link: LinkSpec = OPTICAL, *, columnar: bool = True):
+    def __init__(self, link: LinkSpec = OPTICAL, *, columnar: bool = True,
+                 aggregate_only: bool = False):
         self.link = link
         self.columnar = columnar
+        self.aggregate_only = aggregate_only
         self.now = 0.0
         self.energy_J = 0.0        # span-integrated chip energy
         self.busy_s = 0.0
@@ -164,7 +178,9 @@ class Timeline:
             defaultdict(int)
         self._span_s: Dict[Tuple[str, Optional[str]], float] = \
             defaultdict(float)
-        if columnar:
+        if aggregate_only:
+            self._counts = [0] * 6             # per-class append counts
+        elif columnar:
             # per-class parallel columns + one global class-id sequence;
             # dataclass events are materialized lazily from these
             self._seq: List[int] = []
@@ -179,7 +195,11 @@ class Timeline:
     def compute(self, dur_s: float, *, kind: str, power_W: float = 0.0,
                 cycles: int = 0, batch: int = 1, name: str = "") -> float:
         now = self.now
-        if self.columnar:
+        if self.aggregate_only:
+            cnt = self._counts
+            cnt[_COMPUTE] += 1
+            cnt[_SAMPLE] += 1
+        elif self.columnar:
             seq = self._seq
             seq.append(_COMPUTE)
             c = self._cols[_COMPUTE]
@@ -214,7 +234,11 @@ class Timeline:
     def wake(self, dur_s: float, *, power_W: float = 0.0, cycles: int = 0,
              cluster: int = -1) -> float:
         now = self.now
-        if self.columnar:
+        if self.aggregate_only:
+            cnt = self._counts
+            cnt[_WAKE] += 1
+            cnt[_SAMPLE] += 1
+        elif self.columnar:
             seq = self._seq
             seq.append(_WAKE)
             c = self._cols[_WAKE]
@@ -240,7 +264,9 @@ class Timeline:
     def sleep(self, dur_s: float, *, power_W: float = 0.0,
               t0: Optional[float] = None, advance: bool = True) -> float:
         at = self.now if t0 is None else t0
-        if self.columnar:
+        if self.aggregate_only:
+            self._counts[_SLEEP] += 1
+        elif self.columnar:
             self._seq.append(_SLEEP)
             c = self._cols[_SLEEP]
             c[0].append(at)
@@ -250,7 +276,9 @@ class Timeline:
             self._events.append(ClusterSleep(at, dur_s, power_W))
         self._span_s["ClusterSleep", None] += dur_s
         if advance:
-            if self.columnar:
+            if self.aggregate_only:
+                self._counts[_SAMPLE] += 1
+            elif self.columnar:
                 self._seq.append(_SAMPLE)
                 c = self._cols[_SAMPLE]
                 c[0].append(at)
@@ -275,7 +303,9 @@ class Timeline:
         concurrent bursts carry no energy of their own."""
         nbytes = int(nbytes)
         at = self.now if t0 is None else t0
-        if self.columnar:
+        if self.aggregate_only:
+            self._counts[_C2C] += 1
+        elif self.columnar:
             self._seq.append(_C2C)
             c = self._cols[_C2C]
             c[0].append(at)
@@ -290,7 +320,9 @@ class Timeline:
         self.c2c_bytes += nbytes
         if advance:
             if power_W:
-                if self.columnar:
+                if self.aggregate_only:
+                    self._counts[_SAMPLE] += 1
+                elif self.columnar:
                     self._seq.append(_SAMPLE)
                     c = self._cols[_SAMPLE]
                     c[0].append(self.now)
@@ -305,7 +337,9 @@ class Timeline:
               t0: Optional[float] = None) -> None:
         n = int(n)
         at = self.now if t0 is None else t0
-        if self.columnar:
+        if self.aggregate_only:
+            self._counts[_TOKEN] += 1
+        elif self.columnar:
             self._seq.append(_TOKEN)
             c = self._cols[_TOKEN]
             c[0].append(at)
@@ -326,7 +360,9 @@ class Timeline:
         if not b:
             return
         at = self.now if t0 is None else t0
-        if self.columnar:
+        if self.aggregate_only:
+            self._counts[_TOKEN] += b
+        elif self.columnar:
             self._seq.extend([_TOKEN] * b)
             c = self._cols[_TOKEN]
             c[0].extend([at] * b)
@@ -338,6 +374,9 @@ class Timeline:
         self.tokens += b
 
     def sample(self, power_W: float) -> None:
+        if self.aggregate_only:
+            self._counts[_SAMPLE] += 1
+            return
         if self.columnar:
             self._seq.append(_SAMPLE)
             c = self._cols[_SAMPLE]
@@ -347,9 +386,17 @@ class Timeline:
             self._events.append(EnergySample(self.now, power_W))
 
     # -- event materialization ----------------------------------------
+    def _no_events(self) -> RuntimeError:
+        return RuntimeError(
+            "aggregate-only timeline stores no events; use the running "
+            "aggregates (cycles/span_seconds/count) or record with "
+            "aggregate_only=False")
+
     @property
     def n_events(self) -> int:
         """Event count without materializing anything — O(1)."""
+        if self.aggregate_only:
+            return sum(self._counts)
         return len(self._seq) if self.columnar else len(self._events)
 
     @property
@@ -357,6 +404,8 @@ class Timeline:
         """The dataclass event stream.  In columnar mode this is a lazy,
         incrementally extended materialization cache: appends after a
         read only materialize the new tail on the next read."""
+        if self.aggregate_only:
+            raise self._no_events()
         if not self.columnar:
             return self._events
         if len(self._mat) < len(self._seq):
@@ -373,6 +422,8 @@ class Timeline:
         """Yield events one at a time WITHOUT caching a materialized list
         (columnar mode) — the streaming export path for million-event
         traces."""
+        if self.aggregate_only:
+            raise self._no_events()
         if not self.columnar:
             yield from self._events
             return
@@ -402,6 +453,8 @@ class Timeline:
         fields = self._FIELDS[name]
         if field not in fields:
             raise KeyError(f"{name} has no field {field!r}")
+        if self.aggregate_only:
+            raise self._no_events()
         if self.columnar:
             return list(self._cols[self._CIDS[name]][fields.index(field)])
         return [getattr(e, field) for e in self._events
@@ -424,6 +477,8 @@ class Timeline:
              "EnergySample": _SAMPLE, "TokenEmit": _TOKEN}
 
     def count(self, cls: Type) -> int:
+        if self.aggregate_only:
+            return self._counts[self._CIDS[cls.__name__]]
         if self.columnar:
             return len(self._cols[self._CIDS[cls.__name__]][0])
         return sum(1 for e in self._events if isinstance(e, cls))
@@ -440,6 +495,8 @@ class Timeline:
 
     def power_trace(self) -> List[Tuple[float, float]]:
         """(t, W) steps from the EnergySample stream."""
+        if self.aggregate_only:
+            raise self._no_events()
         if self.columnar:
             t0s, ws = self._cols[_SAMPLE]
             return list(zip(t0s, ws))
@@ -516,3 +573,250 @@ class Timeline:
 
     def save_chrome_trace(self, path, *, process_name: str = "picnic") -> None:
         self.dump_chrome_trace(path, process_name=process_name)
+
+
+# ---------------------------------------------------------------------------
+# Cell-major aggregate block (the sweep engine's 2D recorder)
+# ---------------------------------------------------------------------------
+
+class SweepAggregates:
+    """The running aggregates of N timelines as cell-major numpy arrays.
+
+    One row of scalars per cell — the exact accumulator set an
+    aggregate-only :class:`Timeline` maintains for the serving decode
+    loop — so a vectorized round update::
+
+        agg.now[idx] += dt; agg.energy_J[idx] += dt * power; ...
+
+    performs, per cell, the same IEEE-754 float64 multiply-adds in the
+    same order as N scalar timelines appending the same spans.  The
+    vector axis is *cells*: lanes never mix, so every cell's float
+    accumulation stays bit-identical to its scalar run.
+
+    ``sync_in(i, tl)`` snapshots one cell's timeline into row ``i`` when
+    that cell enters the vectorized path; ``sync_out(i, tl)`` writes the
+    row back before the cell's scalar engine resumes (or reports).  Only
+    the accumulators the vectorized decode round can touch are mirrored;
+    everything else (prefill spans, sleeps, wakes, cycle sums) mutates
+    exclusively on the scalar side and needs no mirror.
+    """
+
+    _SPAN_KEYS = (("ComputeSpan", None), ("ComputeSpan", "decode"),
+                  ("C2CTransfer", None))
+
+    def __init__(self, n_cells: int):
+        self.n_cells = n_cells
+        self.now = np.zeros(n_cells)
+        self.busy_s = np.zeros(n_cells)
+        self.energy_J = np.zeros(n_cells)
+        self.occupancy_s = np.zeros(n_cells)
+        self.tokens = np.zeros(n_cells, dtype=np.int64)
+        self.c2c_bytes = np.zeros(n_cells, dtype=np.int64)
+        # per-(class, kind) running span sums, one lane per tracked key
+        self.span_compute = np.zeros(n_cells)
+        self.span_decode = np.zeros(n_cells)
+        self.span_c2c = np.zeros(n_cells)
+        # aggregate-only event counts kept exact during vector rounds
+        self.n_compute = np.zeros(n_cells, dtype=np.int64)
+        self.n_sample = np.zeros(n_cells, dtype=np.int64)
+        self.n_c2c = np.zeros(n_cells, dtype=np.int64)
+        self.n_token = np.zeros(n_cells, dtype=np.int64)
+
+    def sync_in(self, i: int, tl: Timeline) -> None:
+        self.now[i] = tl.now
+        self.busy_s[i] = tl.busy_s
+        self.energy_J[i] = tl.energy_J
+        self.occupancy_s[i] = tl.occupancy_s
+        self.tokens[i] = tl.tokens
+        self.c2c_bytes[i] = tl.c2c_bytes
+        span = tl._span_s
+        self.span_compute[i] = span.get(self._SPAN_KEYS[0], 0.0)
+        self.span_decode[i] = span.get(self._SPAN_KEYS[1], 0.0)
+        self.span_c2c[i] = span.get(self._SPAN_KEYS[2], 0.0)
+        if tl.aggregate_only:
+            cnt = tl._counts
+            self.n_compute[i] = cnt[_COMPUTE]
+            self.n_sample[i] = cnt[_SAMPLE]
+            self.n_c2c[i] = cnt[_C2C]
+            self.n_token[i] = cnt[_TOKEN]
+
+    def sync_out(self, i: int, tl: Timeline) -> None:
+        tl.now = float(self.now[i])
+        tl.busy_s = float(self.busy_s[i])
+        tl.energy_J = float(self.energy_J[i])
+        tl.occupancy_s = float(self.occupancy_s[i])
+        tl.tokens = int(self.tokens[i])
+        tl.c2c_bytes = int(self.c2c_bytes[i])
+        span = tl._span_s
+        span[self._SPAN_KEYS[0]] = float(self.span_compute[i])
+        span[self._SPAN_KEYS[1]] = float(self.span_decode[i])
+        span[self._SPAN_KEYS[2]] = float(self.span_c2c[i])
+        if tl.aggregate_only:
+            cnt = tl._counts
+            cnt[_COMPUTE] = int(self.n_compute[i])
+            cnt[_SAMPLE] = int(self.n_sample[i])
+            cnt[_C2C] = int(self.n_c2c[i])
+            cnt[_TOKEN] = int(self.n_token[i])
+
+    def decode_round(self, idx: np.ndarray, dt: np.ndarray,
+                     power_W: np.ndarray, batch: np.ndarray,
+                     burst_bytes: np.ndarray, burst_dur: np.ndarray,
+                     fetch_bytes: np.ndarray, fetch_dur: np.ndarray) -> None:
+        """One batched decode round for the cells in ``idx`` — the
+        vectorized equivalent of the scalar engine's per-round timeline
+        appends, in the scalar append order:
+
+          1. ``compute(dt, kind="decode", power_W, batch)``
+          2. concurrent decode C2C burst (``burst_bytes`` over
+             ``burst_dur``)
+          3. advancing kv-fetch C2C at chip power (``fetch_bytes`` over
+             ``fetch_dur``; zero for non-paged cells — adding 0.0 /
+             +0 is bit-neutral on every accumulator, matching the scalar
+             engine *skipping* those appends)
+          4. one `TokenEmit` per resident
+
+        Each numbered update is a separate elementwise op, so within a
+        lane the float adds hit each accumulator in the scalar order.
+        """
+        # 1. decode ComputeSpan (+ its auto power sample)
+        self.span_compute[idx] += dt
+        self.span_decode[idx] += dt
+        self.busy_s[idx] += dt
+        self.energy_J[idx] += dt * power_W
+        self.occupancy_s[idx] += dt * batch
+        self.now[idx] += dt
+        self.n_compute[idx] += 1
+        self.n_sample[idx] += 1
+        # 2. concurrent decode burst
+        self.span_c2c[idx] += burst_dur
+        self.c2c_bytes[idx] += burst_bytes
+        self.n_c2c[idx] += (burst_bytes > 0)
+        # 3. advancing kv fetch at chip power
+        self.span_c2c[idx] += fetch_dur
+        self.c2c_bytes[idx] += fetch_bytes
+        self.energy_J[idx] += fetch_dur * power_W
+        self.busy_s[idx] += fetch_dur
+        self.now[idx] += fetch_dur
+        has_fetch = fetch_bytes > 0
+        self.n_c2c[idx] += has_fetch
+        self.n_sample[idx] += has_fetch & (power_W > 0)
+        # 4. token emits
+        self.tokens[idx] += batch
+        self.n_token[idx] += batch
+
+    def decode_burst(self, idx: np.ndarray, h: np.ndarray, dt: np.ndarray,
+                     power_W: np.ndarray, batch: np.ndarray,
+                     burst_bytes: np.ndarray, burst_dur: np.ndarray,
+                     fetch_bytes: np.ndarray, fetch_dur: np.ndarray,
+                     next_arrival: np.ndarray) -> np.ndarray:
+        """Apply up to ``h[k]`` consecutive decode rounds to each lane
+        ``idx[k]`` in one shot — bit-identical to calling
+        :meth:`decode_round` that many times per lane, because
+        ``np.add.accumulate`` is a strict sequential left fold (no
+        pairwise regrouping) and each accumulator's fold starts from its
+        current value (row 0 of the increment matrix).
+
+        ``dt`` is the per-round compute duration, shape ``(H, n)`` with
+        ``H >= h.max()``; row ``j`` prices round ``j+1`` of the burst.
+        Rows beyond a lane's ``h`` are ignored (each lane's result is
+        gathered at its own prefix position, so garbage rows past the
+        horizon never contribute).
+
+        Rounds are additionally truncated at the lane's next request
+        arrival: the scalar engine admits (and leaves pure decode) once
+        its clock reaches ``next_arrival``, so a burst must not price
+        rounds past that point.  Returns the per-lane round counts
+        actually applied (``>= 1`` — callers guarantee no arrival is due
+        at burst entry).
+        """
+        n = int(idx.size)
+        H = int(h.max())
+        dt = dt[:H]
+        lanes = np.arange(n)
+        if not fetch_bytes.any():
+            # Fetch-free fast path: every accumulator sees exactly one
+            # add per round (the fetch adds would all be `x + 0.0`,
+            # which is bit-neutral on the non-negative accumulators but
+            # doubles the fold depth) — fold all seven in one matrix.
+            inc = np.empty((H + 1, 7 * n))
+            starts = (self.now, self.busy_s, self.energy_J,
+                      self.span_c2c, self.span_compute, self.span_decode,
+                      self.occupancy_s)
+            for k, a in enumerate(starts):
+                inc[0, k * n:(k + 1) * n] = a[idx]
+            inc[1:, 0 * n:1 * n] = dt
+            inc[1:, 1 * n:2 * n] = dt
+            inc[1:, 2 * n:3 * n] = dt * power_W
+            inc[1:, 3 * n:4 * n] = burst_dur
+            inc[1:, 4 * n:5 * n] = dt
+            inc[1:, 5 * n:6 * n] = dt
+            inc[1:, 6 * n:7 * n] = dt * batch
+            acc = np.add.accumulate(inc, axis=0)
+            # Round j+1 (0-based j) runs only while the clock *before*
+            # it — acc row j of the `now` block — is short of the
+            # arrival; monotone, so the count is the prefix length.
+            j = np.arange(H)[:, None]
+            h = ((acc[:H, :n] < next_arrival) & (j < h)).sum(axis=0)
+            for k, a in enumerate(starts):
+                a[idx] = acc[h, k * n + lanes]
+            self.tokens[idx] += batch * h
+            self.c2c_bytes[idx] += burst_bytes * h
+            self.n_compute[idx] += h
+            self.n_token[idx] += batch * h
+            self.n_c2c[idx] += (burst_bytes > 0) * h
+            self.n_sample[idx] += h
+            return h
+        # Clock prefix first: interleave (dt, fetch_dur) per round — the
+        # scalar order is now += dt then now += fetch_dur — with the
+        # current clock in row 0 so the fold seeds correctly.
+        incN = np.empty((2 * H + 1, n))
+        incN[0] = self.now[idx]
+        incN[1::2] = dt
+        incN[2::2] = fetch_dur
+        accN = np.add.accumulate(incN, axis=0)
+        # Round j+1 (0-based j) runs only while the clock *before* it —
+        # accN[2j] — is still short of the arrival; the predicate is
+        # monotone (clock never decreases) so the count is the prefix
+        # length.
+        j = np.arange(H)[:, None]
+        h = ((accN[0:2 * H:2] < next_arrival) & (j < h)).sum(axis=0)
+        r2 = 2 * h
+        self.now[idx] = accN[r2, lanes]
+        # busy / energy / span_c2c also see two adds per round, with
+        # per-accumulator increments; fold all three in one accumulate.
+        incB = np.empty((2 * H + 1, 3 * n))
+        incB[0, :n] = self.busy_s[idx]
+        incB[0, n:2 * n] = self.energy_J[idx]
+        incB[0, 2 * n:] = self.span_c2c[idx]
+        incB[1::2, :n] = dt
+        incB[2::2, :n] = fetch_dur
+        incB[1::2, n:2 * n] = dt * power_W
+        incB[2::2, n:2 * n] = fetch_dur * power_W
+        incB[1::2, 2 * n:] = burst_dur
+        incB[2::2, 2 * n:] = fetch_dur
+        accB = np.add.accumulate(incB, axis=0)
+        self.busy_s[idx] = accB[r2, lanes]
+        self.energy_J[idx] = accB[r2, n + lanes]
+        self.span_c2c[idx] = accB[r2, 2 * n + lanes]
+        # One-add-per-round accumulators: span_compute / span_decode
+        # (same increments, different starts) and occupancy.
+        incS = np.empty((H + 1, 3 * n))
+        incS[0, :n] = self.span_compute[idx]
+        incS[0, n:2 * n] = self.span_decode[idx]
+        incS[0, 2 * n:] = self.occupancy_s[idx]
+        incS[1:, :n] = dt
+        incS[1:, n:2 * n] = dt
+        incS[1:, 2 * n:] = dt * batch
+        accS = np.add.accumulate(incS, axis=0)
+        self.span_compute[idx] = accS[h, lanes]
+        self.span_decode[idx] = accS[h, lanes + n]
+        self.occupancy_s[idx] = accS[h, lanes + 2 * n]
+        # Integer counters are associative — closed form is exact.
+        self.tokens[idx] += batch * h
+        self.c2c_bytes[idx] += (burst_bytes + fetch_bytes) * h
+        self.n_compute[idx] += h
+        self.n_token[idx] += batch * h
+        self.n_c2c[idx] += ((burst_bytes > 0).astype(np.int64)
+                            + (fetch_bytes > 0)) * h
+        self.n_sample[idx] += h + ((fetch_bytes > 0) & (power_W > 0)) * h
+        return h

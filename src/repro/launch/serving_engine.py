@@ -208,6 +208,12 @@ class EngineConfig:
     # are byte-identical (tests/test_fastpath.py); the toggle exists for
     # the equivalence tests and the microbench before/after measurement.
     columnar_timeline: bool = True
+    # aggregate-only TimelineIR recording (the sweep-engine recorder):
+    # running sums and counts only, NO event stream — reading
+    # `timeline.events` / exporting a trace raises.  Every report-level
+    # aggregate stays byte-identical to the other recorders (same float
+    # adds in the same order); takes precedence over columnar_timeline.
+    aggregate_timeline: bool = False
 
 
 @dataclasses.dataclass
@@ -318,11 +324,17 @@ class ContinuousBatchingEngine:
     """
 
     def __init__(self, cfg, sim: Optional[PicnicSimulator] = None,
-                 engine: Optional[EngineConfig] = None):
+                 engine: Optional[EngineConfig] = None,
+                 alloc: Optional[ChipletAllocation] = None):
         self.cfg = cfg
         self.sim = sim if sim is not None else PicnicSimulator()
         self.engine = engine if engine is not None else EngineConfig()
-        self.alloc: ChipletAllocation = allocate_chiplets(cfg, self.sim.tile)
+        # `alloc` lets N engines of a sweep grid share one allocation
+        # object (allocate_chiplets is deterministic, so sharing changes
+        # id()-keyed memo hit rates, never results); default: private.
+        self.alloc: ChipletAllocation = (
+            alloc if alloc is not None
+            else allocate_chiplets(cfg, self.sim.tile))
         ccpg_model: CCPGModel = self.sim.ccpg_model
         self._busy_power = ccpg_model.system_power(
             self.alloc.n_chiplets, ccpg=self.engine.ccpg)
@@ -343,7 +355,8 @@ class ContinuousBatchingEngine:
         # ALL time/energy accounting lives in the TimelineIR accumulator —
         # the engine appends per-round events and never charges privately
         self.timeline = Timeline(link=self.sim.link,
-                                 columnar=e.columnar_timeline)
+                                 columnar=e.columnar_timeline,
+                                 aggregate_only=e.aggregate_timeline)
         self.queue: Deque[TrackedRequest] = deque()
         self.slots: List[Optional[TrackedRequest]] = [None] * e.max_batch
         # -- SoA mirrors of the slot table (the fast-path state): the
@@ -912,7 +925,11 @@ class ContinuousBatchingEngine:
         return EventKind.IDLE
 
     # ------------------------------------------------------------------
-    def run(self, trace: Sequence[TrackedRequest]) -> ServingReport:
+    def _prepare_run(self, trace: Sequence[TrackedRequest]
+                     ) -> Deque[TrackedRequest]:
+        """Reset the engine and the trace's mutable per-run state, verify
+        arrival order, and hand back the pending deque — factored out of
+        :meth:`run` so the sweep engine can drive the step loop itself."""
         self.reset()
         for r in trace:
             # re-running a trace must be idempotent: the resume/recompute
@@ -935,7 +952,10 @@ class ContinuousBatchingEngine:
                 break
             prev = r.arrival
         self._any_deadline = any(r.deadline_ttft is not None for r in arr)
-        pending: Deque[TrackedRequest] = deque(arr)
+        return deque(arr)
+
+    def run(self, trace: Sequence[TrackedRequest]) -> ServingReport:
+        pending = self._prepare_run(trace)
         it = 0
         while (pending or self.queue or self._active_idx
                or self._partial is not None):

@@ -1,0 +1,537 @@
+"""Vectorized sweep engine: advance a GRID of serving cells in lockstep.
+
+Every headline result in this repro is a *sweep* — Table II is a model x
+context grid, the paged bench a ctx x rate x tier grid, the prefix bench
+a sharing on/off pair — and the roadmap's fleet studies need thousands
+of cells.  Running `ContinuousBatchingEngine` once per cell re-pays the
+per-cell costs (simulator construction, `decode_affine` walks, prefill
+pricing) and executes the pure-decode majority of every cell one Python
+iteration at a time.  This module lifts the PR-5 SoA serving loop one
+dimension higher: the unit of execution is the grid.
+
+How a cell executes
+-------------------
+
+Each cell still owns a real `ContinuousBatchingEngine` (aggregate-only
+TimelineIR recorder) — admission, prefill, chunked prefill, preemption,
+prefix adoption, finishes and idle gaps all run the engine's own scalar
+code, byte-for-byte.  What gets vectorized is the regime that dominates
+wall clock: *cruise*, an uninterrupted streak of pure decode rounds.
+On entering cruise the cell's round state is snapshotted into cell-major
+numpy arrays (batch size, context sum, affine cost coefficients, KV
+fetch bytes, busy power, ...) plus three exact countdowns:
+
+  * ``exitA``  — rounds until a scalar event (a resident finishing, or
+    the deficit counter reaching ``decode_quantum`` while a prefill is
+    admissible) forces the cell back to the scalar step loop;
+  * ``growA``  — rounds until some resident crosses a KV block boundary
+    (paged cells only);
+  * ``arrA``   — wall-clock time of the next pending arrival.
+
+One lockstep iteration then advances EVERY cruising cell by a decode
+BURST — up to its own safe horizon of rounds, folded into one
+``np.add.accumulate`` (`SweepAggregates.decode_burst`, a strict
+sequential left fold; `decode_round` is the one-round reference it is
+tested against) — performing per lane exactly the scalar engine's
+arithmetic — same truncations, same float64 adds in the same order — so
+each cell's `ServingReport` and `kv_stats` are byte-identical to running
+the scalar fast engine cell by cell (tests/test_sweep_engine.py).
+
+KV block-table growth is too frequent to leave cruise for (a block
+boundary every ``block_tokens / batch`` rounds): those rounds run
+*semi-scalar* — the cell's objects and timeline row are synced, the
+engine's own ``_kv_prepare_round`` runs verbatim (spills, preemption,
+copy-on-write all land on the real timeline), and the cell stays in the
+same vectorized round, mirroring the scalar ``_decode_round`` = prepare
++ round sequence.
+
+Cells grouped by ``(simulator, model config)`` share one
+`ChipletAllocation` and one `core.scheduling.DecodeCostSurface`, so the
+O(layers) cycle-model walks are paid once per distinct batch shape per
+GROUP instead of once per cell, and a calibration mutation on the shared
+model (``cycle_model.alpha = ...``) invalidates every cell of every
+sweep at once through the surface's version stamp.
+
+Feature coverage and graceful degradation
+-----------------------------------------
+
+Chunked prefill, paged KV, preemption and COW prefix sharing are fully
+supported on the vectorized path.  Cells using features the batched
+round cannot price — ``overlap > 0``, ``dynamic_ccpg``, TTFT deadlines
+in the trace, or a non-affine `CycleModel` (subclass or memoization
+off) — degrade gracefully to a per-cell scalar run, logged with the
+reason and flagged in their `SweepResult.fallback`.
+
+Sweep-mode report caveats (documented contract): per-cell reports and
+``kv_stats`` are byte-identical to the scalar engine, including
+``max_queue_depth``; the `ServingReport.queue_depth` *samples* and the
+engine's per-round ``(clock, DECODE, -1)`` event markers are only
+recorded on scalar iterations (all other events — PREFILL / FINISH /
+PREEMPT / REJECT / IDLE — are complete and exactly timestamped).
+
+  PYTHONPATH=src python -m benchmarks.run sweep
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import logging
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.scheduling import (ChipletAllocation, DecodeCostSurface,
+                                   allocate_chiplets)
+from repro.core.simulator import PicnicSimulator
+from repro.core.timeline import SweepAggregates
+from repro.launch.serving_engine import (ContinuousBatchingEngine,
+                                         EngineConfig, KVCacheStats,
+                                         ServingReport, TrackedRequest)
+
+log = logging.getLogger(__name__)
+
+_BIG = 1 << 60          # "no exit scheduled" countdown sentinel
+_H_CAP = 512            # max decode rounds folded into one burst
+
+
+@dataclasses.dataclass
+class SweepCell:
+    """One point of a sweep grid.
+
+    Cells passing the SAME ``sim`` object (and model ``cfg``) share its
+    memoized cycle model, one chiplet allocation and one batched decode
+    cost surface — the big amortization win over per-cell engines.
+    ``sim=None`` cells all share one default `PicnicSimulator`.
+    """
+    key: str
+    cfg: object
+    trace: Sequence[TrackedRequest]
+    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+    sim: Optional[PicnicSimulator] = None
+
+
+@dataclasses.dataclass
+class SweepResult:
+    key: str
+    report: ServingReport
+    kv_stats: Optional[KVCacheStats]
+    # None = vectorized path; else the reason this cell ran scalar
+    fallback: Optional[str] = None
+
+
+class _Group:
+    """Cells sharing (simulator, model config): one allocation, one
+    batched decode cost surface sized to the group's largest batch."""
+
+    __slots__ = ("sim", "cfg", "alloc", "surface", "max_batch")
+
+    def __init__(self, sim: PicnicSimulator, cfg):
+        self.sim = sim
+        self.cfg = cfg
+        self.alloc: ChipletAllocation = allocate_chiplets(cfg, sim.tile)
+        self.surface: Optional[DecodeCostSurface] = None
+        self.max_batch = 0
+
+
+class _CellState:
+    """Per-cell runtime bookkeeping around the cell's scalar engine."""
+
+    __slots__ = ("pos", "i", "cell", "group", "eng", "requests", "pending",
+                 "in_cruise", "done", "iters", "qmax", "report", "kv")
+
+    def __init__(self, pos: int, i: int, cell: SweepCell, group: _Group,
+                 eng: ContinuousBatchingEngine,
+                 requests: List[TrackedRequest]):
+        self.pos = pos          # index into the caller's cell list
+        self.i = i              # lane in the cell-major arrays
+        self.cell = cell
+        self.group = group
+        self.eng = eng
+        self.requests = requests
+        self.pending = None     # set by run() via _prepare_run
+        self.in_cruise = False
+        self.done = False
+        self.iters = 0          # scalar steps + vector rounds (max_iters)
+        self.qmax = 0           # queue depth seen at cruise preemptions
+        self.report: Optional[ServingReport] = None
+        self.kv: Optional[KVCacheStats] = None
+
+
+def _fallback_reason(cell: SweepCell) -> Optional[str]:
+    e = cell.engine
+    if e.overlap != 0.0:
+        return "overlap>0 (C2C hiding prices per-request)"
+    if e.ccpg and e.dynamic_ccpg:
+        return "dynamic_ccpg (per-round ClusterWake walk)"
+    if any(r.deadline_ttft is not None for r in cell.trace):
+        return "ttft_deadline (per-round at-risk check)"
+    return None
+
+
+class SweepEngine:
+    """Run a grid of serving cells in one vectorized lockstep pass.
+
+    Single-shot: construct with the cells, call :meth:`run` once.
+    Results come back in cell order, each byte-identical to
+    ``ContinuousBatchingEngine(...).run(trace)`` for that cell.
+    """
+
+    def __init__(self, cells: Sequence[SweepCell]):
+        self.cells = list(cells)
+        self._default_sim: Optional[PicnicSimulator] = None
+        self._groups: Dict[Tuple[int, int], _Group] = {}
+        self._states: List[_CellState] = []
+        self._fallbacks: List[Tuple[int, SweepCell, _Group, str]] = []
+
+        vec: List[Tuple[int, SweepCell, _Group]] = []
+        for pos, cell in enumerate(self.cells):
+            sim = cell.sim
+            if sim is None:
+                if self._default_sim is None:
+                    self._default_sim = PicnicSimulator()
+                sim = self._default_sim
+            gkey = (id(sim), id(cell.cfg))
+            group = self._groups.get(gkey)
+            if group is None:
+                group = self._groups[gkey] = _Group(sim, cell.cfg)
+            reason = _fallback_reason(cell)
+            if reason is not None:
+                self._fallbacks.append((pos, cell, group, reason))
+                continue
+            group.max_batch = max(group.max_batch, cell.engine.max_batch)
+            vec.append((pos, cell, group))
+
+        # batched cost surfaces, one per group that has vectorized cells;
+        # a surface with no affine lane (memoization off / non-affine
+        # subclass) demotes the whole group to the scalar fallback
+        for group in self._groups.values():
+            if group.max_batch:
+                group.surface = DecodeCostSurface(
+                    group.sim.cycle_model, group.cfg, group.alloc,
+                    group.max_batch)
+        kept: List[Tuple[int, SweepCell, _Group]] = []
+        for pos, cell, group in vec:
+            if not group.surface.affine[1:].any():
+                self._fallbacks.append(
+                    (pos, cell, group,
+                     "non-affine decode cost (memoize off or subclass)"))
+            else:
+                kept.append((pos, cell, group))
+
+        n = len(kept)
+        for i, (pos, cell, group) in enumerate(kept):
+            eng = ContinuousBatchingEngine(
+                cell.cfg, sim=group.sim,
+                engine=dataclasses.replace(cell.engine,
+                                           aggregate_timeline=True),
+                alloc=group.alloc)
+            # engines mutate per-request state, and grid builders often
+            # reuse one trace object across cells — copy defensively
+            requests = [copy.copy(r) for r in cell.trace]
+            self._states.append(_CellState(pos, i, cell, group, eng,
+                                           requests))
+
+        # -- cell-major lockstep state (one lane per vectorized cell) --
+        self.agg = SweepAggregates(n)
+        self._cruise = np.zeros(n, dtype=bool)
+        self.bA = np.zeros(n, dtype=np.int64)       # resident batch size
+        self.ctxA = np.zeros(n, dtype=np.int64)     # running context sum
+        self.baseA = np.zeros(n, dtype=np.int64)    # affine base cycles
+        self.nattnA = np.zeros(n, dtype=np.int64)   # attention multiplier
+        self.c2cA = np.zeros(n, dtype=np.int64)     # decode burst bytes
+        self.fA = np.zeros(n, dtype=np.int64)       # frozen kv fetch bytes
+        self.cppA = np.zeros(n)                     # ctx_cycles_per_pos
+        self.alphaA = np.zeros(n)                   # CIM speedup factor
+        self.residA = np.zeros(n, dtype=np.int64)   # CCPG wake residue cyc
+        self.freqA = np.zeros(n)                    # tile clock Hz
+        self.powA = np.zeros(n)                     # busy power W
+        self.bwA = np.zeros(n)                      # C2C bandwidth B/s
+        self.pendA = np.zeros(n, dtype=np.int64)    # rounds since sync
+        self.exitA = np.zeros(n, dtype=np.int64)    # rounds to scalar event
+        self.growA = np.zeros(n, dtype=np.int64)    # rounds to KV growth
+        self.arrA = np.full(n, math.inf)            # next pending arrival
+        for st in self._states:
+            eng = st.eng
+            self.residA[st.i] = eng._residue_cyc
+            self.freqA[st.i] = eng._freq_hz
+            self.powA[st.i] = eng._busy_power
+            self.bwA[st.i] = eng._bandwidth_Bps
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[SweepResult]:
+        results: List[Optional[SweepResult]] = [None] * len(self.cells)
+
+        for pos, cell, group, reason in self._fallbacks:
+            log.info("sweep cell %r: scalar fallback (%s)", cell.key,
+                     reason)
+            eng = ContinuousBatchingEngine(cell.cfg, sim=group.sim,
+                                           engine=cell.engine,
+                                           alloc=group.alloc)
+            rep = eng.run([copy.copy(r) for r in cell.trace])
+            results[pos] = SweepResult(cell.key, rep, eng.kv_stats,
+                                       fallback=reason)
+
+        for st in self._states:
+            st.pending = st.eng._prepare_run(st.requests)
+
+        agg = self.agg
+        while True:
+            # phase A: scalar service — every non-cruising cell steps its
+            # own engine until it finishes or the next step would be a
+            # vectorizable decode round
+            for st in self._states:
+                if not st.done and not st.in_cruise:
+                    self._scalar_service(st)
+            idx = np.nonzero(self._cruise)[0]
+            if idx.size == 0:
+                break           # phase A leaves every cell done or cruising
+
+            self._check_surfaces()
+
+            # phase B.1: cruise exits — a scheduled scalar event (finish /
+            # admissible prefill) or a pending arrival is due this round
+            lm = (self.exitA[idx] < 1) | (self.arrA[idx] <= agg.now[idx])
+            if lm.any():
+                for i in idx[lm]:
+                    self._leave_cruise(self._states[int(i)])
+                idx = idx[~lm]
+                if idx.size == 0:
+                    continue
+
+            # phase B.2: KV growth rounds — run the engine's own round
+            # prep semi-scalar; the cell stays in this vector round
+            gm = self.growA[idx] < 1
+            if gm.any():
+                drop = [int(i) for i in idx[gm]
+                        if not self._growth_prep(self._states[int(i)])]
+                if drop:
+                    idx = idx[~np.isin(idx, drop)]
+                    if idx.size == 0:
+                        continue
+
+            # phase B.3: a decode BURST for every cruising cell — each
+            # lane advances up to its own safe horizon (rounds until its
+            # next scalar event or KV growth, capped) in one sequential
+            # fold.  Round j of the burst prices the scalar engine's
+            # exact arithmetic at the context it would see then:
+            #   cyc = int((base + n_attn * int(cpp*(ctx + (j-1)*b))) * alpha)
+            #   dt  = (cyc + residue) / freq
+            # A cell that just ran growth prep may have exitA == 0 (the
+            # prep flipped want-prefill on), but its round was committed
+            # before the prep — clip forces the single committed round.
+            h0 = np.minimum(self.exitA[idx], self.growA[idx])
+            np.clip(h0, 1, _H_CAP, out=h0)
+            J = np.arange(int(h0.max()), dtype=np.int64)[:, None]
+            b = self.bA[idx]
+            ctx = self.ctxA[idx] + J * b
+            cyc = self.baseA[idx] + self.nattnA[idx] * (
+                self.cppA[idx] * ctx).astype(np.int64)
+            cyc = (cyc * self.alphaA[idx]).astype(np.int64)
+            dt = (cyc + self.residA[idx]) / self.freqA[idx]
+            burst = self.c2cA[idx]
+            fetch = self.fA[idx]
+            bw = self.bwA[idx]
+            h = agg.decode_burst(idx, h0, dt, self.powA[idx], b,
+                                 burst, burst / bw, fetch, fetch / bw,
+                                 self.arrA[idx])
+            self.ctxA[idx] += b * h
+            self.pendA[idx] += h
+            self.exitA[idx] -= h
+            self.growA[idx] -= h
+
+        for st in self._states:
+            results[st.pos] = SweepResult(st.cell.key, st.report, st.kv)
+        return results
+
+    # ------------------------------------------------------------------
+    # scalar service and cruise transitions
+    def _scalar_service(self, st: _CellState) -> None:
+        eng, pending = st.eng, st.pending
+        max_iters = eng.engine.max_iters
+        while True:
+            if not (pending or eng.queue or eng._active_idx
+                    or eng._partial is not None):
+                self._finalize(st)
+                return
+            if self._enterable(st):
+                self._enter_cruise(st)
+                return
+            st.iters += 1
+            if st.iters > max_iters:
+                raise RuntimeError("sweep cell exceeded max_iters")
+            eng.step(pending)
+
+    def _enterable(self, st: _CellState) -> bool:
+        """Would the engine's next step be a decode round the vector path
+        can price (affine batch size) and complete (no finish)?"""
+        eng = st.eng
+        if not eng._active_idx:
+            return False
+        if st.pending and st.pending[0].arrival <= eng.timeline.now:
+            return False
+        if not st.group.surface.affine[len(eng._active_idx)]:
+            return False
+        fin, pre = self._budgets(eng)
+        return fin >= 1 and pre >= 1
+
+    def _enter_cruise(self, st: _CellState) -> None:
+        i, eng = st.i, st.eng
+        self._snap_cost(st, len(eng._active_idx))
+        self.ctxA[i] = eng._ctx_sum
+        self.fA[i] = self._fetch_bytes(eng)
+        fin, pre = self._budgets(eng)
+        self.exitA[i] = min(fin, pre)
+        self.growA[i] = self._grow_budget(eng)
+        self.arrA[i] = (st.pending[0].arrival if st.pending else math.inf)
+        self.pendA[i] = 0
+        self.agg.sync_in(i, eng.timeline)
+        st.in_cruise = True
+        self._cruise[i] = True
+
+    def _leave_cruise(self, st: _CellState) -> None:
+        self._sync_objects(st)
+        self.agg.sync_out(st.i, st.eng.timeline)
+        st.in_cruise = False
+        self._cruise[st.i] = False
+
+    def _sync_objects(self, st: _CellState) -> None:
+        """Replay the pending vector rounds onto the engine's object
+        state: every resident gained one token per round, the round/
+        credit counters advanced, and the (frozen) per-round DRAM fetch
+        accrued — exactly what the scalar rounds would have written."""
+        p = int(self.pendA[st.i])
+        if not p:
+            return
+        eng = st.eng
+        for r in eng._active_reqs:
+            r.generated += p
+            r.context += p
+        eng._ctx_sum = int(self.ctxA[st.i])
+        eng._round_no += p
+        eng.decode_credit += p
+        f = int(self.fA[st.i])
+        if f:
+            eng._kv_fetch_bytes += p * f
+        st.iters += p
+        self.pendA[st.i] = 0
+
+    def _growth_prep(self, st: _CellState) -> bool:
+        """A resident crosses a KV block boundary this round: sync the
+        cell and run the engine's own ``_kv_prepare_round`` (growth,
+        watermark preemption, spill/COW timeline charges) exactly as the
+        scalar ``_decode_round`` would before pricing the round.  The
+        cell keeps its place in the current vector round; returns False
+        only when the post-prep batch size has no affine cost lane, in
+        which case the committed round ran scalar instead."""
+        i, eng = st.i, st.eng
+        self._sync_objects(st)
+        self.agg.sync_out(i, eng.timeline)
+        eng._kv_prepare_round()
+        q = len(eng.queue)      # preemption appendlefts victims: track
+        if q > st.qmax:         # the depth the scalar engine would have
+            st.qmax = q         # sampled on its next step
+        self.agg.sync_in(i, eng.timeline)
+        b = len(eng._active_idx)
+        if not st.group.surface.affine[b]:
+            eng._decode_round()     # re-entry prep is a no-op (needed==0)
+            self.agg.sync_in(i, eng.timeline)
+            st.in_cruise = False
+            self._cruise[i] = False
+            st.iters += 1
+            return False
+        self._snap_cost(st, b)
+        self.ctxA[i] = eng._ctx_sum
+        self.fA[i] = self._fetch_bytes(eng)
+        fin, pre = self._budgets(eng)
+        self.exitA[i] = min(fin, pre)
+        self.growA[i] = self._grow_budget(eng)
+        return True
+
+    def _finalize(self, st: _CellState) -> None:
+        eng = st.eng
+        rep = eng._report(st.requests)
+        # queue-depth maxima reached during cruise (growth preemptions)
+        # were tracked out-of-band; everything else in the report comes
+        # from the synced timeline aggregates
+        if st.qmax > rep.max_queue_depth:
+            rep.max_queue_depth = st.qmax
+        st.report = rep
+        st.kv = eng.kv_stats
+        st.done = True
+
+    # ------------------------------------------------------------------
+    # snapshots and countdowns
+    def _snap_cost(self, st: _CellState, b: int) -> None:
+        surf = st.group.surface
+        i = st.i
+        self.bA[i] = b
+        self.baseA[i] = surf.base[b]
+        self.nattnA[i] = surf.n_attn[b]
+        self.c2cA[i] = surf.c2c_bytes[b]
+        self.cppA[i] = surf.cpp
+        self.alphaA[i] = surf.alpha
+
+    @staticmethod
+    def _budgets(eng: ContinuousBatchingEngine) -> Tuple[int, int]:
+        """(finish, prefill) budgets: how many decode rounds INCLUDING
+        the next one can run before that scalar event fires."""
+        if eng.kv is None:
+            heap = eng._finish_heap
+            fin = (heap[0][0] - eng._round_no - 1) if heap else _BIG
+        else:
+            fin = min(r.max_new - r.generated
+                      for r in eng._active_reqs) - 1
+        if eng._partial is not None:
+            want = True
+        elif not eng.queue or eng._free_slot() is None:
+            want = False
+        else:
+            want = eng.kv is None or eng._kv_can_admit()
+        pre = (eng.engine.decode_quantum - eng.decode_credit
+               if want else _BIG)
+        return fin, pre
+
+    @staticmethod
+    def _grow_budget(eng: ContinuousBatchingEngine) -> int:
+        """Rounds until some resident's next token no longer fits its
+        block table (capacity is exact: growth fires when context
+        reaches ``len(blocks) * block_tokens``)."""
+        kv = eng.kv
+        if kv is None:
+            return _BIG
+        bt = kv.cfg.block_tokens
+        tables = kv.tables
+        return min(len(tables[r.request_id].blocks) * bt - r.context
+                   for r in eng._active_reqs)
+
+    @staticmethod
+    def _fetch_bytes(eng: ContinuousBatchingEngine) -> int:
+        """Per-round DRAM-resident KV fetch — frozen between growth/
+        scalar events (block tables only change there)."""
+        kv = eng.kv
+        if kv is None:
+            return 0
+        return sum(kv.dram_tokens(eng.slots[j].request_id)
+                   for j in eng._active_idx) * kv.cfg.bytes_per_token
+
+    def _check_surfaces(self) -> None:
+        """Mid-run calibration guard, mirroring the scalar engine's
+        per-round ``aff[5] != cm._cal_ver`` check: a mutated model
+        rebuilds the group surface and re-snapshots every cruising
+        cell's cost lanes before the next vector round."""
+        refreshed = False
+        for group in self._groups.values():
+            if group.surface is not None and group.surface.refresh():
+                refreshed = True
+        if refreshed:
+            for st in self._states:
+                if st.in_cruise:
+                    self._snap_cost(st, int(self.bA[st.i]))
+
+
+def sweep_serve(cells: Sequence[SweepCell]) -> List[SweepResult]:
+    """Run a grid of serving cells through one vectorized lockstep pass;
+    results in cell order, each byte-identical to a per-cell scalar
+    `ContinuousBatchingEngine` run."""
+    return SweepEngine(cells).run()

@@ -1,0 +1,472 @@
+"""Vectorized sweep engine (ISSUE 7): ``sweep_serve`` over a grid of
+cells must be BIT-IDENTICAL, per cell, to running each cell through its
+own scalar ``ContinuousBatchingEngine`` — property-tested on randomized
+grids, with the aggregate-only recorder, the batched decode cost surface
+and the burst fold each locked down in isolation."""
+import copy
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import (C2CTransfer, ClusterSleep, ClusterWake, ComputeSpan,
+                        CycleModel, EnergySample, PicnicSimulator, Timeline,
+                        TokenEmit)
+from repro.core.scheduling import DecodeCostSurface, allocate_chiplets
+from repro.core.timeline import SweepAggregates
+from repro.launch.serving_engine import (ContinuousBatchingEngine,
+                                         EngineConfig, poisson_trace,
+                                         replay_trace)
+from repro.launch.sweep_engine import SweepCell, SweepEngine, sweep_serve
+from repro.runtime.kv_cache import KVCacheConfig, kv_bytes_per_token
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama3.2-1b")
+
+
+def _hexdict(obj) -> dict:
+    d = dataclasses.asdict(obj)
+    d.pop("queue_depth", None)
+    return {k: (v.hex() if isinstance(v, float) else v) for k, v in d.items()}
+
+
+def _scalar_run(cell: SweepCell):
+    """The reference: this cell alone, a fresh simulator, the plain
+    scalar engine (full per-event recording, no aggregate mirror)."""
+    sim = PicnicSimulator()
+    if cell.sim is not None and cell.sim.ccpg_model.include_dram_hub:
+        sim.ccpg_model.include_dram_hub = True
+    eng = ContinuousBatchingEngine(cell.cfg, sim=sim, engine=cell.engine)
+    rep = eng.run([copy.copy(r) for r in cell.trace])
+    return rep, eng.kv_stats
+
+
+def _assert_cell_identical(res, cell: SweepCell):
+    rep, kv = _scalar_run(cell)
+    assert _hexdict(res.report) == _hexdict(rep), cell.key
+    if kv is None:
+        assert res.kv_stats is None
+    else:
+        assert res.kv_stats.row() == kv.row(), cell.key
+
+
+# ---------------------------------------------------------------------------
+# sweep_serve == scalar engines, per cell
+# ---------------------------------------------------------------------------
+
+def test_sweep_matches_scalar_mixed_grid(cfg):
+    """A grid mixing batch sizes, CCPG and chunked prefill: every cell's
+    report is byte-identical to its own scalar engine, all vectorized."""
+    cells = []
+    for mb in (1, 4, 8):
+        for ccpg in (False, True):
+            trace = poisson_trace(24, 40.0, seed=3, prompt_len=384,
+                                  max_new=48)
+            cells.append(SweepCell(
+                key=f"b{mb}_g{int(ccpg)}", cfg=cfg, trace=trace,
+                engine=EngineConfig(max_batch=mb, ccpg=ccpg,
+                                    chunked_prefill_tokens=256)))
+    results = sweep_serve(cells)
+    assert len(results) == len(cells)
+    for res, cell in zip(results, cells):
+        assert res.fallback is None
+        assert res.key == cell.key
+        _assert_cell_identical(res, cell)
+
+
+def test_sweep_single_cell_and_empty_grid(cfg):
+    assert sweep_serve([]) == []
+    cell = SweepCell("only", cfg, poisson_trace(8, 30.0, seed=1,
+                                                max_new=32))
+    (res,) = sweep_serve([cell])
+    assert res.fallback is None
+    _assert_cell_identical(res, cell)
+
+
+@settings(max_examples=6, deadline=None)
+@given(rate=st.sampled_from([15.0, 45.0, 90.0]),
+       mb=st.integers(min_value=1, max_value=8),
+       ccpg=st.booleans(),
+       chunk=st.sampled_from([0, 128]),
+       seed=st.integers(min_value=0, max_value=5))
+def test_sweep_property_random_cells(cfg, rate, mb, ccpg, chunk, seed):
+    """Randomized 3-cell grids (shared default sim, varying prompt
+    regimes) stay bit-identical to per-cell scalar engines."""
+    cells = [
+        SweepCell(f"c{i}", cfg,
+                  poisson_trace(10, rate, seed=seed + i,
+                                prompt_len=pl, max_new=mn),
+                  engine=EngineConfig(max_batch=mb, ccpg=ccpg,
+                                      chunked_prefill_tokens=chunk))
+        for i, (pl, mn) in enumerate(((128, 16), (512, 64), (96, 96)))
+    ]
+    for res, cell in zip(sweep_serve(cells), cells):
+        assert res.fallback is None
+        _assert_cell_identical(res, cell)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n_blocks=st.integers(min_value=6, max_value=24),
+       bt=st.sampled_from([16, 64, 256]),
+       dram=st.sampled_from([0, 16]),
+       share=st.booleans(),
+       seed=st.integers(min_value=0, max_value=3))
+def test_sweep_property_paged_cells(cfg, n_blocks, bt, dram, share, seed):
+    """Paged/prefix cells: kv_stats rows (preemptions, spills, COW
+    forks) must survive the vectorized path bit-for-bit."""
+    kvc = KVCacheConfig(n_blocks=n_blocks, block_tokens=bt,
+                        dram_blocks=dram, prefix_sharing=share,
+                        bytes_per_token=kv_bytes_per_token(cfg))
+    sim = PicnicSimulator()
+    sim.ccpg_model.include_dram_hub = dram > 0
+    trace = poisson_trace(12, 50.0, seed=seed, prompt_len=256, max_new=64,
+                          prefix_len=192 if share else 0, prefix_frac=0.75)
+    cell = SweepCell("paged", cfg, trace, sim=sim,
+                     engine=EngineConfig(max_batch=4, ccpg=True,
+                                         kv_cache=kvc))
+    (res,) = sweep_serve([cell])
+    assert res.fallback is None
+    assert res.kv_stats is not None
+    _assert_cell_identical(res, cell)
+
+
+def test_sweep_shared_trace_object_not_mutated(cfg):
+    """Grid builders reuse one trace list across cells; the engine must
+    defensively copy (TrackedRequest is mutable bookkeeping)."""
+    trace = poisson_trace(8, 40.0, seed=0, max_new=24)
+    snap = [(r.arrival, r.prompt_len, r.max_new) for r in trace]
+    cells = [SweepCell(f"c{i}", cfg, trace,
+                       engine=EngineConfig(max_batch=1 + i))
+             for i in range(3)]
+    for res, cell in zip(sweep_serve(cells), cells):
+        _assert_cell_identical(res, cell)
+    assert [(r.arrival, r.prompt_len, r.max_new) for r in trace] == snap
+
+
+# ---------------------------------------------------------------------------
+# scalar fallbacks: flagged, still correct
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_kw, trace_kw, reason_frag", [
+    (dict(overlap=0.5), {}, "overlap"),
+    (dict(ccpg=True, dynamic_ccpg=True), {}, "dynamic_ccpg"),
+    (dict(), dict(deadline_ttft=0.25), "ttft_deadline"),
+])
+def test_sweep_fallback_cells(cfg, engine_kw, trace_kw, reason_frag):
+    trace = poisson_trace(8, 30.0, seed=2, max_new=24, **trace_kw)
+    cell = SweepCell("fb", cfg, trace, engine=EngineConfig(**engine_kw))
+    vanilla = SweepCell("ok", cfg, poisson_trace(8, 30.0, seed=2,
+                                                 max_new=24))
+    fb, ok = sweep_serve([cell, vanilla])
+    assert fb.fallback is not None and reason_frag in fb.fallback
+    assert ok.fallback is None
+    _assert_cell_identical(fb, cell)
+    _assert_cell_identical(ok, vanilla)
+
+
+def test_sweep_fallback_non_affine_surface(cfg):
+    """memoize=False kills the affine export — whole group runs scalar,
+    flagged as such, results still identical."""
+    sim = PicnicSimulator(cycle_model=CycleModel(memoize=False))
+    cell = SweepCell("noaff", cfg, poisson_trace(6, 30.0, seed=4,
+                                                 max_new=16), sim=sim)
+    (res,) = sweep_serve([cell])
+    assert res.fallback is not None and "non-affine" in res.fallback
+    eng = ContinuousBatchingEngine(
+        cfg, sim=PicnicSimulator(cycle_model=CycleModel(memoize=False)))
+    ref = eng.run([copy.copy(r) for r in cell.trace])
+    assert _hexdict(res.report) == _hexdict(ref)
+
+
+# ---------------------------------------------------------------------------
+# calibration mutation on the shared model between (and across) sweeps
+# ---------------------------------------------------------------------------
+
+def test_sweep_recalibration_between_runs(cfg):
+    """Mutating a calibration field on the SHARED CycleModel between two
+    sweeps must invalidate every memoized cost and the batched surface:
+    the second sweep prices with the new constants (bit-identical to a
+    fresh scalar engine carrying the same mutation), not stale memos."""
+    sim = PicnicSimulator()
+    trace = poisson_trace(10, 40.0, seed=5, max_new=32)
+    mk = lambda: [SweepCell(f"c{mb}", cfg, trace,
+                            sim=sim, engine=EngineConfig(max_batch=mb))
+                  for mb in (2, 8)]
+    before = sweep_serve(mk())
+    sim.cycle_model.alpha = sim.cycle_model.alpha * 0.5   # __setattr__ stamp
+    after = sweep_serve(mk())
+    for res_b, res_a, mb in zip(before, after, (2, 8)):
+        assert res_a.fallback is None
+        # the mutation visibly changed the physics...
+        assert res_a.report.wall_s != res_b.report.wall_s
+        # ...and matches a from-scratch scalar engine under the new alpha
+        ref_sim = PicnicSimulator()
+        ref_sim.cycle_model.alpha = ref_sim.cycle_model.alpha * 0.5
+        ref = ContinuousBatchingEngine(
+            cfg, sim=ref_sim, engine=EngineConfig(max_batch=mb)
+        ).run([copy.copy(r) for r in trace])
+        assert _hexdict(res_a.report) == _hexdict(ref)
+
+
+def test_cost_surface_refresh_on_calibration_bump(cfg):
+    m = CycleModel()
+    alloc = allocate_chiplets(cfg, PicnicSimulator().tile)
+    surf = DecodeCostSurface(m, cfg, alloc, max_batch=4)
+    assert surf.valid() and not surf.refresh()
+    old_alpha = surf.alpha
+    m.alpha = m.alpha * 2.0
+    assert not surf.valid()
+    assert surf.refresh()            # rebuild happened
+    assert surf.alpha == old_alpha * 2.0
+    assert surf.valid() and not surf.refresh()
+
+
+def test_cost_surface_matches_affine_export(cfg):
+    """decode_cycles must reproduce the scalar engine's exact pricing
+    arithmetic (same int truncation points) for every (b, ctx) lane."""
+    m = CycleModel()
+    alloc = allocate_chiplets(cfg, PicnicSimulator().tile)
+    surf = DecodeCostSurface(m, cfg, alloc, max_batch=6)
+    assert surf.affine[1:].all()
+    bs = np.array([1, 2, 3, 6, 4, 5], dtype=np.int64)
+    ctxs = np.array([1, 17, 1009, 65537, 4096, 31], dtype=np.int64)
+    got = surf.decode_cycles(bs, ctxs)
+    for k, (b, ctx) in enumerate(zip(bs, ctxs)):
+        base, n_attn, _c2cb, cpp, alpha, _ver = m.decode_affine(
+            cfg, alloc, int(b))
+        want = int((base + n_attn * int(cpp * int(ctx))) * alpha)
+        assert got[k] == want
+    with pytest.raises(ValueError):
+        DecodeCostSurface(m, cfg, alloc, max_batch=0)
+
+
+def test_cost_surface_shares_model_memo(cfg):
+    """Building a surface populates the model's decode LRU; a rebuild is
+    pure hits.  The capacity knobs bound the LRU and memo_stats() makes
+    evictions visible."""
+    m = CycleModel()
+    alloc = allocate_chiplets(cfg, PicnicSimulator().tile)
+    DecodeCostSurface(m, cfg, alloc, max_batch=4)
+    s0 = m.memo_stats()
+    assert s0["decode_misses"] >= 4 and s0["decode_size"] >= 4
+    DecodeCostSurface(m, cfg, alloc, max_batch=4)
+    s1 = m.memo_stats()
+    assert s1["decode_misses"] == s0["decode_misses"]      # no re-walk
+    assert s1["decode_size"] == s0["decode_size"]
+    # tiny capacity knob -> evictions surface in the counters
+    tiny = CycleModel(decode_memo_max=2)
+    DecodeCostSurface(tiny, cfg, alloc, max_batch=5)
+    st_tiny = tiny.memo_stats()
+    assert st_tiny["decode_max"] == 2
+    assert st_tiny["decode_size"] <= 2
+    assert st_tiny["decode_evictions"] > 0
+
+
+# ---------------------------------------------------------------------------
+# aggregate-only Timeline: same integrals, no event storage
+# ---------------------------------------------------------------------------
+
+def _drive(tl: Timeline) -> None:
+    tl.compute(1e-3, kind="prefill", power_W=4.0, cycles=123, batch=2,
+               name="p0")
+    tl.c2c(4096, phase="prefill", t0=0.0, dur_s=1e-6)
+    tl.token(3, request_id=7)
+    tl.compute(2e-3, kind="decode", power_W=4.0, cycles=456, batch=3)
+    tl.token_each([1, 2, 5])
+    tl.wake(1e-4, power_W=2.0, cycles=99, cluster=1)
+    tl.c2c(128, dur_s=5e-7, phase="kv_fetch", advance=True, power_W=3.0)
+    tl.sleep(5e-4, power_W=0.5)
+    tl.sleep(1e-3, t0=0.0, advance=False, power_W=9.0)
+    tl.sample(1.25)
+
+
+def test_aggregate_only_matches_recording_timeline():
+    agg, col = Timeline(aggregate_only=True), Timeline(columnar=True)
+    _drive(agg)
+    _drive(col)
+    for attr in ("now", "energy_J", "busy_s", "idle_s", "c2c_bytes",
+                 "tokens", "occupancy_s"):
+        assert getattr(agg, attr) == getattr(col, attr), attr
+    for cls in (ComputeSpan, C2CTransfer, ClusterWake, ClusterSleep,
+                EnergySample, TokenEmit):
+        assert agg.count(cls) == col.count(cls), cls.__name__
+    for kind in (None, "prefill", "decode"):
+        assert agg.cycles(ComputeSpan, kind=kind) \
+            == col.cycles(ComputeSpan, kind=kind)
+        assert agg.span_seconds(ComputeSpan, kind=kind) \
+            == col.span_seconds(ComputeSpan, kind=kind)
+    assert agg.n_events == col.n_events
+    assert agg.total_energy_J() == col.total_energy_J()
+
+
+def test_aggregate_only_refuses_event_access():
+    tl = Timeline(aggregate_only=True)
+    tl.compute(1e-3, kind="decode", cycles=9)
+    for op in (lambda: tl.events, lambda: list(tl._iter_events()),
+               lambda: tl.power_trace(),
+               lambda: tl.column(ComputeSpan, "dur_s")):
+        with pytest.raises(RuntimeError, match="aggregate-only"):
+            op()
+    assert tl.n_events == 2          # O(1) count still works
+
+
+def test_aggregate_only_engine_report_identical(cfg):
+    """EngineConfig.aggregate_timeline drops event storage but must not
+    perturb a single reported float."""
+    base = EngineConfig(max_batch=4, ccpg=True)
+    trace = poisson_trace(16, 40.0, seed=6, max_new=48)
+    fast = ContinuousBatchingEngine(
+        cfg, sim=PicnicSimulator(),
+        engine=dataclasses.replace(base, aggregate_timeline=True))
+    ref = ContinuousBatchingEngine(cfg, sim=PicnicSimulator(), engine=base)
+    r_fast = fast.run([copy.copy(r) for r in trace])
+    r_ref = ref.run([copy.copy(r) for r in trace])
+    assert _hexdict(r_fast) == _hexdict(r_ref)
+    assert fast.timeline.n_events == ref.timeline.n_events
+
+
+# ---------------------------------------------------------------------------
+# SweepAggregates: sync round-trip and the burst fold
+# ---------------------------------------------------------------------------
+
+def test_sweep_aggregates_sync_roundtrip():
+    tl = Timeline(aggregate_only=True)
+    _drive(tl)
+    agg = SweepAggregates(3)
+    agg.sync_in(1, tl)
+    out = Timeline(aggregate_only=True)
+    agg.sync_out(1, out)
+    for attr in ("now", "energy_J", "busy_s", "c2c_bytes", "tokens",
+                 "occupancy_s"):
+        assert getattr(out, attr) == getattr(tl, attr), attr
+    # only the counts a vector round can touch are mirrored (compute,
+    # sample, c2c, token) — wakes/sleeps mutate scalar-side only
+    from repro.core.timeline import _C2C, _COMPUTE, _SAMPLE, _TOKEN
+    for slot in (_COMPUTE, _SAMPLE, _C2C, _TOKEN):
+        assert out._counts[slot] == tl._counts[slot]
+    for key in SweepAggregates._SPAN_KEYS:
+        assert out._span_s.get(key, 0.0) == tl._span_s.get(key, 0.0)
+
+
+def _random_agg(rng, n):
+    agg = SweepAggregates(n)
+    for name in ("now", "busy_s", "energy_J", "occupancy_s",
+                 "span_compute", "span_decode", "span_c2c"):
+        getattr(agg, name)[:] = rng.uniform(0.0, 2.0, n)
+    for name in ("tokens", "c2c_bytes", "n_compute", "n_sample", "n_c2c",
+                 "n_token"):
+        getattr(agg, name)[:] = rng.integers(0, 1000, n)
+    return agg
+
+
+def _clone_agg(agg):
+    c = SweepAggregates(agg.n_cells)
+    for name in vars(agg):
+        v = getattr(agg, name)
+        if isinstance(v, np.ndarray):
+            getattr(c, name)[:] = v
+    return c
+
+
+def _reference_rounds(agg, idx, h, dt, power, batch, bb, bd, fb, fd, arr):
+    """h[k] sequential decode_round calls per lane, with the scalar
+    engine's arrival cutoff (round j+1 only runs while now < arrival)."""
+    applied = np.zeros(idx.size, dtype=np.int64)
+    for j in range(int(h.max())):
+        live = (applied == j) & (j < h) & (agg.now[idx] < arr)
+        if not live.any():
+            break
+        sel = idx[live]
+        agg.decode_round(sel, dt[j][live], power[live], batch[live],
+                         bb[live], bd[live], fb[live], fd[live])
+        applied[live] += 1
+    return applied
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       with_fetch=st.booleans(),
+       truncate=st.booleans())
+def test_decode_burst_bit_identical_to_rounds(seed, with_fetch, truncate):
+    """decode_burst == h repeated decode_round calls, bit for bit, on
+    both the fetch-free fast path and the interleaved general path,
+    with and without arrival truncation."""
+    rng = np.random.default_rng(seed)
+    n, H = 5, 7
+    idx = np.sort(rng.choice(8, size=n, replace=False)).astype(np.int64)
+    h = rng.integers(1, H + 1, n)
+    dt = rng.uniform(1e-5, 1e-3, (H, n))
+    power = rng.uniform(0.0, 8.0, n)
+    batch = rng.integers(1, 9, n)
+    bb = rng.integers(0, 4096, n) * rng.integers(0, 2, n)
+    bd = np.where(bb > 0, bb / 64e9, 0.0)
+    if with_fetch:
+        fb = rng.integers(0, 2048, n) * rng.integers(0, 2, n)
+        if not fb.any():
+            fb[0] = 512
+    else:
+        fb = np.zeros(n, dtype=np.int64)
+    fd = np.where(fb > 0, fb / 64e9, 0.0)
+    a = _random_agg(np.random.default_rng(seed + 1), 8)
+    if truncate:
+        # arrivals land mid-burst for some lanes, far future for others
+        arr = a.now[idx] + rng.uniform(0.0, 3e-3, n)
+    else:
+        arr = np.full(n, np.inf)
+    # callers guarantee no arrival due at entry
+    arr = np.maximum(arr, np.nextafter(a.now[idx], np.inf))
+    ref = _clone_agg(a)
+    h_fast = a.decode_burst(idx, h, dt.copy(), power, batch, bb, bd, fb,
+                            fd, arr)
+    h_ref = _reference_rounds(ref, idx, h, dt, power, batch, bb, bd, fb,
+                              fd, arr)
+    assert np.array_equal(h_fast, h_ref)
+    assert (h_fast >= 1).all()
+    for name in vars(a):
+        va, vr = getattr(a, name), getattr(ref, name)
+        if isinstance(va, np.ndarray):
+            assert va.tobytes() == vr.tobytes(), name
+
+
+def test_decode_burst_untouched_lanes_stay_put():
+    rng = np.random.default_rng(7)
+    a = _random_agg(rng, 6)
+    before = {k: v.copy() for k, v in vars(a).items()
+              if isinstance(v, np.ndarray)}
+    idx = np.array([1, 4], dtype=np.int64)
+    n = idx.size
+    H = 3
+    a.decode_burst(idx, np.array([3, 2]),
+                   rng.uniform(1e-5, 1e-4, (H, n)),
+                   rng.uniform(0.0, 4.0, n), np.array([2, 1]),
+                   np.zeros(n, dtype=np.int64), np.zeros(n),
+                   np.zeros(n, dtype=np.int64), np.zeros(n),
+                   np.full(n, np.inf))
+    others = np.array([0, 2, 3, 5])
+    for name, old in before.items():
+        assert np.array_equal(getattr(a, name)[others], old[others]), name
+
+
+# ---------------------------------------------------------------------------
+# engine internals: grouping and surface sharing
+# ---------------------------------------------------------------------------
+
+def test_sweep_groups_share_allocation_and_surface(cfg):
+    sim = PicnicSimulator()
+    cells = [SweepCell(f"c{i}", cfg,
+                       poisson_trace(4, 30.0, seed=i, max_new=8),
+                       sim=sim, engine=EngineConfig(max_batch=mb))
+             for i, mb in enumerate((2, 8, 4))]
+    eng = SweepEngine(cells)
+    assert len(eng._groups) == 1
+    (group,) = eng._groups.values()
+    assert group.max_batch == 8
+    assert group.surface is not None
+    assert group.surface.max_batch == 8
+    allocs = {id(s.eng.alloc) for s in eng._states}
+    assert allocs == {id(group.alloc)}
