@@ -78,11 +78,20 @@ TOLERANCE_OVERRIDES = {
     # ratio of two wall clocks in the same run: steadier than absolute
     # walls, but still host-scheduler noise on both sides
     ("BENCH_sweep.json", "sweep_speedup"): 0.35,
+    ("BENCH_sweep.json", "sweep_speedup_prefill"): 0.35,
+    ("BENCH_sweep.json", "sweep_speedup_lifted"): 0.35,
     ("BENCH_sweep.json", "cells_per_s"): 0.50,
+    ("BENCH_sweep.json", "cells_per_s.vector"): 0.50,
     ("BENCH_sweep.json", "wall_ms"): 0.50,
     # deterministic simulator outputs: exact, gate tight even though
     # the doc carries a host calibration
     ("BENCH_sweep.json", "tokens_per_s"): 0.10,
+    # the sweep-grid microbench speedups (prefill cruise / lifted-knob
+    # grids) are wall ratios like the rest of BENCH_speed.json but much
+    # larger (20-80x), so relative jitter runs wider than the 3-15x
+    # engine-path cases the 0.50 doc tolerance was sized for
+    ("BENCH_speed.json", "speedup.sweep_prefill"): 0.40,
+    ("BENCH_speed.json", "speedup.sweep_lifted"): 0.40,
 }
 
 

@@ -385,25 +385,63 @@ def bench_paged():
     return rows
 
 
-def bench_sweep():
-    """Vectorized sweep engine (ISSUE 7 tentpole): a 64-cell paged
-    capacity grid — ctx x arrival-rate x max_batch x max_new in the
-    long-generation decode regime (reasoning-style workloads, coarse
-    2048-token KV blocks) — advanced in lockstep by launch/sweep_engine
-    vs the PR-5 scalar fast engine run cell-by-cell with a fresh
-    simulator per cell (exactly how this harness executed sweeps before
-    this refactor).  Every cell is asserted report-identical between the
-    two paths before any number is recorded, so the speedup can never be
-    bought with a behavior change.  The doc carries the host-calibration
-    fingerprint (see microbench.py); per-cell tokens_per_s values are
-    deterministic simulated outputs and gate tight via the
-    check_regression.py TOLERANCE_OVERRIDES table."""
+def _sweep_grid_vs_scalar(cells):
+    """One sweep grid both ways: batched SweepEngine vs the scalar fast
+    engine cell-by-cell with a fresh simulator per cell (exactly how
+    this harness executed sweeps before launch/sweep_engine existed).
+    Asserts per-cell report identity and a fallback-free vector path
+    before any number is recorded, so the speedup can never be bought
+    with a behavior change.  Returns (results, engine, t_sweep_s,
+    t_scalar_s)."""
     import copy
+    from repro.core import PicnicSimulator
+    from repro.launch.serving_engine import ContinuousBatchingEngine
+    from repro.launch.sweep_engine import SweepEngine
+    eng = SweepEngine(cells)
+    t_sw = time.perf_counter()
+    results = eng.run()
+    t_sw = time.perf_counter() - t_sw
+    t_sc = time.perf_counter()
+    refs = []
+    for c in cells:
+        s2 = PicnicSimulator()
+        if c.sim is not None and c.sim.ccpg_model.include_dram_hub:
+            s2.ccpg_model.include_dram_hub = True
+        ref = ContinuousBatchingEngine(c.cfg, sim=s2, engine=c.engine)
+        refs.append(ref.run([copy.copy(r) for r in c.trace]))
+    t_sc = time.perf_counter() - t_sc
+    for c, res, ref in zip(cells, results, refs):
+        assert res.fallback is None, (c.key, res.fallback)
+        assert res.report.row() == ref.row(), \
+            f"sweep cell {c.key}: batched engine diverged from scalar"
+    return results, eng, t_sw, t_sc
+
+
+def bench_sweep():
+    """Vectorized sweep engine (ISSUE 7 tentpole, ISSUE 8 finish): three
+    grids through launch/sweep_engine vs the scalar engine per cell.
+
+      * decode grid — 64 paged cells, ctx x arrival-rate x max_batch x
+        max_new in the long-generation decode regime (reasoning-style
+        workloads, coarse 2048-token KV blocks);
+      * prefill grid — 64 prefill-heavy/short-generation cells (32k
+        prompts streamed in 64-token chunks, 1-2 generated tokens), the
+        regime the prefill cruise vectorizes;
+      * lifted grid — 16 decode-heavy cells over the previously-fallback
+        knobs (overlap in (0,1], dynamic CCPG, TTFT deadlines), now on
+        the vector path.
+
+    The doc carries the host-calibration fingerprint (see
+    microbench.py); wall-derived speedups gate loose and per-cell
+    tokens_per_s values are deterministic simulated outputs gating tight
+    via the check_regression.py TOLERANCE_OVERRIDES table.
+    ``cells_per_s`` is split vector vs scalar-fallback wall time (the
+    fallback share no longer silently dilutes the headline) and the
+    summary line carries the per-reason fallback counts."""
     from repro.configs import get_config
     from repro.core import PicnicSimulator
-    from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                             EngineConfig, poisson_trace)
-    from repro.launch.sweep_engine import SweepCell, sweep_serve
+    from repro.launch.serving_engine import EngineConfig, poisson_trace
+    from repro.launch.sweep_engine import SweepCell
     from repro.runtime.kv_cache import kv_cache_from_model
     try:
         from benchmarks.microbench import _host_calibration
@@ -411,6 +449,8 @@ def bench_sweep():
         from microbench import _host_calibration
     t0 = time.time()
     cfg = get_config("llama3.2-1b")
+    cal = _host_calibration()
+
     kvc = dataclasses.replace(
         kv_cache_from_model(cfg, kv_frac=0.5, dram_frac=1.0),
         block_tokens=2048, n_blocks=24, dram_blocks=24)
@@ -421,46 +461,76 @@ def bench_sweep():
                       "max_batch": (4, 8), "max_new": (2048, 4096)},
                      abbrev={"rate_rps": "r", "max_batch": "b",
                              "max_new": "n"})
-    cells = [SweepCell(c.key(), cfg,
-                       poisson_trace(6, rate_rps=c["rate_rps"], seed=0,
-                                     prompt_len=c["ctx"],
-                                     max_new=c["max_new"]),
-                       EngineConfig(max_batch=c["max_batch"], ccpg=True,
-                                    kv_cache=kvc,
-                                    chunked_prefill_tokens=512),
-                       sim=sim)
-             for c in grid]
-    cal = _host_calibration()
-    t_sw = time.perf_counter()
-    results = sweep_serve(cells)
-    t_sw = time.perf_counter() - t_sw
-    t_sc = time.perf_counter()
-    refs = []
-    for c in cells:
-        s2 = PicnicSimulator()
-        s2.ccpg_model.include_dram_hub = True
-        eng = ContinuousBatchingEngine(c.cfg, sim=s2, engine=c.engine)
-        refs.append(eng.run([copy.copy(r) for r in c.trace]))
-    t_sc = time.perf_counter() - t_sc
-    for c, res, ref in zip(cells, results, refs):
-        assert res.fallback is None, (c.key, res.fallback)
-        assert res.report.row() == ref.row(), \
-            f"sweep cell {c.key}: batched engine diverged from scalar"
-    speedup = t_sc / t_sw
-    rows = [{"cell": c.key, **r.report.row()}
-            for c, r in zip(cells, results)]
+    dec_cells = [SweepCell(c.key(), cfg,
+                           poisson_trace(6, rate_rps=c["rate_rps"], seed=0,
+                                         prompt_len=c["ctx"],
+                                         max_new=c["max_new"]),
+                           EngineConfig(max_batch=c["max_batch"], ccpg=True,
+                                        kv_cache=kvc,
+                                        chunked_prefill_tokens=512),
+                           sim=sim)
+                 for c in grid]
+    pf_cells = [SweepCell(f"pf_r{rate}_n{mn}_s{sd}", cfg,
+                          poisson_trace(2, rate_rps=rate, seed=sd,
+                                        prompt_len=32768, max_new=mn),
+                          EngineConfig(max_batch=8, ccpg=True,
+                                       chunked_prefill_tokens=64))
+                for rate in (1, 2, 4, 8, 16, 32, 64, 128)
+                for mn in (1, 2) for sd in (0, 1, 2, 3)]
+    lift_cells = [SweepCell(f"lift_o{ov}_d{int(dyn)}_t{tt}_r{rate}", cfg,
+                            poisson_trace(6, rate_rps=rate, seed=0,
+                                          prompt_len=256, max_new=4096,
+                                          **({} if tt is None
+                                             else dict(deadline_ttft=tt))),
+                            EngineConfig(max_batch=8, overlap=ov,
+                                         ccpg=True, dynamic_ccpg=dyn))
+                  for ov in (0.25, 0.75) for dyn in (False, True)
+                  for tt in (None, 0.25) for rate in (30, 60)]
+
+    dec_res, dec_eng, dec_sw, dec_sc = _sweep_grid_vs_scalar(dec_cells)
+    pf_res, pf_eng, pf_sw, pf_sc = _sweep_grid_vs_scalar(pf_cells)
+    lf_res, lf_eng, lf_sw, lf_sc = _sweep_grid_vs_scalar(lift_cells)
+
+    engines = (dec_eng, pf_eng, lf_eng)
+    n_cells = len(dec_cells) + len(pf_cells) + len(lift_cells)
+    fb_counts: dict = {}
+    for e in engines:
+        for reason, cnt in e.fallback_counts.items():
+            fb_counts[reason] = fb_counts.get(reason, 0) + cnt
+    n_fb = sum(fb_counts.values())
+    vec_wall = sum(e.vector_wall_s for e in engines)
+    fb_wall = sum(e.fallback_wall_s for e in engines)
+    speedup = dec_sc / dec_sw
+    pf_speedup = pf_sc / pf_sw
+    lf_speedup = lf_sc / lf_sw
+
+    pairs = list(zip(dec_cells, dec_res)) + list(zip(pf_cells, pf_res)) \
+        + list(zip(lift_cells, lf_res))
+    rows = [{"cell": c.key, **r.report.row()} for c, r in pairs]
     _save("sweep", rows)
     _bench_artifact("sweep", {
         "sweep_speedup_64cell": round(speedup, 2),
-        "cells_per_s": round(len(cells) / t_sw, 1),
-        "wall_ms": {"sweep": round(t_sw * 1e3, 1),
-                    "scalar_per_cell": round(t_sc * 1e3, 1)},
-        "n_cells": len(cells),
-        "tokens_per_s": {c.key: r.report.tokens_per_s
-                         for c, r in zip(cells, results)},
+        "sweep_speedup_prefill_64cell": round(pf_speedup, 2),
+        "sweep_speedup_lifted_16cell": round(lf_speedup, 2),
+        # vector vs scalar-fallback wall split: every cell of every grid
+        # rides the vector path, so the fallback share must stay zero
+        "cells_per_s": {
+            "vector": round((n_cells - n_fb) / vec_wall, 1),
+            "fallback": round(n_fb / fb_wall, 1) if fb_wall else 0.0},
+        "wall_ms": {"sweep": round(dec_sw * 1e3, 1),
+                    "scalar_per_cell": round(dec_sc * 1e3, 1),
+                    "prefill_sweep": round(pf_sw * 1e3, 1),
+                    "prefill_scalar_per_cell": round(pf_sc * 1e3, 1),
+                    "lifted_sweep": round(lf_sw * 1e3, 1),
+                    "lifted_scalar_per_cell": round(lf_sc * 1e3, 1),
+                    "fallback": round(fb_wall * 1e3, 1)},
+        "n_cells": n_cells,
+        "fallback_cells": n_fb,
+        "tokens_per_s": {c.key: r.report.tokens_per_s for c, r in pairs},
     }, rows=rows, extra={"host_ops_per_s": round(cal, 1)})
-    _emit("sweep", t0, f"speedup_vs_scalar_per_cell={speedup:.1f}x_"
-                       f"cells_per_s={len(cells) / t_sw:.0f}")
+    _emit("sweep", t0,
+          f"speedup decode={speedup:.1f}x prefill={pf_speedup:.1f}x "
+          f"lifted={lf_speedup:.1f}x fallback_cells={n_fb} ({fb_counts})")
     return rows
 
 

@@ -602,7 +602,8 @@ class SweepAggregates:
     """
 
     _SPAN_KEYS = (("ComputeSpan", None), ("ComputeSpan", "decode"),
-                  ("C2CTransfer", None))
+                  ("C2CTransfer", None), ("ComputeSpan", "prefill"),
+                  ("ClusterWake", None))
 
     def __init__(self, n_cells: int):
         self.n_cells = n_cells
@@ -616,11 +617,15 @@ class SweepAggregates:
         self.span_compute = np.zeros(n_cells)
         self.span_decode = np.zeros(n_cells)
         self.span_c2c = np.zeros(n_cells)
+        self.span_prefill = np.zeros(n_cells)
+        self.span_wake = np.zeros(n_cells)
+        self.cyc_wake = np.zeros(n_cells, dtype=np.int64)
         # aggregate-only event counts kept exact during vector rounds
         self.n_compute = np.zeros(n_cells, dtype=np.int64)
         self.n_sample = np.zeros(n_cells, dtype=np.int64)
         self.n_c2c = np.zeros(n_cells, dtype=np.int64)
         self.n_token = np.zeros(n_cells, dtype=np.int64)
+        self.n_wake = np.zeros(n_cells, dtype=np.int64)
 
     def sync_in(self, i: int, tl: Timeline) -> None:
         self.now[i] = tl.now
@@ -633,12 +638,16 @@ class SweepAggregates:
         self.span_compute[i] = span.get(self._SPAN_KEYS[0], 0.0)
         self.span_decode[i] = span.get(self._SPAN_KEYS[1], 0.0)
         self.span_c2c[i] = span.get(self._SPAN_KEYS[2], 0.0)
+        self.span_prefill[i] = span.get(self._SPAN_KEYS[3], 0.0)
+        self.span_wake[i] = span.get(self._SPAN_KEYS[4], 0.0)
+        self.cyc_wake[i] = tl._cycles.get(self._SPAN_KEYS[4], 0)
         if tl.aggregate_only:
             cnt = tl._counts
             self.n_compute[i] = cnt[_COMPUTE]
             self.n_sample[i] = cnt[_SAMPLE]
             self.n_c2c[i] = cnt[_C2C]
             self.n_token[i] = cnt[_TOKEN]
+            self.n_wake[i] = cnt[_WAKE]
 
     def sync_out(self, i: int, tl: Timeline) -> None:
         tl.now = float(self.now[i])
@@ -651,12 +660,96 @@ class SweepAggregates:
         span[self._SPAN_KEYS[0]] = float(self.span_compute[i])
         span[self._SPAN_KEYS[1]] = float(self.span_decode[i])
         span[self._SPAN_KEYS[2]] = float(self.span_c2c[i])
+        # prefill/wake lanes: only written when they carry anything (or
+        # the key already exists) so a decode-only sweep does not grow
+        # the span dict's key set relative to its scalar run
+        for key, col in ((self._SPAN_KEYS[3], self.span_prefill),
+                         (self._SPAN_KEYS[4], self.span_wake)):
+            v = float(col[i])
+            if v or key in span:
+                span[key] = v
+        cw = int(self.cyc_wake[i])
+        if cw or self._SPAN_KEYS[4] in tl._cycles:
+            tl._cycles[self._SPAN_KEYS[4]] = cw
         if tl.aggregate_only:
             cnt = tl._counts
             cnt[_COMPUTE] = int(self.n_compute[i])
             cnt[_SAMPLE] = int(self.n_sample[i])
             cnt[_C2C] = int(self.n_c2c[i])
             cnt[_TOKEN] = int(self.n_token[i])
+            cnt[_WAKE] = int(self.n_wake[i])
+
+    def sync_in_many(self, idx: np.ndarray, tls: Sequence[Timeline]) -> None:
+        """Batched :meth:`sync_in` — one fancy-indexed scatter per column
+        instead of per-lane scalar writes.  All ``tls`` must be
+        aggregate-only recorders (the sweep engine's only mode)."""
+        K0, K1, K2, K3, K4 = self._SPAN_KEYS
+        f = np.array([(tl.now, tl.busy_s, tl.energy_J, tl.occupancy_s,
+                       tl._span_s.get(K0, 0.0), tl._span_s.get(K1, 0.0),
+                       tl._span_s.get(K2, 0.0), tl._span_s.get(K3, 0.0),
+                       tl._span_s.get(K4, 0.0)) for tl in tls])
+        self.now[idx] = f[:, 0]
+        self.busy_s[idx] = f[:, 1]
+        self.energy_J[idx] = f[:, 2]
+        self.occupancy_s[idx] = f[:, 3]
+        self.span_compute[idx] = f[:, 4]
+        self.span_decode[idx] = f[:, 5]
+        self.span_c2c[idx] = f[:, 6]
+        self.span_prefill[idx] = f[:, 7]
+        self.span_wake[idx] = f[:, 8]
+        g = np.array([(tl.tokens, tl.c2c_bytes, tl._cycles.get(K4, 0),
+                       tl._counts[_COMPUTE], tl._counts[_SAMPLE],
+                       tl._counts[_C2C], tl._counts[_TOKEN],
+                       tl._counts[_WAKE]) for tl in tls], dtype=np.int64)
+        self.tokens[idx] = g[:, 0]
+        self.c2c_bytes[idx] = g[:, 1]
+        self.cyc_wake[idx] = g[:, 2]
+        self.n_compute[idx] = g[:, 3]
+        self.n_sample[idx] = g[:, 4]
+        self.n_c2c[idx] = g[:, 5]
+        self.n_token[idx] = g[:, 6]
+        self.n_wake[idx] = g[:, 7]
+
+    def sync_out_many(self, idx: np.ndarray, tls: Sequence[Timeline]) -> None:
+        """Batched :meth:`sync_out`: gather every column once, then per-
+        timeline attribute stores (aggregate-only recorders required)."""
+        K0, K1, K2, K3, K4 = self._SPAN_KEYS
+        now, busy, en, occ = (self.now[idx], self.busy_s[idx],
+                              self.energy_J[idx], self.occupancy_s[idx])
+        tok, cbytes = self.tokens[idx], self.c2c_bytes[idx]
+        sc, sd, s2 = (self.span_compute[idx], self.span_decode[idx],
+                      self.span_c2c[idx])
+        sp, sw, cw = (self.span_prefill[idx], self.span_wake[idx],
+                      self.cyc_wake[idx])
+        nc, ns, n2, nt, nw = (self.n_compute[idx], self.n_sample[idx],
+                              self.n_c2c[idx], self.n_token[idx],
+                              self.n_wake[idx])
+        for k, tl in enumerate(tls):
+            tl.now = float(now[k])
+            tl.busy_s = float(busy[k])
+            tl.energy_J = float(en[k])
+            tl.occupancy_s = float(occ[k])
+            tl.tokens = int(tok[k])
+            tl.c2c_bytes = int(cbytes[k])
+            span = tl._span_s
+            span[K0] = float(sc[k])
+            span[K1] = float(sd[k])
+            span[K2] = float(s2[k])
+            v = float(sp[k])
+            if v or K3 in span:
+                span[K3] = v
+            v = float(sw[k])
+            if v or K4 in span:
+                span[K4] = v
+            c = int(cw[k])
+            if c or K4 in tl._cycles:
+                tl._cycles[K4] = c
+            cnt = tl._counts
+            cnt[_COMPUTE] = int(nc[k])
+            cnt[_SAMPLE] = int(ns[k])
+            cnt[_C2C] = int(n2[k])
+            cnt[_TOKEN] = int(nt[k])
+            cnt[_WAKE] = int(nw[k])
 
     def decode_round(self, idx: np.ndarray, dt: np.ndarray,
                      power_W: np.ndarray, batch: np.ndarray,
@@ -708,7 +801,11 @@ class SweepAggregates:
                      power_W: np.ndarray, batch: np.ndarray,
                      burst_bytes: np.ndarray, burst_dur: np.ndarray,
                      fetch_bytes: np.ndarray, fetch_dur: np.ndarray,
-                     next_arrival: np.ndarray) -> np.ndarray:
+                     next_arrival: np.ndarray,
+                     wake_dt: Optional[np.ndarray] = None,
+                     wake_cyc: Optional[np.ndarray] = None,
+                     risk_eta: Optional[np.ndarray] = None,
+                     risk_bound: Optional[np.ndarray] = None) -> np.ndarray:
         """Apply up to ``h[k]`` consecutive decode rounds to each lane
         ``idx[k]`` in one shot — bit-identical to calling
         :meth:`decode_round` that many times per lane, because
@@ -728,11 +825,31 @@ class SweepAggregates:
         rounds past that point.  Returns the per-lane round counts
         actually applied (``>= 1`` — callers guarantee no arrival is due
         at burst entry).
+
+        ``wake_dt`` / ``wake_cyc`` (dynamic CCPG): a per-lane constant
+        ``ClusterWake`` walk replayed *before* each round's compute —
+        ``busy/energy/now`` see an extra add per round in the scalar
+        order, ``("ClusterWake", None)`` span/cycles and the wake/sample
+        counts advance for lanes with ``wake_dt > 0``.  Zero-``wake_dt``
+        lanes are bit-neutral.
+
+        ``risk_eta`` / ``risk_bound`` (TTFT deadlines): rounds are also
+        truncated once the lane's clock would put its queue head at
+        deadline risk — round ``j`` runs only while
+        ``clock_before_j + risk_eta < risk_bound`` (the scalar engine's
+        ``clock + prefill_eta >= arrival + deadline_ttft`` at-risk test,
+        same float expression).  Pass ``risk_eta = 0.0`` /
+        ``risk_bound = inf`` for unconstrained lanes.
         """
         n = int(idx.size)
         H = int(h.max())
         dt = dt[:H]
         lanes = np.arange(n)
+        if wake_dt is not None and wake_dt.any():
+            return self._decode_burst_wake(
+                idx, h, dt, power_W, batch, burst_bytes, burst_dur,
+                fetch_bytes, fetch_dur, next_arrival, wake_dt, wake_cyc,
+                risk_eta, risk_bound)
         if not fetch_bytes.any():
             # Fetch-free fast path: every accumulator sees exactly one
             # add per round (the fetch adds would all be `x + 0.0`,
@@ -756,7 +873,11 @@ class SweepAggregates:
             # it — acc row j of the `now` block — is short of the
             # arrival; monotone, so the count is the prefix length.
             j = np.arange(H)[:, None]
-            h = ((acc[:H, :n] < next_arrival) & (j < h)).sum(axis=0)
+            clock = acc[:H, :n]
+            ok = clock < next_arrival
+            if risk_eta is not None:
+                ok &= (clock + risk_eta) < risk_bound
+            h = (ok & (j < h)).sum(axis=0)
             for k, a in enumerate(starts):
                 a[idx] = acc[h, k * n + lanes]
             self.tokens[idx] += batch * h
@@ -779,7 +900,11 @@ class SweepAggregates:
         # monotone (clock never decreases) so the count is the prefix
         # length.
         j = np.arange(H)[:, None]
-        h = ((accN[0:2 * H:2] < next_arrival) & (j < h)).sum(axis=0)
+        clock = accN[0:2 * H:2]
+        ok = clock < next_arrival
+        if risk_eta is not None:
+            ok &= (clock + risk_eta) < risk_bound
+        h = (ok & (j < h)).sum(axis=0)
         r2 = 2 * h
         self.now[idx] = accN[r2, lanes]
         # busy / energy / span_c2c also see two adds per round, with
@@ -819,4 +944,173 @@ class SweepAggregates:
         self.n_c2c[idx] += ((burst_bytes > 0).astype(np.int64)
                             + (fetch_bytes > 0)) * h
         self.n_sample[idx] += h + ((fetch_bytes > 0) & (power_W > 0)) * h
+        return h
+
+    def _decode_burst_wake(self, idx, h, dt, power_W, batch,
+                           burst_bytes, burst_dur, fetch_bytes, fetch_dur,
+                           next_arrival, wake_dt, wake_cyc,
+                           risk_eta, risk_bound) -> np.ndarray:
+        """Dynamic-CCPG decode burst: each round replays the scalar
+        engine's ``ClusterWake`` walk, then compute, then the (possibly
+        zero) kv fetch — ``now/busy/energy`` fold three adds per round
+        in that order.  ``dt`` is already trimmed to ``(H, n)``.
+        Zero-``wake_dt`` lanes add ``x + 0.0`` on non-negative
+        accumulators (bit-neutral) and are excluded from the wake
+        span/cycle/count columns.
+        """
+        n = int(idx.size)
+        H = dt.shape[0]
+        lanes = np.arange(n)
+        # now / busy / energy: wake, compute, fetch adds per round.
+        inc3 = np.empty((3 * H + 1, 3 * n))
+        inc3[0, :n] = self.now[idx]
+        inc3[0, n:2 * n] = self.busy_s[idx]
+        inc3[0, 2 * n:] = self.energy_J[idx]
+        inc3[1::3, :n] = wake_dt
+        inc3[2::3, :n] = dt
+        inc3[3::3, :n] = fetch_dur
+        inc3[1::3, n:2 * n] = wake_dt
+        inc3[2::3, n:2 * n] = dt
+        inc3[3::3, n:2 * n] = fetch_dur
+        inc3[1::3, 2 * n:] = wake_dt * power_W
+        inc3[2::3, 2 * n:] = dt * power_W
+        inc3[3::3, 2 * n:] = fetch_dur * power_W
+        acc3 = np.add.accumulate(inc3, axis=0)
+        j = np.arange(H)[:, None]
+        clock = acc3[0:3 * H:3, :n]
+        ok = clock < next_arrival
+        if risk_eta is not None:
+            ok &= (clock + risk_eta) < risk_bound
+        h = (ok & (j < h)).sum(axis=0)
+        r3 = 3 * h
+        self.now[idx] = acc3[r3, lanes]
+        self.busy_s[idx] = acc3[r3, n + lanes]
+        self.energy_J[idx] = acc3[r3, 2 * n + lanes]
+        # span_c2c: two adds per round (decode burst, then fetch).
+        inc2 = np.empty((2 * H + 1, n))
+        inc2[0] = self.span_c2c[idx]
+        inc2[1::2] = burst_dur
+        inc2[2::2] = fetch_dur
+        self.span_c2c[idx] = np.add.accumulate(inc2, axis=0)[2 * h, lanes]
+        # One add per round: compute/decode spans, occupancy, wake span.
+        incS = np.empty((H + 1, 4 * n))
+        incS[0, :n] = self.span_compute[idx]
+        incS[0, n:2 * n] = self.span_decode[idx]
+        incS[0, 2 * n:3 * n] = self.occupancy_s[idx]
+        incS[0, 3 * n:] = self.span_wake[idx]
+        incS[1:, :n] = dt
+        incS[1:, n:2 * n] = dt
+        incS[1:, 2 * n:3 * n] = dt * batch
+        incS[1:, 3 * n:] = wake_dt
+        accS = np.add.accumulate(incS, axis=0)
+        self.span_compute[idx] = accS[h, lanes]
+        self.span_decode[idx] = accS[h, lanes + n]
+        self.occupancy_s[idx] = accS[h, lanes + 2 * n]
+        self.span_wake[idx] = accS[h, lanes + 3 * n]
+        # Integer counters are associative — closed form is exact.
+        woke = wake_dt > 0
+        self.tokens[idx] += batch * h
+        self.c2c_bytes[idx] += (burst_bytes + fetch_bytes) * h
+        self.cyc_wake[idx] += woke * wake_cyc * h
+        self.n_wake[idx] += woke * h
+        self.n_compute[idx] += h
+        self.n_token[idx] += batch * h
+        self.n_c2c[idx] += ((burst_bytes > 0).astype(np.int64)
+                            + (fetch_bytes > 0)) * h
+        self.n_sample[idx] += (h + woke * h
+                               + ((fetch_bytes > 0) & (power_W > 0)) * h)
+        return h
+
+    def prefill_burst(self, idx: np.ndarray, h: np.ndarray, dt: np.ndarray,
+                      power_W: np.ndarray, burst_bytes: np.ndarray,
+                      burst_dur: np.ndarray, next_arrival: np.ndarray,
+                      wake_dt: Optional[np.ndarray] = None,
+                      wake_cyc: Optional[np.ndarray] = None) -> np.ndarray:
+        """Apply up to ``h[k]`` consecutive *full-cap prefill chunk*
+        steps to each lane ``idx[k]`` — the vectorized equivalent of the
+        scalar engine's per-chunk appends while a partial prefill cruises
+        alone (no residents, no due arrival):
+
+          1. optional dynamic-CCPG ``ClusterWake`` walk (``wake_dt``)
+          2. ``compute(dt_j, kind="prefill", power_W, batch=1)``
+          3. concurrent prefill C2C (``burst_bytes`` over ``burst_dur``;
+             non-advancing, zero bytes skip the scalar append —
+             bit-neutral here)
+
+        ``dt`` has shape ``(H, n)``: row ``j`` prices chunk ``j+1``
+        (context grows by the chunk cap each step).  Chunks truncate at
+        the lane's next arrival, exactly like :meth:`decode_burst`.
+        Returns the per-lane chunk counts applied.
+        """
+        n = int(idx.size)
+        H = int(h.max())
+        dt = dt[:H]
+        lanes = np.arange(n)
+        j = np.arange(H)[:, None]
+        if wake_dt is not None and wake_dt.any():
+            # now / busy / energy: wake + compute adds per round.
+            inc2 = np.empty((2 * H + 1, 3 * n))
+            inc2[0, :n] = self.now[idx]
+            inc2[0, n:2 * n] = self.busy_s[idx]
+            inc2[0, 2 * n:] = self.energy_J[idx]
+            inc2[1::2, :n] = wake_dt
+            inc2[2::2, :n] = dt
+            inc2[1::2, n:2 * n] = wake_dt
+            inc2[2::2, n:2 * n] = dt
+            inc2[1::2, 2 * n:] = wake_dt * power_W
+            inc2[2::2, 2 * n:] = dt * power_W
+            acc2 = np.add.accumulate(inc2, axis=0)
+            h = ((acc2[0:2 * H:2, :n] < next_arrival)
+                 & (j < h)).sum(axis=0)
+            r2 = 2 * h
+            self.now[idx] = acc2[r2, lanes]
+            self.busy_s[idx] = acc2[r2, n + lanes]
+            self.energy_J[idx] = acc2[r2, 2 * n + lanes]
+            # One add per round: spans, occupancy (batch == 1), wake.
+            incS = np.empty((H + 1, 5 * n))
+            incS[0, :n] = self.span_compute[idx]
+            incS[0, n:2 * n] = self.span_prefill[idx]
+            incS[0, 2 * n:3 * n] = self.span_c2c[idx]
+            incS[0, 3 * n:4 * n] = self.occupancy_s[idx]
+            incS[0, 4 * n:] = self.span_wake[idx]
+            incS[1:, :n] = dt
+            incS[1:, n:2 * n] = dt
+            incS[1:, 2 * n:3 * n] = burst_dur
+            incS[1:, 3 * n:4 * n] = dt
+            incS[1:, 4 * n:] = wake_dt
+            accS = np.add.accumulate(incS, axis=0)
+            self.span_compute[idx] = accS[h, lanes]
+            self.span_prefill[idx] = accS[h, lanes + n]
+            self.span_c2c[idx] = accS[h, lanes + 2 * n]
+            self.occupancy_s[idx] = accS[h, lanes + 3 * n]
+            self.span_wake[idx] = accS[h, lanes + 4 * n]
+            woke = wake_dt > 0
+            self.cyc_wake[idx] += woke * wake_cyc * h
+            self.n_wake[idx] += woke * h
+            self.c2c_bytes[idx] += burst_bytes * h
+            self.n_compute[idx] += h
+            self.n_sample[idx] += h + woke * h
+            self.n_c2c[idx] += (burst_bytes > 0) * h
+            return h
+        # Wake-free: one add per round on every accumulator.
+        inc = np.empty((H + 1, 7 * n))
+        starts = (self.now, self.busy_s, self.energy_J, self.span_c2c,
+                  self.span_compute, self.span_prefill, self.occupancy_s)
+        for k, a in enumerate(starts):
+            inc[0, k * n:(k + 1) * n] = a[idx]
+        inc[1:, 0 * n:1 * n] = dt
+        inc[1:, 1 * n:2 * n] = dt
+        inc[1:, 2 * n:3 * n] = dt * power_W
+        inc[1:, 3 * n:4 * n] = burst_dur
+        inc[1:, 4 * n:5 * n] = dt
+        inc[1:, 5 * n:6 * n] = dt
+        inc[1:, 6 * n:7 * n] = dt  # occupancy: batch == 1 during cruise
+        acc = np.add.accumulate(inc, axis=0)
+        h = ((acc[:H, :n] < next_arrival) & (j < h)).sum(axis=0)
+        for k, a in enumerate(starts):
+            a[idx] = acc[h, k * n + lanes]
+        self.c2c_bytes[idx] += burst_bytes * h
+        self.n_compute[idx] += h
+        self.n_sample[idx] += h
+        self.n_c2c[idx] += (burst_bytes > 0) * h
         return h

@@ -582,6 +582,19 @@ class ContinuousBatchingEngine:
         return self.kv.can_admit(need, reserve=reserve,
                                  shared_blocks=self._probe_shared(head))
 
+    def _prefill_eta_s(self) -> float:
+        """Prefill latency the queue HEAD would pay if admitted now —
+        the horizon the TTFT at-risk test compares against.  Shared with
+        the sweep engine, which freezes it per cruise (the head, and
+        hence the estimate, cannot change between scalar events)."""
+        head = self.queue[0]
+        dt, _ = self.sim.prefill_seconds(
+            self.cfg, self.alloc, head.prompt_len + head.generated,
+            ccpg=self._residue_ccpg)
+        if self.engine.ccpg and self.engine.dynamic_ccpg:
+            dt += self.sim.wake_seconds(self.alloc)[0]
+        return dt
+
     def _deadline_at_risk(self) -> bool:
         head = self.queue[0] if self.queue else None
         if head is None or head.deadline_ttft is None:
@@ -589,12 +602,7 @@ class ContinuousBatchingEngine:
             # prefill: `deadline_at_risk` would discard it anyway, and
             # this check runs on every admission-eligible iteration
             return False
-        dt, _ = self.sim.prefill_seconds(
-            self.cfg, self.alloc, head.prompt_len + head.generated,
-            ccpg=self._residue_ccpg)
-        if self.engine.ccpg and self.engine.dynamic_ccpg:
-            dt += self.sim.wake_seconds(self.alloc)[0]
-        return deadline_at_risk(head, self.clock, dt)
+        return deadline_at_risk(head, self.clock, self._prefill_eta_s())
 
     # ------------------------------------------------------------------
     def _prefill(self, slot: int) -> None:
@@ -786,6 +794,12 @@ class ContinuousBatchingEngine:
                     or len(active) <= 1):
                 break
             self._preempt_one()
+        # batched fast path: the whole round's growth fits the scratch
+        # free list — one allocator pass, identical pops (same block ids
+        # to the same tables) to the sequential ensure() loop below
+        if self.kv.grow_round([(r.request_id, r.context + 1)
+                               for r in self._active()]):
+            return
         for r in self._active():
             self._kv_ensure(r, r.context + 1)
 
@@ -966,10 +980,11 @@ class ContinuousBatchingEngine:
         return self._report(list(trace))
 
     # ------------------------------------------------------------------
-    def _report(self, requests: List[TrackedRequest]) -> ServingReport:
-        """Everything here is DERIVED from the timeline integrator: wall
-        clock, busy/idle split, span-integrated chip energy, C2C bytes,
-        token counts, batch occupancy."""
+    def _report_inputs(self, requests: List[TrackedRequest]):
+        """Report fields minus the four percentile columns, plus the raw
+        ``(lat, ttft)`` arrays — the sweep engine defers and BATCHES the
+        ``np.percentile`` calls across cells (row-identical to per-cell
+        calls), everything else is cheap scalar arithmetic."""
         tl = self.timeline
         done = [r for r in requests if r.finished_at is not None]
         # NaN, not 0.0, when nothing finished: an all-rejected run must
@@ -991,7 +1006,7 @@ class ContinuousBatchingEngine:
             # include_dram_hub path); guarded so the paging-off default
             # keeps its float sequence byte-identical
             energy += dram_bytes * 8 * E_DRAM_ACCESS
-        return ServingReport(
+        fields = dict(
             n_requests=len(requests),
             finished=len(done),
             rejected=self.rejected,
@@ -1003,10 +1018,6 @@ class ContinuousBatchingEngine:
             tokens_per_s=tl.tokens / wall,
             energy_J=energy,
             tokens_per_J=tl.tokens / max(energy, 1e-12),
-            p50_latency_s=float(np.percentile(lat, 50)),
-            p99_latency_s=float(np.percentile(lat, 99)),
-            p50_ttft_s=float(np.percentile(ttft, 50)),
-            p99_ttft_s=float(np.percentile(ttft, 99)),
             mean_batch_occupancy=(tl.occupancy_s
                                   / max(tl.busy_s, 1e-12)),
             max_queue_depth=max((d for _, d in self.queue_depth),
@@ -1014,6 +1025,20 @@ class ContinuousBatchingEngine:
             queue_depth=self.queue_depth,
             c2c_bytes_total=tl.c2c_bytes,
             ccpg=self.engine.ccpg,
+        )
+        return fields, lat, ttft
+
+    def _report(self, requests: List[TrackedRequest]) -> ServingReport:
+        """Everything here is DERIVED from the timeline integrator: wall
+        clock, busy/idle split, span-integrated chip energy, C2C bytes,
+        token counts, batch occupancy."""
+        fields, lat, ttft = self._report_inputs(requests)
+        return ServingReport(
+            p50_latency_s=float(np.percentile(lat, 50)),
+            p99_latency_s=float(np.percentile(lat, 99)),
+            p50_ttft_s=float(np.percentile(ttft, 50)),
+            p99_ttft_s=float(np.percentile(ttft, 99)),
+            **fields,
         )
 
 

@@ -13,37 +13,42 @@ How a cell executes
 -------------------
 
 Each cell still owns a real `ContinuousBatchingEngine` (aggregate-only
-TimelineIR recorder) — admission, prefill, chunked prefill, preemption,
-prefix adoption, finishes and idle gaps all run the engine's own scalar
-code, byte-for-byte.  What gets vectorized is the regime that dominates
-wall clock: *cruise*, an uninterrupted streak of pure decode rounds.
-On entering cruise the cell's round state is snapshotted into cell-major
-numpy arrays (batch size, context sum, affine cost coefficients, KV
-fetch bytes, busy power, ...) plus three exact countdowns:
+TimelineIR recorder) — admission, monolithic prefill, preemption, prefix
+adoption, finishes and idle gaps all run the engine's own scalar code,
+byte-for-byte.  What gets vectorized is the regimes that dominate wall
+clock, the *cruises*:
 
-  * ``exitA``  — rounds until a scalar event (a resident finishing, or
-    the deficit counter reaching ``decode_quantum`` while a prefill is
-    admissible) forces the cell back to the scalar step loop;
-  * ``growA``  — rounds until some resident crosses a KV block boundary
-    (paged cells only);
-  * ``arrA``   — wall-clock time of the next pending arrival.
+  * **decode cruise** — an uninterrupted streak of pure decode rounds.
+    On entry the cell's round state is snapshotted into cell-major numpy
+    arrays (batch size, context sum, split-cost coefficients, KV fetch
+    bytes, busy power, ...) plus exact countdowns: ``exitA`` (rounds to
+    a scalar event: a resident finishing, or the deficit counter
+    reaching ``decode_quantum`` while a prefill is admissible),
+    ``growA`` (rounds to a KV block boundary, paged cells only) and
+    ``arrA`` (wall-clock time of the next pending arrival).
+  * **prefill cruise** — a lone chunked prefill streaming full-cap
+    chunks with no residents and no due arrival: the guaranteed
+    non-finishing chunks fold the same way, priced by the cost surface's
+    closed-form prefill lane.
 
-One lockstep iteration then advances EVERY cruising cell by a decode
-BURST — up to its own safe horizon of rounds, folded into one
-``np.add.accumulate`` (`SweepAggregates.decode_burst`, a strict
-sequential left fold; `decode_round` is the one-round reference it is
-tested against) — performing per lane exactly the scalar engine's
-arithmetic — same truncations, same float64 adds in the same order — so
-each cell's `ServingReport` and `kv_stats` are byte-identical to running
-the scalar fast engine cell by cell (tests/test_sweep_engine.py).
+One lockstep iteration advances EVERY cruising cell by a BURST — up to
+its own safe horizon of rounds/chunks, folded into one
+``np.add.accumulate`` (`SweepAggregates.decode_burst` /
+`prefill_burst`, strict sequential left folds; `decode_round` is the
+one-round reference they are tested against) — performing per lane
+exactly the scalar engine's arithmetic — same truncations, same float64
+adds in the same order — so each cell's `ServingReport` and `kv_stats`
+are byte-identical to running the scalar fast engine cell by cell
+(tests/test_sweep_engine.py).
 
 KV block-table growth is too frequent to leave cruise for (a block
 boundary every ``block_tokens / batch`` rounds): those rounds run
 *semi-scalar* — the cell's objects and timeline row are synced, the
 engine's own ``_kv_prepare_round`` runs verbatim (spills, preemption,
-copy-on-write all land on the real timeline), and the cell stays in the
-same vectorized round, mirroring the scalar ``_decode_round`` = prepare
-+ round sequence.
+copy-on-write all land on the real timeline, with a batched
+`BlockAllocator.grow_round` fast path), and the cell stays in the same
+vectorized round, mirroring the scalar ``_decode_round`` = prepare +
+round sequence.
 
 Cells grouped by ``(simulator, model config)`` share one
 `ChipletAllocation` and one `core.scheduling.DecodeCostSurface`, so the
@@ -55,19 +60,29 @@ sweep at once through the surface's version stamp.
 Feature coverage and graceful degradation
 -----------------------------------------
 
-Chunked prefill, paged KV, preemption and COW prefix sharing are fully
-supported on the vectorized path.  Cells using features the batched
-round cannot price — ``overlap > 0``, ``dynamic_ccpg``, TTFT deadlines
-in the trace, or a non-affine `CycleModel` (subclass or memoization
-off) — degrade gracefully to a per-cell scalar run, logged with the
-reason and flagged in their `SweepResult.fallback`.
+Chunked prefill, paged KV, preemption, COW prefix sharing,
+``overlap > 0`` (C2C hiding priced via the split-cost lane:
+``int((base + n_attn*int(cpp*ctx) + (1-ov)*c2c_cyc) * alpha)``),
+``dynamic_ccpg`` (the per-round `ClusterWake` walk folded into the
+burst as wake columns) and TTFT deadlines (a vectorized at-risk horizon
+check truncating the burst exactly where the scalar engine would flip
+to a must-prefill) are all fully supported on the vectorized path.
+The only remaining scalar fallback is a non-affine `CycleModel`
+(subclass or memoization off), logged once per run with the cell count
+(per-cell detail at DEBUG) and flagged in `SweepResult.fallback`.
 
 Sweep-mode report caveats (documented contract): per-cell reports and
 ``kv_stats`` are byte-identical to the scalar engine, including
-``max_queue_depth``; the `ServingReport.queue_depth` *samples* and the
-engine's per-round ``(clock, DECODE, -1)`` event markers are only
-recorded on scalar iterations (all other events — PREFILL / FINISH /
-PREEMPT / REJECT / IDLE — are complete and exactly timestamped).
+``max_queue_depth``; the `ServingReport.queue_depth` *samples*, the
+engine's per-round ``(clock, DECODE, -1)`` event markers, and the
+mid-chunk ``PREFILL`` progress markers of chunks folded into a prefill
+cruise are only recorded on scalar iterations (all other events —
+PREFILL boundaries / FINISH / PREEMPT / REJECT / IDLE — are complete
+and exactly timestamped).
+
+`SweepEngine` is single-shot: a second :meth:`run` raises.  The wall
+clock spent on the vector path vs the scalar fallback path is split
+into ``vector_wall_s`` / ``fallback_wall_s`` for the benchmarks.
 
   PYTHONPATH=src python -m benchmarks.run sweep
 """
@@ -77,6 +92,7 @@ import copy
 import dataclasses
 import logging
 import math
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -92,7 +108,7 @@ from repro.launch.serving_engine import (ContinuousBatchingEngine,
 log = logging.getLogger(__name__)
 
 _BIG = 1 << 60          # "no exit scheduled" countdown sentinel
-_H_CAP = 512            # max decode rounds folded into one burst
+_H_CAP = 512            # max decode rounds / prefill chunks per burst
 
 
 @dataclasses.dataclass
@@ -138,7 +154,9 @@ class _CellState:
     """Per-cell runtime bookkeeping around the cell's scalar engine."""
 
     __slots__ = ("pos", "i", "cell", "group", "eng", "requests", "pending",
-                 "in_cruise", "done", "iters", "qmax", "report", "kv")
+                 "in_cruise", "done", "iters", "qmax", "report", "kv",
+                 "_fin", "_pre", "_eta", "_adl", "_pfK",
+                 "_fields", "_lat", "_ttft")
 
     def __init__(self, pos: int, i: int, cell: SweepCell, group: _Group,
                  eng: ContinuousBatchingEngine,
@@ -156,17 +174,12 @@ class _CellState:
         self.qmax = 0           # queue depth seen at cruise preemptions
         self.report: Optional[ServingReport] = None
         self.kv: Optional[KVCacheStats] = None
-
-
-def _fallback_reason(cell: SweepCell) -> Optional[str]:
-    e = cell.engine
-    if e.overlap != 0.0:
-        return "overlap>0 (C2C hiding prices per-request)"
-    if e.ccpg and e.dynamic_ccpg:
-        return "dynamic_ccpg (per-round ClusterWake walk)"
-    if any(r.deadline_ttft is not None for r in cell.trace):
-        return "ttft_deadline (per-round at-risk check)"
-    return None
+        # stashed by _enterable / _pf_enterable for the batched entry
+        self._fin = self._pre = self._pfK = 0
+        self._eta, self._adl = 0.0, math.inf
+        # deferred report inputs (percentiles batched across cells)
+        self._fields = None
+        self._lat = self._ttft = None
 
 
 class SweepEngine:
@@ -183,6 +196,12 @@ class SweepEngine:
         self._groups: Dict[Tuple[int, int], _Group] = {}
         self._states: List[_CellState] = []
         self._fallbacks: List[Tuple[int, SweepCell, _Group, str]] = []
+        self._ran = False
+        # wall-clock split + per-reason counts, filled by run() for the
+        # benchmark summary lines
+        self.vector_wall_s = 0.0
+        self.fallback_wall_s = 0.0
+        self.fallback_counts: Dict[str, int] = {}
 
         vec: List[Tuple[int, SweepCell, _Group]] = []
         for pos, cell in enumerate(self.cells):
@@ -195,16 +214,12 @@ class SweepEngine:
             group = self._groups.get(gkey)
             if group is None:
                 group = self._groups[gkey] = _Group(sim, cell.cfg)
-            reason = _fallback_reason(cell)
-            if reason is not None:
-                self._fallbacks.append((pos, cell, group, reason))
-                continue
             group.max_batch = max(group.max_batch, cell.engine.max_batch)
             vec.append((pos, cell, group))
 
-        # batched cost surfaces, one per group that has vectorized cells;
-        # a surface with no affine lane (memoization off / non-affine
-        # subclass) demotes the whole group to the scalar fallback
+        # batched cost surfaces, one per group; a surface with no affine
+        # lane (memoization off / non-affine subclass) demotes the whole
+        # group to the scalar fallback
         for group in self._groups.values():
             if group.max_batch:
                 group.surface = DecodeCostSurface(
@@ -235,11 +250,13 @@ class SweepEngine:
         # -- cell-major lockstep state (one lane per vectorized cell) --
         self.agg = SweepAggregates(n)
         self._cruise = np.zeros(n, dtype=bool)
+        self._pfA = np.zeros(n, dtype=bool)         # lane cruises prefill
         self.bA = np.zeros(n, dtype=np.int64)       # resident batch size
         self.ctxA = np.zeros(n, dtype=np.int64)     # running context sum
-        self.baseA = np.zeros(n, dtype=np.int64)    # affine base cycles
+        self.baseA = np.zeros(n, dtype=np.int64)    # compute base cycles
         self.nattnA = np.zeros(n, dtype=np.int64)   # attention multiplier
         self.c2cA = np.zeros(n, dtype=np.int64)     # decode burst bytes
+        self.ovA = np.zeros(n)                      # (1-overlap)*c2c_cyc
         self.fA = np.zeros(n, dtype=np.int64)       # frozen kv fetch bytes
         self.cppA = np.zeros(n)                     # ctx_cycles_per_pos
         self.alphaA = np.zeros(n)                   # CIM speedup factor
@@ -247,6 +264,13 @@ class SweepEngine:
         self.freqA = np.zeros(n)                    # tile clock Hz
         self.powA = np.zeros(n)                     # busy power W
         self.bwA = np.zeros(n)                      # C2C bandwidth B/s
+        self.wdtA = np.zeros(n)                     # dynamic wake dt/round
+        self.wcycA = np.zeros(n, dtype=np.int64)    # dynamic wake cycles
+        self.etaA = np.zeros(n)                     # TTFT at-risk horizon
+        self.adlA = np.full(n, math.inf)            # arrival + deadline
+        self.capA = np.zeros(n, dtype=np.int64)     # prefill chunk cap
+        self.doneA = np.zeros(n, dtype=np.int64)    # prefilled so far
+        self.pfc2cA = np.zeros(n, dtype=np.int64)   # prefill chunk bytes
         self.pendA = np.zeros(n, dtype=np.int64)    # rounds since sync
         self.exitA = np.zeros(n, dtype=np.int64)    # rounds to scalar event
         self.growA = np.zeros(n, dtype=np.int64)    # rounds to KV growth
@@ -257,21 +281,39 @@ class SweepEngine:
             self.freqA[st.i] = eng._freq_hz
             self.powA[st.i] = eng._busy_power
             self.bwA[st.i] = eng._bandwidth_Bps
+            if eng._dyn_wake:
+                # per-cell constant: the scalar engine replays the same
+                # ClusterWake walk before every round/chunk
+                wdt, wcyc = eng.sim.wake_seconds(eng.alloc)
+                self.wdtA[st.i] = wdt
+                self.wcycA[st.i] = wcyc
 
     # ------------------------------------------------------------------
     def run(self) -> List[SweepResult]:
+        if self._ran:
+            raise RuntimeError("SweepEngine is single-shot")
+        self._ran = True
         results: List[Optional[SweepResult]] = [None] * len(self.cells)
 
+        for _, cell, _, reason in self._fallbacks:
+            self.fallback_counts[reason] = \
+                self.fallback_counts.get(reason, 0) + 1
+        for reason, cnt in self.fallback_counts.items():
+            log.info("sweep: %d cell(s) on the scalar fallback path (%s)",
+                     cnt, reason)
+        t0 = time.perf_counter()
         for pos, cell, group, reason in self._fallbacks:
-            log.info("sweep cell %r: scalar fallback (%s)", cell.key,
-                     reason)
+            log.debug("sweep cell %r: scalar fallback (%s)", cell.key,
+                      reason)
             eng = ContinuousBatchingEngine(cell.cfg, sim=group.sim,
                                            engine=cell.engine,
                                            alloc=group.alloc)
             rep = eng.run([copy.copy(r) for r in cell.trace])
             results[pos] = SweepResult(cell.key, rep, eng.kv_stats,
                                        fallback=reason)
+        self.fallback_wall_s = time.perf_counter() - t0
 
+        t0 = time.perf_counter()
         for st in self._states:
             st.pending = st.eng._prepare_run(st.requests)
 
@@ -279,10 +321,17 @@ class SweepEngine:
         while True:
             # phase A: scalar service — every non-cruising cell steps its
             # own engine until it finishes or the next step would be a
-            # vectorizable decode round
+            # vectorizable decode round / prefill chunk streak; entries
+            # are collected and snapshotted as batched column writes
+            enter_dec: List[_CellState] = []
+            enter_pf: List[_CellState] = []
             for st in self._states:
                 if not st.done and not st.in_cruise:
-                    self._scalar_service(st)
+                    self._scalar_service(st, enter_dec, enter_pf)
+            if enter_dec:
+                self._enter_cruise_many(enter_dec)
+            if enter_pf:
+                self._enter_pf_cruise_many(enter_pf)
             idx = np.nonzero(self._cruise)[0]
             if idx.size == 0:
                 break           # phase A leaves every cell done or cruising
@@ -290,11 +339,14 @@ class SweepEngine:
             self._check_surfaces()
 
             # phase B.1: cruise exits — a scheduled scalar event (finish /
-            # admissible prefill) or a pending arrival is due this round
-            lm = (self.exitA[idx] < 1) | (self.arrA[idx] <= agg.now[idx])
+            # admissible prefill), a pending arrival due this round, or
+            # the queue head's TTFT deadline now at risk (must-prefill)
+            now = agg.now[idx]
+            lm = ((self.exitA[idx] < 1) | (self.arrA[idx] <= now)
+                  | (now + self.etaA[idx] >= self.adlA[idx]))
             if lm.any():
-                for i in idx[lm]:
-                    self._leave_cruise(self._states[int(i)])
+                self._leave_cruise_many(
+                    [self._states[int(i)] for i in idx[lm]])
                 idx = idx[~lm]
                 if idx.size == 0:
                     continue
@@ -310,43 +362,106 @@ class SweepEngine:
                     if idx.size == 0:
                         continue
 
-            # phase B.3: a decode BURST for every cruising cell — each
-            # lane advances up to its own safe horizon (rounds until its
-            # next scalar event or KV growth, capped) in one sequential
-            # fold.  Round j of the burst prices the scalar engine's
-            # exact arithmetic at the context it would see then:
-            #   cyc = int((base + n_attn * int(cpp*(ctx + (j-1)*b))) * alpha)
-            #   dt  = (cyc + residue) / freq
-            # A cell that just ran growth prep may have exitA == 0 (the
-            # prep flipped want-prefill on), but its round was committed
-            # before the prep — clip forces the single committed round.
-            h0 = np.minimum(self.exitA[idx], self.growA[idx])
-            np.clip(h0, 1, _H_CAP, out=h0)
-            J = np.arange(int(h0.max()), dtype=np.int64)[:, None]
-            b = self.bA[idx]
-            ctx = self.ctxA[idx] + J * b
-            cyc = self.baseA[idx] + self.nattnA[idx] * (
-                self.cppA[idx] * ctx).astype(np.int64)
-            cyc = (cyc * self.alphaA[idx]).astype(np.int64)
-            dt = (cyc + self.residA[idx]) / self.freqA[idx]
-            burst = self.c2cA[idx]
-            fetch = self.fA[idx]
-            bw = self.bwA[idx]
-            h = agg.decode_burst(idx, h0, dt, self.powA[idx], b,
-                                 burst, burst / bw, fetch, fetch / bw,
-                                 self.arrA[idx])
-            self.ctxA[idx] += b * h
-            self.pendA[idx] += h
-            self.exitA[idx] -= h
-            self.growA[idx] -= h
+            # phase B.3: one BURST per cruising cell — each lane advances
+            # up to its own safe horizon in one sequential fold.
+            pf_lanes = self._pfA[idx]
+            dec = idx[~pf_lanes]
+            pf = idx[pf_lanes]
+            if dec.size:
+                self._decode_bursts(dec)
+            if pf.size:
+                self._prefill_bursts(pf)
 
+        self._emit_reports()
         for st in self._states:
             results[st.pos] = SweepResult(st.cell.key, st.report, st.kv)
+        self.vector_wall_s = time.perf_counter() - t0
         return results
 
     # ------------------------------------------------------------------
+    # vector bursts
+    def _decode_bursts(self, dec: np.ndarray) -> None:
+        """Decode burst for lanes ``dec``.  Round j of the burst prices
+        the scalar engine's exact arithmetic at the context it would see:
+            cyc = int((base + n_attn*int(cpp*ctx_j) + ov_c2c) * alpha)
+            dt  = (cyc + residue) / freq
+        with ``ov_c2c = (1-overlap)*c2c_cyc`` (== c2c_cyc at overlap 0 —
+        the int fold and the float add agree exactly below 2**53).  A
+        cell that just ran growth prep may have exitA == 0 (the prep
+        flipped want-prefill on), but its round was committed before the
+        prep — clip forces the single committed round."""
+        agg = self.agg
+        h0 = np.minimum(self.exitA[dec], self.growA[dec])
+        np.clip(h0, 1, _H_CAP, out=h0)
+        J = np.arange(int(h0.max()), dtype=np.int64)[:, None]
+        b = self.bA[dec]
+        ctx = self.ctxA[dec] + J * b
+        cyc = self.baseA[dec] + self.nattnA[dec] * (
+            self.cppA[dec] * ctx).astype(np.int64)
+        cyc = ((cyc + self.ovA[dec]) * self.alphaA[dec]).astype(np.int64)
+        dt = (cyc + self.residA[dec]) / self.freqA[dec]
+        burst = self.c2cA[dec]
+        fetch = self.fA[dec]
+        bw = self.bwA[dec]
+        wdt = self.wdtA[dec]
+        risk = bool(np.isfinite(self.adlA[dec]).any())
+        h = agg.decode_burst(
+            dec, h0, dt, self.powA[dec], b,
+            burst, burst / bw, fetch, fetch / bw, self.arrA[dec],
+            wake_dt=wdt if wdt.any() else None,
+            wake_cyc=self.wcycA[dec],
+            risk_eta=self.etaA[dec] if risk else None,
+            risk_bound=self.adlA[dec] if risk else None)
+        self.ctxA[dec] += b * h
+        self.pendA[dec] += h
+        self.exitA[dec] -= h
+        self.growA[dec] -= h
+
+    def _prefill_bursts(self, pf: np.ndarray) -> None:
+        """Prefill-chunk burst for lanes ``pf``: chunk j covers tokens
+        [done + j*cap, done + (j+1)*cap), priced by the group surface's
+        closed-form prefill lane (bit-identical to the model walk)."""
+        agg = self.agg
+        h0 = np.clip(self.exitA[pf], 1, _H_CAP)
+        H = int(h0.max())
+        J = np.arange(H, dtype=np.int64)[:, None]
+        cap = self.capA[pf]
+        before = self.doneA[pf] + J * cap
+        cyc = self._pf_cycles(pf, cap, before)
+        dt = (cyc + self.residA[pf]) / self.freqA[pf]
+        bb = self.pfc2cA[pf]
+        wdt = self.wdtA[pf]
+        h = agg.prefill_burst(
+            pf, h0, dt, self.powA[pf], bb, bb / self.bwA[pf],
+            self.arrA[pf],
+            wake_dt=wdt if wdt.any() else None,
+            wake_cyc=self.wcycA[pf])
+        self.doneA[pf] += cap * h
+        self.pendA[pf] += h
+        self.exitA[pf] -= h
+
+    def _pf_cycles(self, pf: np.ndarray, cap: np.ndarray,
+                   before: np.ndarray) -> np.ndarray:
+        """Closed-form prefill chunk cycles, per cost-surface group."""
+        cyc = np.empty(before.shape, dtype=np.int64)
+        buckets: Dict[int, List[int]] = {}
+        groups: Dict[int, _Group] = {}
+        for k, lane in enumerate(pf.tolist()):
+            g = self._states[lane].group
+            buckets.setdefault(id(g), []).append(k)
+            groups[id(g)] = g
+        for gid, ks in buckets.items():
+            k = np.asarray(ks)
+            c, _ = groups[gid].surface._prefill_closed_form(
+                cap[k], before[:, k])
+            cyc[:, k] = c
+        return cyc
+
+    # ------------------------------------------------------------------
     # scalar service and cruise transitions
-    def _scalar_service(self, st: _CellState) -> None:
+    def _scalar_service(self, st: _CellState,
+                        enter_dec: List[_CellState],
+                        enter_pf: List[_CellState]) -> None:
         eng, pending = st.eng, st.pending
         max_iters = eng.engine.max_iters
         while True:
@@ -355,7 +470,10 @@ class SweepEngine:
                 self._finalize(st)
                 return
             if self._enterable(st):
-                self._enter_cruise(st)
+                enter_dec.append(st)
+                return
+            if self._pf_enterable(st):
+                enter_pf.append(st)
                 return
             st.iters += 1
             if st.iters > max_iters:
@@ -364,7 +482,9 @@ class SweepEngine:
 
     def _enterable(self, st: _CellState) -> bool:
         """Would the engine's next step be a decode round the vector path
-        can price (affine batch size) and complete (no finish)?"""
+        can price (affine batch size) and complete (no finish, no
+        must-prefill)?  Stashes the budgets and the TTFT at-risk horizon
+        for the batched cruise entry."""
         eng = st.eng
         if not eng._active_idx:
             return False
@@ -372,38 +492,145 @@ class SweepEngine:
             return False
         if not st.group.surface.affine[len(eng._active_idx)]:
             return False
-        fin, pre = self._budgets(eng)
-        return fin >= 1 and pre >= 1
+        fin, pre, want = self._budgets(eng)
+        if fin < 1 or pre < 1:
+            return False
+        eta, adl = self._risk_horizon(eng, want)
+        if eng.timeline.now + eta >= adl:
+            return False        # next step is a must-prefill
+        st._fin, st._pre = fin, pre
+        st._eta, st._adl = eta, adl
+        return True
 
-    def _enter_cruise(self, st: _CellState) -> None:
-        i, eng = st.i, st.eng
-        self._snap_cost(st, len(eng._active_idx))
-        self.ctxA[i] = eng._ctx_sum
-        self.fA[i] = self._fetch_bytes(eng)
-        fin, pre = self._budgets(eng)
-        self.exitA[i] = min(fin, pre)
-        self.growA[i] = self._grow_budget(eng)
-        self.arrA[i] = (st.pending[0].arrival if st.pending else math.inf)
-        self.pendA[i] = 0
-        self.agg.sync_in(i, eng.timeline)
-        st.in_cruise = True
-        self._cruise[i] = True
+    def _pf_enterable(self, st: _CellState) -> bool:
+        """Would the engine's next steps be a streak of full-cap,
+        non-finishing prefill chunks the vector path can price?  A lone
+        partial (no residents) with paging off streams chunks with no
+        other engine effect; the finishing chunk always runs scalar."""
+        eng = st.eng
+        if eng._partial is None or eng._active_idx or eng.kv is not None:
+            return False
+        if st.pending and st.pending[0].arrival <= eng.timeline.now:
+            return False
+        if not st.group.surface.prefill_closed:
+            return False
+        done, target = eng._partial[1], eng._partial[2]
+        k = (target - done - 1) // eng.engine.chunked_prefill_tokens
+        if k < 2:
+            return False
+        st._pfK = k
+        return True
 
-    def _leave_cruise(self, st: _CellState) -> None:
-        self._sync_objects(st)
-        self.agg.sync_out(st.i, st.eng.timeline)
-        st.in_cruise = False
-        self._cruise[st.i] = False
+    def _enter_cruise_many(self, sts: List[_CellState]) -> None:
+        bs = []
+        bases = []
+        natts = []
+        c2cs = []
+        ovs = []
+        cpps = []
+        alphas = []
+        ctxs = []
+        fss = []
+        exits = []
+        grows = []
+        arrs = []
+        etas = []
+        adls = []
+        for st in sts:
+            eng = st.eng
+            surf = st.group.surface
+            b = len(eng._active_idx)
+            bs.append(b)
+            bases.append(surf.base_compute[b])
+            natts.append(surf.n_attn[b])
+            c2cs.append(surf.c2c_bytes[b])
+            ovs.append((1.0 - eng.engine.overlap) * int(surf.c2c_cyc[b]))
+            cpps.append(surf.cpp)
+            alphas.append(surf.alpha)
+            ctxs.append(eng._ctx_sum)
+            fss.append(self._fetch_bytes(eng))
+            exits.append(min(st._fin, st._pre))
+            grows.append(self._grow_budget(eng))
+            arrs.append(st.pending[0].arrival if st.pending else math.inf)
+            etas.append(st._eta)
+            adls.append(st._adl)
+            st.in_cruise = True
+        ii = np.fromiter((st.i for st in sts), np.int64, len(sts))
+        self.bA[ii] = bs
+        self.baseA[ii] = bases
+        self.nattnA[ii] = natts
+        self.c2cA[ii] = c2cs
+        self.ovA[ii] = ovs
+        self.cppA[ii] = cpps
+        self.alphaA[ii] = alphas
+        self.ctxA[ii] = ctxs
+        self.fA[ii] = fss
+        self.exitA[ii] = exits
+        self.growA[ii] = grows
+        self.arrA[ii] = arrs
+        self.etaA[ii] = etas
+        self.adlA[ii] = adls
+        self.pendA[ii] = 0
+        self._pfA[ii] = False
+        self._cruise[ii] = True
+        self.agg.sync_in_many(ii, [st.eng.timeline for st in sts])
+
+    def _enter_pf_cruise_many(self, sts: List[_CellState]) -> None:
+        caps = []
+        dones = []
+        pfc = []
+        exits = []
+        arrs = []
+        for st in sts:
+            eng = st.eng
+            cap = eng.engine.chunked_prefill_tokens
+            caps.append(cap)
+            dones.append(eng._partial[1])
+            pfc.append(cap * st.group.surface._pf_c2cb)
+            exits.append(st._pfK)
+            arrs.append(st.pending[0].arrival if st.pending else math.inf)
+            st.in_cruise = True
+        ii = np.fromiter((st.i for st in sts), np.int64, len(sts))
+        self.capA[ii] = caps
+        self.doneA[ii] = dones
+        self.pfc2cA[ii] = pfc
+        self.exitA[ii] = exits
+        self.growA[ii] = _BIG
+        self.arrA[ii] = arrs
+        self.etaA[ii] = 0.0
+        self.adlA[ii] = math.inf
+        self.pendA[ii] = 0
+        self._pfA[ii] = True
+        self._cruise[ii] = True
+        self.agg.sync_in_many(ii, [st.eng.timeline for st in sts])
+
+    def _leave_cruise_many(self, sts: List[_CellState]) -> None:
+        for st in sts:
+            self._sync_objects(st)
+            st.in_cruise = False
+        ii = np.fromiter((st.i for st in sts), np.int64, len(sts))
+        self.agg.sync_out_many(ii, [st.eng.timeline for st in sts])
+        self._cruise[ii] = False
+        self._pfA[ii] = False
 
     def _sync_objects(self, st: _CellState) -> None:
         """Replay the pending vector rounds onto the engine's object
-        state: every resident gained one token per round, the round/
-        credit counters advanced, and the (frozen) per-round DRAM fetch
-        accrued — exactly what the scalar rounds would have written."""
+        state — exactly what the scalar rounds/chunks would have
+        written.  Decode: every resident gained one token per round, the
+        round/credit counters advanced, and the (frozen) per-round DRAM
+        fetch accrued.  Prefill: the partial absorbed ``p`` full chunks
+        and each chunk reset the decode deficit."""
         p = int(self.pendA[st.i])
         if not p:
             return
         eng = st.eng
+        if self._pfA[st.i]:
+            eng._partial[1] = int(self.doneA[st.i])
+            eng._tokens_prefilled += p * int(self.capA[st.i])
+            eng.decode_credit = 0
+            st.iters += p
+            self.pendA[st.i] = 0
+            return
         for r in eng._active_reqs:
             r.generated += p
             r.context += p
@@ -422,8 +649,10 @@ class SweepEngine:
         watermark preemption, spill/COW timeline charges) exactly as the
         scalar ``_decode_round`` would before pricing the round.  The
         cell keeps its place in the current vector round; returns False
-        only when the post-prep batch size has no affine cost lane, in
-        which case the committed round ran scalar instead."""
+        when the post-prep state cannot cruise on (no affine cost lane
+        for the new batch size, or the post-prep queue head — preemption
+        can change it — is now TTFT at-risk), in which case the
+        committed round ran scalar instead."""
         i, eng = st.i, st.eng
         self._sync_objects(st)
         self.agg.sync_out(i, eng.timeline)
@@ -433,32 +662,62 @@ class SweepEngine:
             st.qmax = q         # sampled on its next step
         self.agg.sync_in(i, eng.timeline)
         b = len(eng._active_idx)
-        if not st.group.surface.affine[b]:
-            eng._decode_round()     # re-entry prep is a no-op (needed==0)
-            self.agg.sync_in(i, eng.timeline)
-            st.in_cruise = False
-            self._cruise[i] = False
-            st.iters += 1
-            return False
-        self._snap_cost(st, b)
-        self.ctxA[i] = eng._ctx_sum
-        self.fA[i] = self._fetch_bytes(eng)
-        fin, pre = self._budgets(eng)
-        self.exitA[i] = min(fin, pre)
-        self.growA[i] = self._grow_budget(eng)
-        return True
+        if st.group.surface.affine[b]:
+            fin, pre, want = self._budgets(eng)
+            eta, adl = self._risk_horizon(eng, want)
+            if eng.timeline.now + eta < adl:
+                self._snap_cost(st, b)
+                self.ctxA[i] = eng._ctx_sum
+                self.fA[i] = self._fetch_bytes(eng)
+                self.exitA[i] = min(fin, pre)
+                self.growA[i] = self._grow_budget(eng)
+                self.etaA[i] = eta
+                self.adlA[i] = adl
+                return True
+        eng._decode_round()     # re-entry prep is a no-op (needed==0)
+        self.agg.sync_in(i, eng.timeline)
+        st.in_cruise = False
+        self._cruise[i] = False
+        st.iters += 1
+        return False
 
     def _finalize(self, st: _CellState) -> None:
         eng = st.eng
-        rep = eng._report(st.requests)
+        fields, lat, ttft = eng._report_inputs(st.requests)
         # queue-depth maxima reached during cruise (growth preemptions)
         # were tracked out-of-band; everything else in the report comes
-        # from the synced timeline aggregates
-        if st.qmax > rep.max_queue_depth:
-            rep.max_queue_depth = st.qmax
-        st.report = rep
+        # from the synced timeline aggregates.  The percentile columns
+        # are deferred: _emit_reports batches them across cells.
+        if st.qmax > fields["max_queue_depth"]:
+            fields["max_queue_depth"] = st.qmax
+        st._fields = fields
+        st._lat = lat
+        st._ttft = ttft
         st.kv = eng.kv_stats
         st.done = True
+
+    def _emit_reports(self) -> None:
+        """Build every cell's `ServingReport`, batching the four
+        ``np.percentile`` calls across cells with equal finished counts
+        (row k of a batched axis-1 percentile is bit-identical to the
+        per-cell call on that row)."""
+        by_len: Dict[int, List[_CellState]] = {}
+        for st in self._states:
+            by_len.setdefault(st._lat.size, []).append(st)
+        for sts in by_len.values():
+            lat = np.stack([st._lat for st in sts])
+            ttft = np.stack([st._ttft for st in sts])
+            p50l = np.percentile(lat, 50, axis=1)
+            p99l = np.percentile(lat, 99, axis=1)
+            p50t = np.percentile(ttft, 50, axis=1)
+            p99t = np.percentile(ttft, 99, axis=1)
+            for k, st in enumerate(sts):
+                st.report = ServingReport(
+                    p50_latency_s=float(p50l[k]),
+                    p99_latency_s=float(p99l[k]),
+                    p50_ttft_s=float(p50t[k]),
+                    p99_ttft_s=float(p99t[k]),
+                    **st._fields)
 
     # ------------------------------------------------------------------
     # snapshots and countdowns
@@ -466,16 +725,19 @@ class SweepEngine:
         surf = st.group.surface
         i = st.i
         self.bA[i] = b
-        self.baseA[i] = surf.base[b]
+        self.baseA[i] = surf.base_compute[b]
         self.nattnA[i] = surf.n_attn[b]
         self.c2cA[i] = surf.c2c_bytes[b]
+        self.ovA[i] = (1.0 - st.eng.engine.overlap) * int(surf.c2c_cyc[b])
         self.cppA[i] = surf.cpp
         self.alphaA[i] = surf.alpha
 
     @staticmethod
-    def _budgets(eng: ContinuousBatchingEngine) -> Tuple[int, int]:
-        """(finish, prefill) budgets: how many decode rounds INCLUDING
-        the next one can run before that scalar event fires."""
+    def _budgets(eng: ContinuousBatchingEngine) -> Tuple[int, int, bool]:
+        """(finish, prefill, want) budgets: how many decode rounds
+        INCLUDING the next one can run before that scalar event fires,
+        plus whether the engine currently wants a prefill at all (the
+        TTFT at-risk check is only armed when it does)."""
         if eng.kv is None:
             heap = eng._finish_heap
             fin = (heap[0][0] - eng._round_no - 1) if heap else _BIG
@@ -490,7 +752,23 @@ class SweepEngine:
             want = eng.kv is None or eng._kv_can_admit()
         pre = (eng.engine.decode_quantum - eng.decode_credit
                if want else _BIG)
-        return fin, pre
+        return fin, pre, want
+
+    @staticmethod
+    def _risk_horizon(eng: ContinuousBatchingEngine,
+                      want: bool) -> Tuple[float, float]:
+        """(eta, bound) for the frozen TTFT at-risk check: the scalar
+        engine flips to a must-prefill once ``clock + eta >= bound``.
+        ``(0.0, inf)`` when the check cannot fire in the frozen cruise
+        state (no admissible head, in-flight partial, or no deadline) —
+        bit-neutral in the burst fold."""
+        if not want or eng._partial is not None or not eng._any_deadline:
+            return 0.0, math.inf
+        head = eng.queue[0]
+        if head.deadline_ttft is None:
+            return 0.0, math.inf
+        return (eng._prefill_eta_s(),
+                head.arrival + head.deadline_ttft)
 
     @staticmethod
     def _grow_budget(eng: ContinuousBatchingEngine) -> int:
@@ -512,22 +790,33 @@ class SweepEngine:
         kv = eng.kv
         if kv is None:
             return 0
-        return sum(kv.dram_tokens(eng.slots[j].request_id)
-                   for j in eng._active_idx) * kv.cfg.bytes_per_token
+        return kv.dram_tokens_total(
+            eng.slots[j].request_id for j in eng._active_idx) \
+            * kv.cfg.bytes_per_token
 
     def _check_surfaces(self) -> None:
         """Mid-run calibration guard, mirroring the scalar engine's
         per-round ``aff[5] != cm._cal_ver`` check: a mutated model
-        rebuilds the group surface and re-snapshots every cruising
-        cell's cost lanes before the next vector round."""
+        rebuilds the group surface (decode AND prefill lanes) and
+        re-snapshots every cruising cell's cost lanes — including the
+        frozen TTFT horizon, which prices a prefill — before the next
+        vector round."""
         refreshed = False
         for group in self._groups.values():
             if group.surface is not None and group.surface.refresh():
                 refreshed = True
-        if refreshed:
-            for st in self._states:
-                if st.in_cruise:
-                    self._snap_cost(st, int(self.bA[st.i]))
+        if not refreshed:
+            return
+        for st in self._states:
+            if not st.in_cruise:
+                continue
+            if self._pfA[st.i]:
+                if not st.group.surface.prefill_closed:
+                    self._leave_cruise_many([st])   # back to scalar chunks
+                continue
+            self._snap_cost(st, int(self.bA[st.i]))
+            if np.isfinite(self.adlA[st.i]):
+                self.etaA[st.i] = st.eng._prefill_eta_s()
 
 
 def sweep_serve(cells: Sequence[SweepCell]) -> List[SweepResult]:

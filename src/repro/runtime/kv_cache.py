@@ -231,6 +231,18 @@ class BlockAllocator:
         t = self.tables[request_id]
         return min(t.n_dram * self.cfg.block_tokens, t.tokens)
 
+    def dram_tokens_total(self, request_ids) -> int:
+        """Sum of :meth:`dram_tokens` over ``request_ids`` in one pass —
+        the per-round remote-read volume of a whole resident set."""
+        bt = self.cfg.block_tokens
+        tables = self.tables
+        total = 0
+        for rid in request_ids:
+            t = tables[rid]
+            n = t.n_dram * bt
+            total += n if n < t.tokens else t.tokens
+        return total
+
     # -- allocation ----------------------------------------------------
     def ensure(self, request_id: int, n_tokens: int) -> int:
         """Grow ``request_id``'s table to cover ``n_tokens`` context
@@ -256,6 +268,39 @@ class BlockAllocator:
         if used > self.peak_used:
             self.peak_used = used
         return grown
+
+    def grow_round(self, items) -> bool:
+        """Batched :meth:`ensure` for one decode round: grow every
+        ``(request_id, n_tokens)`` table in ``items`` in a single pass.
+        Only takes the all-scratchpad fast path — when the round's total
+        growth fits the scratch free list, the pops land in exactly the
+        order sequential :meth:`ensure` calls would produce (same block
+        ids to the same tables, same ``peak_used``).  Returns ``False``
+        with NO state touched when spill/DRAM handling would be needed;
+        the caller then falls back to per-request :meth:`ensure` with its
+        preemption/retry loop."""
+        cfg = self.cfg
+        grow = []
+        total = 0
+        for request_id, n_tokens in items:
+            t = self.tables[request_id]
+            k = cfg.blocks_for(n_tokens) - len(t.blocks)
+            if k > 0 or n_tokens > t.tokens:
+                grow.append((t, n_tokens, k))
+                total += k
+        if total > len(self._free_scratch):
+            return False
+        pop = self._free_scratch.pop
+        for t, n_tokens, k in grow:
+            for _ in range(k):
+                self._append_new(t, pop())
+            if n_tokens > t.tokens:
+                t.tokens = n_tokens
+        if total:
+            used = self.used_blocks()
+            if used > self.peak_used:
+                self.peak_used = used
+        return True
 
     def free(self, request_id: int) -> int:
         """Release ``request_id``'s reference on every block of its

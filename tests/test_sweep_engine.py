@@ -149,24 +149,126 @@ def test_sweep_shared_trace_object_not_mutated(cfg):
 
 
 # ---------------------------------------------------------------------------
-# scalar fallbacks: flagged, still correct
+# lifted lanes (ISSUE 8): overlap / dynamic CCPG / TTFT deadlines ride
+# the vector path — fallback-free AND bit-identical
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("engine_kw, trace_kw, reason_frag", [
-    (dict(overlap=0.5), {}, "overlap"),
-    (dict(ccpg=True, dynamic_ccpg=True), {}, "dynamic_ccpg"),
-    (dict(), dict(deadline_ttft=0.25), "ttft_deadline"),
+@pytest.mark.parametrize("engine_kw, trace_kw", [
+    (dict(overlap=0.5), {}),
+    (dict(overlap=1.0), {}),
+    (dict(ccpg=True, dynamic_ccpg=True), {}),
+    (dict(), dict(deadline_ttft=0.25)),
+    (dict(), dict(deadline_ttft=0.05)),
+    (dict(overlap=0.25, ccpg=True, dynamic_ccpg=True),
+     dict(deadline_ttft=0.1)),
 ])
-def test_sweep_fallback_cells(cfg, engine_kw, trace_kw, reason_frag):
+def test_sweep_lifted_lanes_vectorized(cfg, engine_kw, trace_kw):
+    """The PR-7 scalar-fallback feature axes now run vectorized: the
+    result is unflagged (``fallback is None``) and byte-identical."""
     trace = poisson_trace(8, 30.0, seed=2, max_new=24, **trace_kw)
     cell = SweepCell("fb", cfg, trace, engine=EngineConfig(**engine_kw))
     vanilla = SweepCell("ok", cfg, poisson_trace(8, 30.0, seed=2,
                                                  max_new=24))
-    fb, ok = sweep_serve([cell, vanilla])
-    assert fb.fallback is not None and reason_frag in fb.fallback
+    lifted, ok = sweep_serve([cell, vanilla])
+    assert lifted.fallback is None
     assert ok.fallback is None
-    _assert_cell_identical(fb, cell)
+    _assert_cell_identical(lifted, cell)
     _assert_cell_identical(ok, vanilla)
+
+
+@settings(max_examples=8, deadline=None)
+@given(overlap=st.sampled_from([0.0, 0.25, 1.0]),
+       dyn=st.booleans(),
+       ttft=st.sampled_from([None, 0.05, 0.3]),
+       chunk=st.sampled_from([0, 128]),
+       mb=st.integers(min_value=1, max_value=6),
+       seed=st.integers(min_value=0, max_value=4))
+def test_sweep_property_lifted_lane_cells(cfg, overlap, dyn, ttft, chunk,
+                                          mb, seed):
+    """Randomized differential sweeps over the previously-fallback
+    feature axes (overlap, dynamic CCPG, TTFT deadlines, chunking) stay
+    bit-identical to per-cell scalar engines on the vector path."""
+    trace_kw = {} if ttft is None else dict(deadline_ttft=ttft)
+    trace = poisson_trace(10, 60.0, seed=seed, prompt_len=192, max_new=40,
+                          **trace_kw)
+    cell = SweepCell(
+        "lift", cfg, trace,
+        engine=EngineConfig(max_batch=mb, overlap=overlap,
+                            ccpg=dyn, dynamic_ccpg=dyn,
+                            chunked_prefill_tokens=chunk))
+    (res,) = sweep_serve([cell])
+    assert res.fallback is None
+    _assert_cell_identical(res, cell)
+
+
+@settings(max_examples=6, deadline=None)
+@given(dyn=st.booleans(),
+       overlap=st.sampled_from([0.0, 0.5]),
+       ttft=st.sampled_from([None, 0.2]),
+       seed=st.integers(min_value=0, max_value=3))
+def test_sweep_property_paged_lifted_cells(cfg, dyn, overlap, ttft, seed):
+    """Paged KV combined with the lifted lanes: growth-round prep mid
+    cruise (which can preempt and change the queue head under a TTFT
+    deadline) must stay bit-identical."""
+    kvc = KVCacheConfig(n_blocks=12, block_tokens=64, dram_blocks=8,
+                        bytes_per_token=kv_bytes_per_token(cfg))
+    sim = PicnicSimulator()
+    sim.ccpg_model.include_dram_hub = True
+    trace_kw = {} if ttft is None else dict(deadline_ttft=ttft)
+    trace = poisson_trace(10, 50.0, seed=seed, prompt_len=256, max_new=64,
+                          **trace_kw)
+    cell = SweepCell("pl", cfg, trace, sim=sim,
+                     engine=EngineConfig(max_batch=4, ccpg=True,
+                                         dynamic_ccpg=dyn, overlap=overlap,
+                                         kv_cache=kvc))
+    (res,) = sweep_serve([cell])
+    assert res.fallback is None
+    assert res.kv_stats is not None
+    _assert_cell_identical(res, cell)
+
+
+def test_sweep_prefill_cruise_identical(cfg):
+    """Prefill-dominated cells (long prompts, tiny generation, spaced
+    arrivals) exercise the prefill-chunk cruise: byte-identical reports
+    (the mid-chunk PREFILL progress markers folded into a cruise are
+    sample-only and never enter the report)."""
+    trace = poisson_trace(6, 4.0, seed=9, prompt_len=8192, max_new=2)
+    for kw in (dict(), dict(ccpg=True, dynamic_ccpg=True),
+               dict(overlap=0.5)):
+        cell = SweepCell("pf", cfg, trace,
+                         engine=EngineConfig(chunked_prefill_tokens=128,
+                                             **kw))
+        (res,) = sweep_serve([cell])
+        assert res.fallback is None, kw
+        _assert_cell_identical(res, cell)
+
+
+def test_sweep_engine_single_shot(cfg):
+    cell = SweepCell("one", cfg, poisson_trace(4, 30.0, seed=0, max_new=8))
+    eng = SweepEngine([cell])
+    eng.run()
+    with pytest.raises(RuntimeError, match="single-shot"):
+        eng.run()
+
+
+def test_sweep_wall_split_and_fallback_counts(cfg):
+    """The run() bookkeeping the benchmarks report: wall clock split
+    between the vector and scalar-fallback paths, and per-reason
+    fallback cell counts."""
+    sim = PicnicSimulator(cycle_model=CycleModel(memoize=False))
+    cells = [
+        SweepCell("v", cfg, poisson_trace(4, 30.0, seed=0, max_new=8)),
+        SweepCell("f1", cfg, poisson_trace(4, 30.0, seed=1, max_new=8),
+                  sim=sim),
+        SweepCell("f2", cfg, poisson_trace(4, 30.0, seed=2, max_new=8),
+                  sim=sim),
+    ]
+    eng = SweepEngine(cells)
+    eng.run()
+    assert eng.vector_wall_s > 0.0 and eng.fallback_wall_s > 0.0
+    assert sum(eng.fallback_counts.values()) == 2
+    (reason,) = eng.fallback_counts
+    assert "non-affine" in reason and eng.fallback_counts[reason] == 2
 
 
 def test_sweep_fallback_non_affine_surface(cfg):
@@ -224,6 +326,34 @@ def test_cost_surface_refresh_on_calibration_bump(cfg):
     assert surf.refresh()            # rebuild happened
     assert surf.alpha == old_alpha * 2.0
     assert surf.valid() and not surf.refresh()
+
+
+def test_cost_surface_prefill_lane_refresh(cfg):
+    """The closed-form prefill lane invalidates with the decode lane on
+    calibration mutation: after refresh() the surface prices chunks
+    under the new constants, bit-equal to the model's own (memoized)
+    chunk walk — and the closed form stays memo-free (no prefill LRU
+    traffic beyond the build probes)."""
+    m = CycleModel()
+    alloc = allocate_chiplets(cfg, PicnicSimulator().tile)
+    surf = DecodeCostSurface(m, cfg, alloc, max_batch=2)
+    assert surf.prefill_closed
+    probes = m.memo_stats()["prefill_misses"]
+    chunk = np.array([128, 128, 64], dtype=np.int64)
+    before = np.array([0, 4096, 1023], dtype=np.int64)
+    cyc0, c2cb0 = surf.prefill_chunk_cycles(chunk, before)
+    assert m.memo_stats()["prefill_misses"] == probes   # closed form
+    m.alpha = m.alpha * 2.0
+    assert not surf.valid()
+    assert surf.refresh()
+    assert surf.prefill_closed
+    cyc1, c2cb1 = surf.prefill_chunk_cycles(chunk, before)
+    assert np.array_equal(c2cb1, c2cb0)                 # bytes: no alpha
+    assert not np.array_equal(cyc1, cyc0)               # physics moved
+    for k in range(chunk.size):
+        want_c, want_b = m.prefill_chunk_cycles(cfg, alloc, int(chunk[k]),
+                                                int(before[k]))
+        assert int(cyc1[k]) == want_c and int(c2cb1[k]) == want_b
 
 
 def test_cost_surface_matches_affine_export(cfg):
@@ -426,6 +556,133 @@ def test_decode_burst_bit_identical_to_rounds(seed, with_fetch, truncate):
     h_ref = _reference_rounds(ref, idx, h, dt, power, batch, bb, bd, fb,
                               fd, arr)
     assert np.array_equal(h_fast, h_ref)
+    assert (h_fast >= 1).all()
+    for name in vars(a):
+        va, vr = getattr(a, name), getattr(ref, name)
+        if isinstance(va, np.ndarray):
+            assert va.tobytes() == vr.tobytes(), name
+
+
+def _apply_wake(agg, lane, wdt, wcyc, power):
+    """The scalar engine's ClusterWake charge ahead of a round/chunk."""
+    agg.now[lane] += wdt
+    agg.busy_s[lane] += wdt
+    agg.energy_J[lane] += wdt * power
+    agg.span_wake[lane] += wdt
+    agg.cyc_wake[lane] += wcyc
+    agg.n_wake[lane] += 1
+    agg.n_sample[lane] += 1
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       with_wake=st.booleans(),
+       with_risk=st.booleans())
+def test_decode_burst_wake_and_risk_bit_identical(seed, with_wake,
+                                                  with_risk):
+    """The extended burst fold (dynamic-CCPG wake rows interleaved, TTFT
+    at-risk truncation) == wake + decode_round applied sequentially."""
+    rng = np.random.default_rng(seed)
+    n, H = 5, 7
+    idx = np.sort(rng.choice(8, size=n, replace=False)).astype(np.int64)
+    h = rng.integers(1, H + 1, n)
+    dt = rng.uniform(1e-5, 1e-3, (H, n))
+    power = rng.uniform(0.5, 8.0, n)
+    batch = rng.integers(1, 9, n)
+    bb = rng.integers(1, 4096, n)
+    bd = bb / 64e9
+    fb = rng.integers(0, 2048, n) * rng.integers(0, 2, n)
+    fd = np.where(fb > 0, fb / 64e9, 0.0)
+    wdt = (rng.uniform(1e-6, 1e-4, n) * rng.integers(0, 2, n)
+           if with_wake else np.zeros(n))
+    if with_wake and not wdt.any():
+        wdt[0] = 3e-5
+    wcyc = rng.integers(1, 999, n)
+    a = _random_agg(np.random.default_rng(seed + 1), 8)
+    arr = a.now[idx] + rng.uniform(0.0, 3e-3, n)
+    arr = np.maximum(arr, np.nextafter(a.now[idx], np.inf))
+    if with_risk:
+        eta = rng.uniform(0.0, 1e-3, n)
+        bound = a.now[idx] + eta + rng.uniform(-1e-3, 3e-3, n)
+        bound = np.maximum(bound,
+                           np.nextafter(a.now[idx] + eta, np.inf))
+    else:
+        eta, bound = None, None
+    ref = _clone_agg(a)
+    h_fast = a.decode_burst(idx, h, dt.copy(), power, batch, bb, bd, fb,
+                            fd, arr,
+                            wake_dt=wdt if wdt.any() else None,
+                            wake_cyc=wcyc, risk_eta=eta, risk_bound=bound)
+    applied = np.zeros(n, dtype=np.int64)
+    for j in range(int(h.max())):
+        live = (applied == j) & (j < h) & (ref.now[idx] < arr)
+        if eta is not None:
+            live &= (ref.now[idx] + eta) < bound
+        if not live.any():
+            break
+        for k in np.nonzero(live & (wdt > 0))[0]:
+            _apply_wake(ref, int(idx[k]), wdt[k], wcyc[k], power[k])
+        sel = idx[live]
+        ref.decode_round(sel, dt[j][live], power[live], batch[live],
+                         bb[live], bd[live], fb[live], fd[live])
+        applied[live] += 1
+    assert np.array_equal(h_fast, applied)
+    assert (h_fast >= 1).all()
+    for name in vars(a):
+        va, vr = getattr(a, name), getattr(ref, name)
+        if isinstance(va, np.ndarray):
+            assert va.tobytes() == vr.tobytes(), name
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       with_wake=st.booleans(),
+       truncate=st.booleans())
+def test_prefill_burst_bit_identical_to_chunks(seed, with_wake, truncate):
+    """prefill_burst == h sequential scalar-order chunk applications
+    ([wake] -> compute(prefill, batch 1) -> non-advancing c2c)."""
+    rng = np.random.default_rng(seed)
+    n, H = 5, 7
+    idx = np.sort(rng.choice(8, size=n, replace=False)).astype(np.int64)
+    h = rng.integers(1, H + 1, n)
+    dt = rng.uniform(1e-5, 1e-3, (H, n))
+    power = rng.uniform(0.5, 8.0, n)
+    bb = rng.integers(1, 65536, n)
+    bd = bb / 64e9
+    wdt = (rng.uniform(1e-6, 1e-4, n) * rng.integers(0, 2, n)
+           if with_wake else np.zeros(n))
+    if with_wake and not wdt.any():
+        wdt[0] = 3e-5
+    wcyc = rng.integers(1, 999, n)
+    a = _random_agg(np.random.default_rng(seed + 1), 8)
+    arr = (a.now[idx] + rng.uniform(0.0, 3e-3, n) if truncate
+           else np.full(n, np.inf))
+    arr = np.maximum(arr, np.nextafter(a.now[idx], np.inf))
+    ref = _clone_agg(a)
+    h_fast = a.prefill_burst(idx, h, dt.copy(), power, bb, bd, arr,
+                             wake_dt=wdt if wdt.any() else None,
+                             wake_cyc=wcyc)
+    applied = np.zeros(n, dtype=np.int64)
+    for k, lane in enumerate(idx.tolist()):
+        for j in range(int(h[k])):
+            if not ref.now[lane] < arr[k]:
+                break
+            if wdt[k] > 0:
+                _apply_wake(ref, lane, wdt[k], wcyc[k], power[k])
+            d = dt[j, k]
+            ref.now[lane] += d
+            ref.busy_s[lane] += d
+            ref.energy_J[lane] += d * power[k]
+            ref.span_compute[lane] += d
+            ref.span_prefill[lane] += d
+            ref.occupancy_s[lane] += d          # chunk batch is 1
+            ref.n_compute[lane] += 1
+            ref.n_sample[lane] += 1
+            ref.span_c2c[lane] += bd[k]         # non-advancing transfer
+            ref.c2c_bytes[lane] += bb[k]
+            ref.n_c2c[lane] += 1
+            applied[k] += 1
+    assert np.array_equal(h_fast, applied)
     assert (h_fast >= 1).all()
     for name in vars(a):
         va, vr = getattr(a, name), getattr(ref, name)
