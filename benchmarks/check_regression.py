@@ -92,6 +92,15 @@ TOLERANCE_OVERRIDES = {
     # engine-path cases the 0.50 doc tolerance was sized for
     ("BENCH_speed.json", "speedup.sweep_prefill"): 0.40,
     ("BENCH_speed.json", "speedup.sweep_lifted"): 0.40,
+    # fleet doc (ISSUE 9): carries host_ops_per_s, so the doc-level
+    # WALL_BENCH_TOL widening applies — pin the deterministic simulated
+    # metrics back to tight and leave only the harness wall loose.
+    # Documented in EXPERIMENTS.md §Disaggregation-sweep.
+    ("BENCH_fleet.json", "wall_ms"): 0.50,
+    ("BENCH_fleet.json", "tokens_per_s"): 0.10,
+    ("BENCH_fleet.json", "tokens_per_J"): 0.10,
+    ("BENCH_fleet.json", "fleet_best_tokens_per_J"): 0.10,
+    ("BENCH_fleet.json", "disagg_vs_combined_eff_speedup"): 0.10,
 }
 
 

@@ -70,14 +70,14 @@ def _best_wall(fn, repeats: int):
 def _engines(cfg, engine_kw):
     """(fast, reference) engine pair over identical configs."""
     from repro.core import CycleModel, PicnicSimulator
-    from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                             EngineConfig)
+    from repro.launch import ServingConfig
+    from repro.launch.serving_engine import ContinuousBatchingEngine
     fast = ContinuousBatchingEngine(
         cfg, sim=PicnicSimulator(),
-        engine=EngineConfig(**engine_kw))
+        engine=ServingConfig(**engine_kw))
     ref = ContinuousBatchingEngine(
         cfg, sim=PicnicSimulator(cycle_model=CycleModel(memoize=False)),
-        engine=EngineConfig(columnar_timeline=False, **engine_kw))
+        engine=ServingConfig(columnar_timeline=False, **engine_kw))
     return fast, ref
 
 
@@ -110,10 +110,10 @@ def _engine_case(name, cfg, trace, engine_kw, repeats):
 
 def bench_serving_path(smoke: bool, repeats: int):
     from repro.configs import get_config
-    from repro.launch.serving_engine import poisson_trace
+    from repro.launch import Trace
     cfg = get_config("llama3.2-1b")
     n = 24 if smoke else 64
-    trace = poisson_trace(n, rate_rps=40, seed=0, prompt_len=512,
+    trace = Trace.poisson(n, rate_rps=40, seed=0, prompt_len=512,
                           max_new=64)
     return _engine_case("serving", cfg, trace, dict(max_batch=8, ccpg=True),
                         repeats)
@@ -121,12 +121,12 @@ def bench_serving_path(smoke: bool, repeats: int):
 
 def bench_paged_path(smoke: bool, repeats: int):
     from repro.configs import get_config
-    from repro.launch.serving_engine import poisson_trace
+    from repro.launch import Trace
     from repro.runtime.kv_cache import kv_cache_from_model
     cfg = get_config("llama3.2-1b")
     kvc = kv_cache_from_model(cfg, kv_frac=0.5, dram_frac=1.0)
     n = 8 if smoke else 16
-    trace = poisson_trace(n, rate_rps=60, seed=0, prompt_len=2048,
+    trace = Trace.poisson(n, rate_rps=60, seed=0, prompt_len=2048,
                           max_new=256)
     return _engine_case("paged", cfg, trace,
                         dict(max_batch=8, ccpg=True, kv_cache=kvc,
@@ -143,8 +143,8 @@ def bench_sweep_path(smoke: bool, repeats: int):
     import dataclasses
     from repro.configs import get_config
     from repro.core import PicnicSimulator
-    from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                             EngineConfig, poisson_trace)
+    from repro.launch import ServingConfig, Trace
+    from repro.launch.serving_engine import ContinuousBatchingEngine
     from repro.launch.sweep_engine import SweepCell, sweep_serve
     from repro.runtime.kv_cache import kv_cache_from_model
     cfg = get_config("llama3.2-1b")
@@ -156,9 +156,9 @@ def bench_sweep_path(smoke: bool, repeats: int):
     ctxs = (256,) if smoke else (256, 512)
     mns = (1024,) if smoke else (512, 1024)
     cells = [SweepCell(f"c{ctx}r{rate}b{mb}n{mn}", cfg,
-                       poisson_trace(6, rate_rps=rate, seed=0,
+                       Trace.poisson(6, rate_rps=rate, seed=0,
                                      prompt_len=ctx, max_new=mn),
-                       EngineConfig(max_batch=mb, ccpg=True, kv_cache=kvc,
+                       ServingConfig(max_batch=mb, ccpg=True, kv_cache=kvc,
                                     chunked_prefill_tokens=512), sim=sim)
              for ctx in ctxs for rate in (20, 60) for mb in (4, 8)
              for mn in mns]
@@ -245,15 +245,15 @@ def bench_sweep_prefill_path(smoke: bool, repeats: int):
     closed-form array pass, so the sustainable floor sits an order of
     magnitude above the generic 3x gate."""
     from repro.configs import get_config
-    from repro.launch.serving_engine import EngineConfig, poisson_trace
+    from repro.launch import ServingConfig, Trace
     from repro.launch.sweep_engine import SweepCell
     cfg = get_config("llama3.2-1b")
     ctx = 16384 if smoke else 32768
     rates = (2, 16) if smoke else (1, 4, 16, 64)
     cells = [SweepCell(f"pf{ctx}_r{rate}_n{mn}_s{sd}", cfg,
-                       poisson_trace(2, rate_rps=rate, seed=sd,
+                       Trace.poisson(2, rate_rps=rate, seed=sd,
                                      prompt_len=ctx, max_new=mn),
-                       EngineConfig(max_batch=8, ccpg=True,
+                       ServingConfig(max_batch=8, ccpg=True,
                                     chunked_prefill_tokens=64))
              for rate in rates for mn in (1, 2) for sd in (0, 1)]
     # ~43x full / ~19x smoke on the baseline host
@@ -268,16 +268,16 @@ def bench_sweep_lifted_path(smoke: bool, repeats: int):
     at-risk burst horizon, still bit-identical and well above the
     generic floor."""
     from repro.configs import get_config
-    from repro.launch.serving_engine import EngineConfig, poisson_trace
+    from repro.launch import ServingConfig, Trace
     from repro.launch.sweep_engine import SweepCell
     cfg = get_config("llama3.2-1b")
     mn = 2048 if smoke else 4096
     cells = [SweepCell(f"lift_o{ov}_d{int(dyn)}_t{tt}", cfg,
-                       poisson_trace(6, rate_rps=40, seed=0,
+                       Trace.poisson(6, rate_rps=40, seed=0,
                                      prompt_len=256, max_new=mn,
                                      **({} if tt is None
                                         else dict(deadline_ttft=tt))),
-                       EngineConfig(max_batch=8, overlap=ov, ccpg=True,
+                       ServingConfig(max_batch=8, overlap=ov, ccpg=True,
                                     dynamic_ccpg=dyn))
              for ov in (0.25, 0.75) for dyn in (False, True)
              for tt in (None, 0.25)]

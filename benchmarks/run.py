@@ -13,6 +13,7 @@ stays machine-readable across PRs (uploaded by CI).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import itertools
 import json
@@ -255,17 +256,17 @@ def bench_serving():
     differential suite)."""
     from repro.configs import get_config
     from repro.core import PicnicSimulator
-    from repro.launch.serving_engine import EngineConfig, poisson_trace
+    from repro.launch import ServingConfig, Trace
     from repro.launch.sweep_engine import SweepCell, sweep_serve
     t0 = time.time()
     cfg = get_config("llama3.2-1b")
     sim = PicnicSimulator()
     grid = cell_grid({"max_batch": (1, 8), "ccpg": (False, True)})
     cells = [SweepCell(c.key(), cfg,
-                       poisson_trace(64, rate_rps=40, seed=0,
+                       Trace.poisson(64, rate_rps=40, seed=0,
                                      prompt_len=512, max_new=64),
-                       EngineConfig(max_batch=c["max_batch"],
-                                    ccpg=c["ccpg"]), sim=sim)
+                       ServingConfig(max_batch=c["max_batch"],
+                                     ccpg=c["ccpg"]), sim=sim)
              for c in grid]
     results = sweep_serve(cells)
     rows = [{"max_batch": c["max_batch"], **r.report.row()}
@@ -300,7 +301,7 @@ def bench_paged():
     recovers the batch occupancy that long shared system prompts cost."""
     from repro.configs import get_config
     from repro.core import PicnicSimulator
-    from repro.launch.serving_engine import EngineConfig, poisson_trace
+    from repro.launch import ServingConfig, Trace
     from repro.launch.sweep_engine import SweepCell, sweep_serve
     from repro.runtime.kv_cache import kv_cache_from_model
     t0 = time.time()
@@ -328,17 +329,17 @@ def bench_paged():
             # co-residency — the regime where capacity binds (short
             # decodes are prefill-serial and never stress the cache)
             kv = kvc if c["paged"] else None
-            trace = poisson_trace(16, rate_rps=c["rate_rps"], seed=0,
+            trace = Trace.poisson(16, rate_rps=c["rate_rps"], seed=0,
                                   prompt_len=c["ctx"], max_new=256)
         else:
             kv = dataclasses.replace(kvc, prefix_sharing=share)
-            trace = poisson_trace(24, rate_rps=60, seed=0, prompt_len=8192,
+            trace = Trace.poisson(24, rate_rps=60, seed=0, prompt_len=8192,
                                   max_new=512, prefix_len=8064,
                                   prefix_frac=0.9)
         cells.append(SweepCell(
             c.key(), cfg, trace,
-            EngineConfig(max_batch=8, ccpg=True, kv_cache=kv,
-                         chunked_prefill_tokens=512 if kv else 0),
+            ServingConfig(max_batch=8, ccpg=True, kv_cache=kv,
+                          chunked_prefill_tokens=512 if kv else 0),
             sim=sim_hub if c["paged"] else sim_plain))
     results = sweep_serve(cells)
 
@@ -440,7 +441,7 @@ def bench_sweep():
     summary line carries the per-reason fallback counts."""
     from repro.configs import get_config
     from repro.core import PicnicSimulator
-    from repro.launch.serving_engine import EngineConfig, poisson_trace
+    from repro.launch import ServingConfig, Trace
     from repro.launch.sweep_engine import SweepCell
     from repro.runtime.kv_cache import kv_cache_from_model
     try:
@@ -462,28 +463,28 @@ def bench_sweep():
                      abbrev={"rate_rps": "r", "max_batch": "b",
                              "max_new": "n"})
     dec_cells = [SweepCell(c.key(), cfg,
-                           poisson_trace(6, rate_rps=c["rate_rps"], seed=0,
+                           Trace.poisson(6, rate_rps=c["rate_rps"], seed=0,
                                          prompt_len=c["ctx"],
                                          max_new=c["max_new"]),
-                           EngineConfig(max_batch=c["max_batch"], ccpg=True,
-                                        kv_cache=kvc,
-                                        chunked_prefill_tokens=512),
+                           ServingConfig(max_batch=c["max_batch"], ccpg=True,
+                                         kv_cache=kvc,
+                                         chunked_prefill_tokens=512),
                            sim=sim)
                  for c in grid]
     pf_cells = [SweepCell(f"pf_r{rate}_n{mn}_s{sd}", cfg,
-                          poisson_trace(2, rate_rps=rate, seed=sd,
+                          Trace.poisson(2, rate_rps=rate, seed=sd,
                                         prompt_len=32768, max_new=mn),
-                          EngineConfig(max_batch=8, ccpg=True,
-                                       chunked_prefill_tokens=64))
+                          ServingConfig(max_batch=8, ccpg=True,
+                                        chunked_prefill_tokens=64))
                 for rate in (1, 2, 4, 8, 16, 32, 64, 128)
                 for mn in (1, 2) for sd in (0, 1, 2, 3)]
     lift_cells = [SweepCell(f"lift_o{ov}_d{int(dyn)}_t{tt}_r{rate}", cfg,
-                            poisson_trace(6, rate_rps=rate, seed=0,
+                            Trace.poisson(6, rate_rps=rate, seed=0,
                                           prompt_len=256, max_new=4096,
                                           **({} if tt is None
                                              else dict(deadline_ttft=tt))),
-                            EngineConfig(max_batch=8, overlap=ov,
-                                         ccpg=True, dynamic_ccpg=dyn))
+                            ServingConfig(max_batch=8, overlap=ov,
+                                          ccpg=True, dynamic_ccpg=dyn))
                   for ov in (0.25, 0.75) for dyn in (False, True)
                   for tt in (None, 0.25) for rate in (30, 60)]
 
@@ -531,6 +532,92 @@ def bench_sweep():
     _emit("sweep", t0,
           f"speedup decode={speedup:.1f}x prefill={pf_speedup:.1f}x "
           f"lifted={lf_speedup:.1f}x fallback_cells={n_fb} ({fb_counts})")
+    return rows
+
+
+def bench_fleet():
+    """Disaggregated prefill/decode fleet (ISSUE 9 tentpole): node count x
+    prefill:decode split x arrival rate over launch/fleet_engine.py.  Each cell
+    serves the same Poisson trace (Llama-1B 512/64, CCPG on) through a
+    FleetEngine; disaggregated splits hand finished-prefill KV to a
+    decode node as an inter-node C2CTransfer priced by
+    core/interconnect.fleet_handoff_bytes.  The combined cells (handoff
+    off, same node count) are the like-for-like baseline, so the
+    headline is the tok/J-optimal disaggregation point and its
+    efficiency ratio vs combined serving — honest even when < 1.  An
+    autoscale pair at low arrival rate surfaces CCPG node wake counts
+    (whole nodes sleep, scale-up pays real ClusterWake latency)."""
+    from repro.configs import get_config
+    from repro.core import PicnicSimulator
+    from repro.launch import FleetConfig, ServingConfig, Trace
+    from repro.launch.fleet_engine import FleetEngine
+    try:
+        from benchmarks.microbench import _host_calibration
+    except ImportError:                     # `python benchmarks/run.py`
+        from microbench import _host_calibration
+    t0 = time.time()
+    cfg = get_config("llama3.2-1b")
+    cal = _host_calibration()
+    ecfg = ServingConfig(max_batch=8, ccpg=True)
+
+    # (n_prefill, n_decode, handoff): combined baselines keep the node
+    # count so the ratio sweep is like-for-like
+    shapes = {2: [(1, 1, False), (1, 1, True)],
+              4: [(2, 2, False), (1, 3, True), (2, 2, True), (3, 1, True)]}
+    rates = (60, 120)
+    t_wall = time.perf_counter()
+    rows, tput, eff = [], {}, {}
+    for rate in rates:
+        trace = Trace.poisson(48, rate_rps=rate, seed=0,
+                              prompt_len=512, max_new=64)
+        for n, splits in shapes.items():
+            for (p, d, handoff) in splits:
+                fc = FleetConfig(n_prefill=p, n_decode=d, handoff=handoff,
+                                 engine=ecfg)
+                eng = FleetEngine(cfg, fc, sim=PicnicSimulator())
+                rep = eng.run([copy.copy(r) for r in trace])
+                key = (f"n{n}_p{p}d{d}_"
+                       f"{'dis' if handoff else 'comb'}_r{rate}")
+                assert rep.finished == len(trace), \
+                    f"fleet cell {key}: dropped requests"
+                rows.append({"cell": key, **rep.row()})
+                tput[key] = rep.tokens_per_s
+                eff[(n, rate, handoff)] = max(
+                    eff.get((n, rate, handoff), 0.0), rep.tokens_per_J)
+
+    # autoscale pair: low arrival rate, 2+2 nodes — with autoscaling the
+    # fleet parks idle nodes asleep and pays ClusterWake on scale-up
+    wakes = {}
+    trace = Trace.poisson(48, rate_rps=20, seed=0,
+                          prompt_len=512, max_new=64)
+    for auto in (False, True):
+        fc = FleetConfig(n_prefill=2, n_decode=2, handoff=True,
+                         engine=ecfg, autoscale=auto, min_awake=1,
+                         scale_up_queue=2)
+        rep = FleetEngine(cfg, fc, sim=PicnicSimulator()).run(
+            [copy.copy(r) for r in trace])
+        key = f"n4_p2d2_dis_r20_auto{int(auto)}"
+        rows.append({"cell": key, **rep.row()})
+        wakes[auto] = rep.wakes
+    t_wall = time.perf_counter() - t_wall
+
+    best_eff = max(v for (_, _, h), v in eff.items() if h)
+    ratio = max(eff[(n, r, True)] / eff[(n, r, False)]
+                for n in shapes for r in rates)
+    _save("fleet", rows)
+    _bench_artifact("fleet", {
+        "fleet_best_tokens_per_J": round(best_eff, 2),
+        "disagg_vs_combined_eff_speedup": round(ratio, 3),
+        "autoscale_wakes": {"off": wakes[False], "on": wakes[True]},
+        "tokens_per_s": {r["cell"]: r["tokens_per_s"] for r in rows},
+        "tokens_per_J": {r["cell"]: r["tokens_per_J"] for r in rows},
+        "handoff_MB": {r["cell"]: r["handoff_MB"] for r in rows},
+        "p99_ttft_s": {r["cell"]: r["p99_ttft_s"] for r in rows},
+        "wall_ms": round(t_wall * 1e3, 1),
+    }, rows=rows, extra={"host_ops_per_s": round(cal, 1)})
+    _emit("fleet", t0,
+          f"disagg_vs_combined_eff={ratio:.3f}x "
+          f"autoscale_wakes={wakes[True]}")
     return rows
 
 
@@ -743,6 +830,7 @@ BENCHES = {
     "serving": bench_serving,
     "paged": bench_paged,
     "sweep": bench_sweep,
+    "fleet": bench_fleet,
     "distributed": bench_distributed,
     "roofline": bench_roofline,
     "kernels": bench_kernels,

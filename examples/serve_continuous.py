@@ -2,7 +2,7 @@
 
 Runs a 64-request Poisson arrival trace (Llama-3.2-1B, ~512-token
 prompts, 64 new tokens each) through the discrete-event serving engine
-(repro.launch.serving_engine) and prints the ServingReport — p50/p99
+(the repro.launch serve() facade) and prints the ServingReport — p50/p99
 TTFT and end-to-end latency, aggregate tokens/s, tokens/J — with and
 without CCPG (chiplet clustering & power gating, paper §II-E), plus the
 1-at-a-time baseline the batched engine is measured against.
@@ -16,7 +16,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.configs import get_config
-from repro.launch.serving_engine import poisson_trace, serve_trace
+from repro.launch import ServingConfig, Trace, serve
 
 N_REQUESTS = 64
 RATE_RPS = 40.0
@@ -30,10 +30,11 @@ print(f"model: {cfg.name} — {N_REQUESTS} requests, Poisson {RATE_RPS} req/s, "
 
 reports = {}
 for ccpg in (False, True):
-    trace = poisson_trace(N_REQUESTS, RATE_RPS, seed=0,
+    trace = Trace.poisson(N_REQUESTS, RATE_RPS, seed=0,
                           prompt_len=PROMPT_LEN, max_new=MAX_NEW)
     t0 = time.perf_counter()
-    rep = serve_trace(cfg, trace, max_batch=MAX_BATCH, ccpg=ccpg)
+    rep = serve(cfg, trace, config=ServingConfig(max_batch=MAX_BATCH,
+                                                 ccpg=ccpg))
     wall = time.perf_counter() - t0
     reports[ccpg] = rep
     print(rep.summary())
@@ -46,9 +47,9 @@ for ccpg in (False, True):
 
 # the 1-at-a-time baseline on the SAME trace (what launch/serve.py's
 # single-stream loop would deliver)
-seq = serve_trace(cfg, poisson_trace(N_REQUESTS, RATE_RPS, seed=0,
-                                     prompt_len=PROMPT_LEN, max_new=MAX_NEW),
-                  max_batch=1, ccpg=False)
+seq = serve(cfg, Trace.poisson(N_REQUESTS, RATE_RPS, seed=0,
+                               prompt_len=PROMPT_LEN, max_new=MAX_NEW),
+            config=ServingConfig(max_batch=1))
 print(f"1-at-a-time baseline: {seq.tokens_per_s:.1f} tok/s, "
       f"p99 latency {seq.p99_latency_s * 1e3:.1f} ms")
 print(f"batch-{MAX_BATCH} speedup: "

@@ -17,8 +17,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.configs import get_config
 from repro.core import PicnicSimulator
-from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                         EngineConfig, poisson_trace)
+from repro.launch import ServingConfig, Trace
+from repro.launch.serving_engine import ContinuousBatchingEngine
 from repro.runtime.kv_cache import kv_cache_from_model
 
 N_REQUESTS = 16
@@ -42,11 +42,11 @@ for paged in (False, True):
     sim = PicnicSimulator()
     if paged:
         sim.ccpg_model.include_dram_hub = True   # the hub is now in play
-    eng = ContinuousBatchingEngine(cfg, sim=sim, engine=EngineConfig(
+    eng = ContinuousBatchingEngine(cfg, sim=sim, engine=ServingConfig(
         max_batch=MAX_BATCH, ccpg=True,
         kv_cache=kvc if paged else None,
         chunked_prefill_tokens=CHUNK if paged else 0))
-    trace = poisson_trace(N_REQUESTS, RATE_RPS, seed=0,
+    trace = Trace.poisson(N_REQUESTS, RATE_RPS, seed=0,
                           prompt_len=PROMPT_LEN, max_new=MAX_NEW)
     rep = eng.run(trace)
     reports[paged] = rep
@@ -86,11 +86,11 @@ occ = {}
 for share in (False, True):
     sim = PicnicSimulator()
     sim.ccpg_model.include_dram_hub = True
-    eng = ContinuousBatchingEngine(cfg, sim=sim, engine=EngineConfig(
+    eng = ContinuousBatchingEngine(cfg, sim=sim, engine=ServingConfig(
         max_batch=MAX_BATCH, ccpg=True,
         kv_cache=dataclasses.replace(kvc, prefix_sharing=share),
         chunked_prefill_tokens=CHUNK))
-    trace = poisson_trace(N_REQUESTS, RATE_RPS, seed=0,
+    trace = Trace.poisson(N_REQUESTS, RATE_RPS, seed=0,
                           prompt_len=PROMPT_LEN, max_new=MAX_NEW,
                           prefix_len=PREFIX_LEN, prefix_frac=0.9)
     rep = eng.run(trace)

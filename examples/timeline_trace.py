@@ -21,8 +21,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.configs import get_config
 from repro.core import EVENT_CATEGORIES, PicnicSimulator, Timeline
-from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                         EngineConfig, poisson_trace)
+from repro.launch import ServingConfig, Trace
+from repro.launch.serving_engine import ContinuousBatchingEngine
 
 OUT = Path(__file__).resolve().parents[1] / "artifacts" / "trace"
 OUT.mkdir(parents=True, exist_ok=True)
@@ -58,8 +58,8 @@ print("\nserving engine (24 requests, Poisson 40 req/s, batch 4)")
 for label, kw in [("ccpg static ", dict(ccpg=True)),
                   ("ccpg dynamic", dict(ccpg=True, dynamic_ccpg=True))]:
     eng = ContinuousBatchingEngine(
-        cfg, engine=EngineConfig(max_batch=4, **kw))
-    rep = eng.run(poisson_trace(24, rate_rps=40, seed=0, prompt_len=256,
+        cfg, engine=ServingConfig(max_batch=4, **kw))
+    rep = eng.run(Trace.poisson(24, rate_rps=40, seed=0, prompt_len=256,
                                 max_new=32))
     print(f"  {label}  {rep.tokens_per_s:7.1f} tok/s  "
           f"{rep.tokens_per_J:6.1f} tok/J  "

@@ -9,7 +9,7 @@ level the paper evaluates at (average C2C power for a traffic trace).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Mapping, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 
 from .energy import E_DRAM_ACCESS, E_ELECTRICAL_C2C, E_OPTICAL_C2C
 
@@ -46,6 +46,24 @@ def c2c_transfer_time(payload_bytes: int, link: LinkSpec) -> float:
 
 def dram_access_power(bytes_per_second: float) -> float:
     return bytes_per_second * 8 * E_DRAM_ACCESS
+
+
+def fleet_handoff_bytes(context_tokens: int, bytes_per_token: int,
+                        measured: "Optional[MeasuredTraffic]" = None
+                        ) -> int:
+    """Wire bytes for ONE prefill -> decode KV handoff across the
+    inter-node fabric (launch/fleet_engine.py).
+
+    Analytic Table-II-style default: the KV footprint of the resident
+    context (``context_tokens * bytes_per_token``).  With ``measured``
+    (HLO-captured traffic, see :class:`MeasuredTraffic`) the sharded
+    re-establishment cost is charged on top — re-admitting the KV on the
+    destination node's chiplets replays the prefill's measured
+    collective wire bytes, traffic the analytic footprint ignores."""
+    nbytes = int(context_tokens) * int(bytes_per_token)
+    if measured is not None:
+        nbytes += int(measured.prefill_bytes)
+    return nbytes
 
 
 @dataclass(frozen=True)

@@ -507,18 +507,22 @@ class Timeline:
     _TIDS = {"ComputeSpan": 1, "C2CTransfer": 2, "ClusterWake": 3,
              "ClusterSleep": 4, "TokenEmit": 5}
 
-    def iter_chrome_events(self, *, process_name: str = "picnic"
-                           ) -> Iterator[Dict]:
+    def iter_chrome_events(self, *, process_name: str = "picnic",
+                           pid: int = 0) -> Iterator[Dict]:
         """Yield `chrome://tracing` event dicts one at a time (metadata
-        first), without holding the whole trace in memory."""
-        yield {"ph": "M", "pid": 0, "name": "process_name",
+        first), without holding the whole trace in memory.  ``pid``
+        attributes every event to one trace process — fleet runs export
+        each NODE's timeline under its own pid (see
+        :func:`merge_chrome_traces`); the default 0 keeps single-node
+        output byte-identical to the pre-fleet exporter."""
+        yield {"ph": "M", "pid": pid, "name": "process_name",
                "args": {"name": process_name}}
         for lane, tid in sorted(self._TIDS.items(), key=lambda kv: kv[1]):
-            yield {"ph": "M", "pid": 0, "tid": tid,
+            yield {"ph": "M", "pid": pid, "tid": tid,
                    "name": "thread_name", "args": {"name": lane}}
 
         def span(cat, name, e, args):
-            return {"ph": "X", "pid": 0, "tid": self._TIDS[cat],
+            return {"ph": "X", "pid": pid, "tid": self._TIDS[cat],
                     "cat": cat, "name": name, "ts": e.t0 * 1e6,
                     "dur": e.dur_s * 1e6, "args": args}
 
@@ -539,40 +543,56 @@ class Timeline:
                 yield span("ClusterSleep", "sleep", e,
                            {"power_W": e.power_W})
             elif isinstance(e, EnergySample):
-                yield {"ph": "C", "pid": 0, "cat": "EnergySample",
+                yield {"ph": "C", "pid": pid, "cat": "EnergySample",
                        "name": "power_W", "ts": ts,
                        "args": {"power_W": e.power_W}}
             elif isinstance(e, TokenEmit):
-                yield {"ph": "i", "pid": 0,
+                yield {"ph": "i", "pid": pid,
                        "tid": self._TIDS["TokenEmit"],
                        "cat": "TokenEmit", "name": f"tok x{e.n}",
                        "ts": ts, "s": "t",
                        "args": {"n": e.n, "request_id": e.request_id}}
 
-    def to_chrome_trace(self, *, process_name: str = "picnic") -> Dict:
+    def to_chrome_trace(self, *, process_name: str = "picnic",
+                        pid: int = 0) -> Dict:
         """`chrome://tracing` / Perfetto JSON: one thread lane per event
         category, power as a counter track, tokens as instant events."""
         return {"traceEvents":
-                list(self.iter_chrome_events(process_name=process_name)),
+                list(self.iter_chrome_events(process_name=process_name,
+                                             pid=pid)),
                 "displayTimeUnit": "ms"}
 
-    def dump_chrome_trace(self, path, *,
-                          process_name: str = "picnic") -> None:
+    def dump_chrome_trace(self, path, *, process_name: str = "picnic",
+                          pid: int = 0) -> None:
         """Stream the Chrome trace to ``path`` one event at a time —
         constant memory, so ``--trace-out`` stays usable on
         million-event traces."""
         with open(path, "w") as f:
             f.write('{"displayTimeUnit": "ms", "traceEvents": [\n')
             first = True
-            for ev in self.iter_chrome_events(process_name=process_name):
+            for ev in self.iter_chrome_events(process_name=process_name,
+                                              pid=pid):
                 if not first:
                     f.write(",\n")
                 json.dump(ev, f)
                 first = False
             f.write("\n]}\n")
 
-    def save_chrome_trace(self, path, *, process_name: str = "picnic") -> None:
-        self.dump_chrome_trace(path, process_name=process_name)
+    def save_chrome_trace(self, path, *, process_name: str = "picnic",
+                          pid: int = 0) -> None:
+        self.dump_chrome_trace(path, process_name=process_name, pid=pid)
+
+
+def merge_chrome_traces(named_timelines) -> Dict:
+    """One `chrome://tracing` document from several timelines: each
+    ``(name, timeline)`` pair becomes its own trace PROCESS (pid = list
+    position, process_name = name) — per-node attribution for fleet
+    runs, where every node's events keep their own lanes but share the
+    global clock."""
+    events: List[Dict] = []
+    for pid, (name, tl) in enumerate(named_timelines):
+        events.extend(tl.iter_chrome_events(process_name=name, pid=pid))
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
 
 
 # ---------------------------------------------------------------------------

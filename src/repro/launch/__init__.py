@@ -1,6 +1,75 @@
 """Launch layer: meshes, train/serve steps, dry-run costing, serving.
 
 Submodules are imported lazily by callers (several pull in JAX at import
-time); the analytic serving stack (``scheduler``, ``serving_engine``)
-stays JAX-free so traffic simulations run instantly on any host.
+time); the analytic serving stack (``scheduler``, ``serving_engine``,
+``sweep_engine``, ``fleet``) stays JAX-free so traffic simulations run
+instantly on any host.
+
+This package is also the PUBLIC serving API (ISSUE 9): one documented
+facade over the three execution tiers, so examples and benchmarks stop
+importing module internals —
+
+  * configs   — :class:`ServingConfig` (per-node engine knobs) and
+    :class:`FleetConfig` (pool shape / router / handoff / autoscaling),
+    both keyword-only and versioned with ``to_dict()``/``from_dict()``
+    round-trip and unknown-key rejection (`repro.launch.config`);
+  * traces    — :class:`Trace` with ``Trace.poisson(...)`` /
+    ``Trace.replay(rows)`` classmethods (one arrival/deadline/prefix
+    spec; the legacy ``poisson_trace``/``replay_trace`` functions
+    delegate to them);
+  * reports   — :class:`ServingReport` (per node, with optional
+    ``node_id``/``pool`` attribution) and :class:`FleetReport`
+    (cluster aggregate);
+  * entry points —
+      serve(cfg, trace, ...)   one engine, one trace  -> ServingReport
+      sweep(cells)             vectorized cell grid   -> [SweepResult]
+      fleet(cfg, trace, ...)   multi-node disaggregated cluster
+                                                      -> FleetReport
+
+All three construct from the same :class:`ServingConfig` schema.  The
+facade functions import their engines lazily, keeping ``import
+repro.launch`` cheap and JAX-free.
 """
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.launch.config import FleetConfig, ServingConfig
+from repro.launch.serving_engine import (ServingReport, Trace,
+                                         TrackedRequest, poisson_trace,
+                                         replay_trace)
+
+__all__ = [
+    "FleetConfig", "ServingConfig", "ServingReport", "Trace",
+    "TrackedRequest", "poisson_trace", "replay_trace",
+    "serve", "sweep", "fleet",
+]
+
+
+def serve(cfg, trace: Sequence[TrackedRequest], *,
+          config: Optional[ServingConfig] = None, sim=None
+          ) -> ServingReport:
+    """Run ``trace`` through one fresh :class:`ContinuousBatchingEngine`
+    built from ``config`` (default :class:`ServingConfig`)."""
+    from repro.launch.serving_engine import ContinuousBatchingEngine
+    eng = ContinuousBatchingEngine(
+        cfg, sim=sim,
+        engine=config if config is not None else ServingConfig())
+    return eng.run(trace)
+
+
+def sweep(cells):
+    """Run a grid of `sweep_engine.SweepCell`s through one vectorized
+    lockstep pass; results in cell order, each byte-identical to a
+    per-cell scalar engine run."""
+    from repro.launch.sweep_engine import sweep_serve
+    return sweep_serve(cells)
+
+
+def fleet(cfg, trace: Sequence[TrackedRequest], *,
+          config: Optional[FleetConfig] = None, sim=None):
+    """Run ``trace`` through a multi-node prefill/decode fleet built
+    from ``config`` (default :class:`FleetConfig`); returns a
+    `launch.fleet_engine.FleetReport`."""
+    from repro.launch.fleet_engine import FleetEngine
+    return FleetEngine(cfg, config, sim=sim).run(trace)

@@ -1,0 +1,193 @@
+"""The public serving-configuration schema (ISSUE 9 API redesign).
+
+One keyword-only, versioned config family shared by every serving
+entry point — `ContinuousBatchingEngine` (scalar), `SweepEngine`
+(vectorized grids) and `FleetEngine` (multi-node disaggregation) all
+construct from :class:`ServingConfig`; the fleet layer adds its knobs
+in :class:`FleetConfig`, which *embeds* a ServingConfig per node
+instead of duplicating its fields.
+
+Schema contract (locked by tests/test_serving_api.py):
+
+  * keyword-only construction — positional field order is not API;
+  * ``to_dict()`` / ``from_dict()`` round-trip exactly, including the
+    nested ``kv_cache`` (`runtime.kv_cache.KVCacheConfig`) and
+    ``engine`` blocks;
+  * ``from_dict`` REJECTS unknown keys (`ValueError` naming them) — a
+    typo'd knob must fail loudly, not silently fall back to defaults;
+  * every dict carries a ``schema`` stamp; ``from_dict`` refuses
+    documents newer than it understands.
+
+``repro.launch.serving_engine.EngineConfig`` remains as a deprecated
+alias (same fields, accepts the legacy positional form) that warns on
+construction — see the shim there.
+
+Pure Python, JAX-free, like the rest of the analytic serving stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, Optional
+
+from repro.core.interconnect import MeasuredTraffic
+from repro.runtime.kv_cache import KVCacheConfig
+
+
+def _check_known_keys(cls, d: Dict) -> None:
+    """Unknown-key rejection shared by every ``from_dict``."""
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - known)
+    if unknown:
+        raise ValueError(
+            f"unknown {cls.__name__} keys: {unknown} "
+            f"(known: {sorted(known)})")
+
+
+def _check_schema(cls, d: Dict) -> Dict:
+    """Pop + validate the version stamp; returns a shallow copy of
+    ``d`` without it."""
+    d = dict(d)
+    ver = d.pop("schema", 1)
+    if not isinstance(ver, int) or ver < 1:
+        raise ValueError(f"bad {cls.__name__} schema stamp: {ver!r}")
+    if ver > cls.SCHEMA_VERSION:
+        raise ValueError(
+            f"{cls.__name__} document has schema {ver}, this build "
+            f"understands <= {cls.SCHEMA_VERSION}")
+    return d
+
+
+@dataclasses.dataclass(kw_only=True)
+class ServingConfig:
+    """Per-engine serving knobs (one PICNIC node).
+
+    The field set (and every default) is the former ``EngineConfig``
+    — promoting it to a keyword-only, versioned schema is the ISSUE 9
+    API consolidation; the semantics of each knob are unchanged and
+    documented inline.
+    """
+    SCHEMA_VERSION: ClassVar[int] = 1
+
+    max_batch: int = 8          # KV-cache slots = max co-resident requests
+    queue_limit: int = 256      # admission queue bound (then reject)
+    decode_quantum: int = 4     # decode rounds per allowed prefill
+    ccpg: bool = False          # cluster power gating (paper §II-E)
+    dynamic_ccpg: bool = False  # full ClusterWake latency per iteration
+    #                             instead of the folded pre-wake residue
+    overlap: float = 0.0        # fraction of decode C2C hidden by compute
+    max_iters: int = 2_000_000  # safety valve for the event loop
+    # -- paged KV cache (None = capacity unbounded, paging off; the
+    #    default path stays byte-identical to timeline_golden.json) -----
+    kv_cache: Optional[KVCacheConfig] = None
+    # chunked prefill: prompts longer than this are prefilled in chunks
+    # of at most this many tokens, one chunk per engine iteration, so a
+    # long prompt cannot monopolize an iteration (0 = off)
+    chunked_prefill_tokens: int = 0
+    # columnar TimelineIR recording (the fast simulation core).  False
+    # restores the one-dataclass-per-append reference recorder — both
+    # are byte-identical (tests/test_fastpath.py); the toggle exists for
+    # the equivalence tests and the microbench before/after measurement.
+    columnar_timeline: bool = True
+    # aggregate-only TimelineIR recording (the sweep-engine recorder):
+    # running sums and counts only, NO event stream — reading
+    # `timeline.events` / exporting a trace raises.  Every report-level
+    # aggregate stays byte-identical to the other recorders (same float
+    # adds in the same order); takes precedence over columnar_timeline.
+    aggregate_timeline: bool = False
+
+    def to_dict(self) -> Dict:
+        d = {"schema": self.SCHEMA_VERSION}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "kv_cache" and v is not None:
+                v = dataclasses.asdict(v)
+            d[f.name] = v
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ServingConfig":
+        d = _check_schema(cls, d)
+        _check_known_keys(cls, d)
+        kv = d.get("kv_cache")
+        if isinstance(kv, dict):
+            _check_known_keys(KVCacheConfig, kv)
+            d["kv_cache"] = KVCacheConfig(**kv)
+        return cls(**d)
+
+
+@dataclasses.dataclass(kw_only=True)
+class FleetConfig:
+    """Fleet-level knobs for `launch.fleet_engine.FleetEngine`: pool shape,
+    router policy, KV-handoff pricing and node autoscaling.  Every node
+    runs one :class:`ServingConfig` (the ``engine`` block)."""
+    SCHEMA_VERSION: ClassVar[int] = 1
+
+    # pool shape.  handoff=True splits the fleet into n_prefill
+    # dedicated prefill nodes and n_decode decode nodes with priced KV
+    # handoff between them; handoff=False runs n_prefill + n_decode
+    # COMBINED nodes (plain data-parallel replication, the
+    # disaggregation baseline) — node count is preserved either way so
+    # ratio sweeps compare like for like.
+    n_prefill: int = 1
+    n_decode: int = 1
+    handoff: bool = True
+    # per-node engine schema (shared by every node of the fleet)
+    engine: ServingConfig = dataclasses.field(default_factory=ServingConfig)
+    # router backlog bound: requests held (NOT rejected) while every
+    # awake prefill node's admission queue is full; beyond this the
+    # router itself rejects
+    queue_limit: int = 4096
+    # SLO-aware admission: reject at the ROUTER when the estimated
+    # queue-wait + prefill time of the least-loaded node already blows
+    # the request's TTFT deadline (deadline-free requests never reject
+    # here; off by default so the degenerate fleet stays bare-engine
+    # identical)
+    slo_admission: bool = False
+    # CCPG-driven node autoscaling: nodes beyond min_awake (per pool)
+    # start asleep; the router wakes one — paying the REAL ClusterWake
+    # cluster-walk latency on that node's timeline — when every awake
+    # node of the pool carries more than scale_up_queue outstanding
+    # units of work; drained nodes above min_awake go back to sleep.
+    autoscale: bool = False
+    min_awake: int = 1
+    scale_up_queue: int = 4
+    # KV-handoff wire pricing: bytes/token of resident context moved
+    # prefill -> decode over the fabric.  None derives the analytic
+    # Table-II-style per-token KV footprint from the model config
+    # (`runtime.kv_cache.kv_bytes_per_token`, or the paged cache's own
+    # bytes_per_token when the engine block carries one).
+    handoff_bytes_per_token: Optional[int] = None
+    # opt-in measured pricing (launch/collective_capture.py): adds the
+    # HLO-measured prefill collective wire bytes per handoff — the
+    # resharding traffic of re-establishing the KV on the destination
+    # node's chiplets, which the analytic footprint ignores.
+    measured_handoff: Optional[MeasuredTraffic] = None
+    max_iters: int = 8_000_000  # safety valve over ALL node steps
+
+    @property
+    def n_nodes(self) -> int:
+        return self.n_prefill + self.n_decode
+
+    def to_dict(self) -> Dict:
+        d = {"schema": self.SCHEMA_VERSION}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name == "engine":
+                v = v.to_dict()
+            elif f.name == "measured_handoff" and v is not None:
+                v = dataclasses.asdict(v)
+            d[f.name] = v
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FleetConfig":
+        d = _check_schema(cls, d)
+        _check_known_keys(cls, d)
+        eng = d.get("engine")
+        if isinstance(eng, dict):
+            d["engine"] = ServingConfig.from_dict(eng)
+        mh = d.get("measured_handoff")
+        if isinstance(mh, dict):
+            _check_known_keys(MeasuredTraffic, mh)
+            d["measured_handoff"] = MeasuredTraffic(**mh)
+        return cls(**d)

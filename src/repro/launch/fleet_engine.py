@@ -1,0 +1,712 @@
+"""Disaggregated prefill/decode fleet over the photonic fabric.
+
+The cluster layer above `launch/serving_engine` (ROADMAP item 1): N
+PICNIC node instances — each one a full `ContinuousBatchingEngine` with
+its own TimelineIR — split into dedicated PREFILL and DECODE pools, with
+a global router in front and priced KV handoff between them:
+
+  arrival trace
+    -> ROUTER: SLO-aware admission (optional; rejects a request whose
+       TTFT deadline is already unreachable on the least-loaded node),
+       least-loaded prefill dispatch, bounded hold-don't-drop backlog
+       when every prefill queue is full
+    -> PREFILL node: runs prompt prefill + first token (a max_new<=1
+       copy of the request), then exports the resident KV block set
+       (`BlockAllocator.export_table`) through the engine's `on_finish`
+       hook
+    -> KV HANDOFF over the inter-node fabric: wire bytes from
+       `core.interconnect.fleet_handoff_bytes` (analytic Table-II KV
+       footprint by default, HLO-`MeasuredTraffic` resharding cost
+       opt-in), latency = bytes / fabric bandwidth folded into the
+       decode-side arrival, energy priced as a C2CTransfer
+       (phase "kv_handoff") on the decode node's timeline
+    -> DECODE node: `import_table` re-admits the context into a fresh
+       local block table, the request decodes to completion in that
+       node's continuous batch.  A full decode node re-queues the
+       handoff (never drops); an empty-but-infeasible one re-routes it.
+    -> CCPG autoscaling (optional): nodes beyond `min_awake` per pool
+       start asleep; the router wakes one — paying the REAL ClusterWake
+       cluster-walk latency on that node's timeline — when awake nodes
+       saturate, and drained nodes go back to sleep.
+
+``handoff=False`` degrades every node to a COMBINED (prefill+decode)
+replica — plain data-parallel serving, the disaggregation baseline.  A
+1-node combined fleet reproduces the bare engine's step sequence
+EXACTLY (hex-identical timeline floats, events and report — locked by
+tests/test_fleet.py): the fleet adds no timeline activity of its own on
+that path.
+
+Scheduling is conservative parallel discrete-event simulation: every
+entity (router, node) exposes a *horizon* — the earliest simulated time
+its next action can happen (a busy node: its clock; an idle node: its
+next input's arrival; the router: the next undispatched arrival) — and
+the fleet always steps the runnable entity with the minimum horizon,
+router first on ties.  The minimum-horizon entity can never receive an
+earlier input from the others, so the interleave is causally safe and
+deterministic.
+
+Pure Python + numpy like the engine underneath — no JAX import.
+
+  PYTHONPATH=src python -c "from repro.launch import fleet; ..."
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import json
+import math
+from bisect import insort
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.interconnect import c2c_transfer_time, fleet_handoff_bytes
+from repro.core.scheduling import ChipletAllocation, allocate_chiplets
+from repro.core.simulator import PicnicSimulator
+from repro.core.timeline import merge_chrome_traces
+from repro.launch.config import FleetConfig, ServingConfig
+from repro.launch.scheduler import EventKind
+from repro.launch.serving_engine import (ContinuousBatchingEngine,
+                                         ServingReport, TrackedRequest)
+from repro.runtime.kv_cache import kv_bytes_per_token
+
+PREFILL = "prefill"
+DECODE = "decode"
+COMBINED = "combined"
+
+
+class _Node:
+    """One PICNIC node of the fleet: an engine plus its fleet-side
+    mailboxes (dispatched arrivals, queued handoffs) and pool state."""
+
+    __slots__ = ("node_id", "pool", "eng", "pending", "handoffs",
+                 "assigned", "asleep", "wakes", "requeued",
+                 "outstanding_s", "_last_deferred_seq")
+
+    def __init__(self, node_id: int, pool: str, cfg, sim, engine_cfg,
+                 alloc):
+        self.node_id = node_id
+        self.pool = pool
+        self.eng = ContinuousBatchingEngine(cfg, sim=sim,
+                                            engine=engine_cfg,
+                                            alloc=alloc)
+        # arrivals the router has dispatched here (arrival-ordered; the
+        # engine admits them itself, preserving its queue_limit/reject
+        # semantics)
+        self.pending: Deque[TrackedRequest] = deque()
+        # (arrival_s, seq, request, nbytes, transfer_s) — handed-off
+        # requests in fabric-arrival order (insort: wakes and re-routes
+        # can land out of order)
+        self.handoffs: List[Tuple] = []
+        self.assigned: List[TrackedRequest] = []
+        self.asleep = False
+        self.wakes = 0
+        self.requeued = 0
+        self.outstanding_s = 0.0     # router's prefill-work estimate
+        self._last_deferred_seq = -1
+
+    def reset(self) -> None:
+        self.eng.reset()
+        self.pending.clear()
+        self.handoffs.clear()
+        self.assigned = []
+        self.asleep = False
+        self.wakes = 0
+        self.requeued = 0
+        self.outstanding_s = 0.0
+        self._last_deferred_seq = -1
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """Cluster-level aggregate over one trace, plus every node's own
+    :class:`ServingReport` (carrying ``node_id``/``pool`` attribution
+    whenever the fleet has more than one node)."""
+    n_nodes: int
+    n_prefill: int
+    n_decode: int
+    handoff: bool
+    n_requests: int
+    finished: int
+    rejected: int
+    wall_s: float
+    tokens_generated: int
+    tokens_per_s: float
+    energy_J: float
+    tokens_per_J: float
+    p50_latency_s: float
+    p99_latency_s: float
+    p50_ttft_s: float
+    p99_ttft_s: float
+    handoffs: int
+    handoff_bytes: int
+    requeued_handoffs: int
+    rerouted_handoffs: int
+    wakes: int
+    slo_rejected: int
+    node_reports: List[ServingReport]
+
+    def row(self) -> Dict:
+        def _r(x: float, nd: int):
+            return None if math.isnan(x) else round(x, nd)
+        return {
+            "nodes": self.n_nodes,
+            "prefill_nodes": self.n_prefill,
+            "decode_nodes": self.n_decode,
+            "handoff": self.handoff,
+            "requests": self.n_requests,
+            "finished": self.finished,
+            "rejected": self.rejected,
+            "tokens_per_s": _r(self.tokens_per_s, 1),
+            "tokens_per_J": _r(self.tokens_per_J, 1),
+            "p50_latency_s": _r(self.p50_latency_s, 4),
+            "p99_latency_s": _r(self.p99_latency_s, 4),
+            "p50_ttft_s": _r(self.p50_ttft_s, 4),
+            "p99_ttft_s": _r(self.p99_ttft_s, 4),
+            "handoffs": self.handoffs,
+            "handoff_MB": round(self.handoff_bytes / 1e6, 3),
+            "requeued_handoffs": self.requeued_handoffs,
+            "wakes": self.wakes,
+            "slo_rejected": self.slo_rejected,
+            "wall_s": _r(self.wall_s, 4),
+        }
+
+    def summary(self) -> str:
+        shape = (f"{self.n_prefill}P+{self.n_decode}D"
+                 if self.handoff else f"{self.n_nodes}x combined")
+        return "\n".join([
+            f"FleetReport ({shape})",
+            f"  requests          {self.finished}/{self.n_requests} "
+            f"finished, {self.rejected} rejected "
+            f"({self.slo_rejected} at the SLO gate)",
+            f"  wall clock        {self.wall_s:.3f} s",
+            f"  throughput        {self.tokens_per_s:.1f} tok/s",
+            f"  efficiency        {self.tokens_per_J:.1f} tok/J "
+            f"({self.energy_J:.3f} J total)",
+            f"  latency p50/p99   {self.p50_latency_s * 1e3:.1f} / "
+            f"{self.p99_latency_s * 1e3:.1f} ms",
+            f"  TTFT    p50/p99   {self.p50_ttft_s * 1e3:.1f} / "
+            f"{self.p99_ttft_s * 1e3:.1f} ms",
+            f"  handoffs          {self.handoffs} "
+            f"({self.handoff_bytes / 1e6:.2f} MB over the fabric, "
+            f"{self.requeued_handoffs} re-queued, "
+            f"{self.rerouted_handoffs} re-routed)",
+            f"  node wakes        {self.wakes}",
+        ])
+
+
+class FleetEngine:
+    """A fleet of :class:`ContinuousBatchingEngine` nodes behind one
+    router — see the module docstring for the full data path."""
+
+    def __init__(self, cfg, fleet: Optional[FleetConfig] = None, *,
+                 sim: Optional[PicnicSimulator] = None):
+        self.cfg = cfg
+        self.fleet = fleet if fleet is not None else FleetConfig()
+        self.sim = sim if sim is not None else PicnicSimulator()
+        f = self.fleet
+        if f.n_nodes < 1:
+            raise ValueError("fleet needs at least one node")
+        ecfg = f.engine
+        # one chiplet allocation shared by every node (deterministic;
+        # sharing also maximizes cycle-model memo hits across nodes)
+        self._alloc: ChipletAllocation = allocate_chiplets(
+            cfg, self.sim.tile)
+        disagg = f.handoff and f.n_prefill > 0 and f.n_decode > 0
+        pools = ([PREFILL] * f.n_prefill + [DECODE] * f.n_decode
+                 if disagg else [COMBINED] * f.n_nodes)
+        self.nodes = [_Node(i, pool, cfg, self.sim, ecfg, self._alloc)
+                      for i, pool in enumerate(pools)]
+        self._disagg = disagg
+        self._residue_ccpg = ecfg.ccpg and not ecfg.dynamic_ccpg
+        # handoff wire pricing: explicit knob > paged cache's own
+        # footprint > analytic model-derived KV bytes/token
+        if f.handoff_bytes_per_token is not None:
+            self._bpt = int(f.handoff_bytes_per_token)
+        elif ecfg.kv_cache is not None:
+            self._bpt = int(ecfg.kv_cache.bytes_per_token)
+        else:
+            self._bpt = kv_bytes_per_token(cfg)
+        for n in self.nodes:
+            if n.pool == PREFILL:
+                n.eng.on_finish = (
+                    lambda req, node=n: self._on_prefill_done(node, req))
+        # run-scoped state (rebuilt by run())
+        self._records: Dict[int, Dict] = {}
+        self._arrivals: Deque[TrackedRequest] = deque()
+        self._backlog: Deque[TrackedRequest] = deque()
+        self._handoff_seq = 0
+        self.handoffs = 0
+        self.handoff_bytes = 0
+        self.requeued = 0
+        self.rerouted = 0
+        self.wakes = 0
+        self.slo_rejected = 0
+        self._fleet_rejected = 0
+
+    # -- horizons ------------------------------------------------------
+    def _node_horizon(self, n: _Node) -> float:
+        """Earliest simulated time node ``n``'s next step can happen:
+        its clock while it holds work, else its next input's arrival
+        (clamped to the clock), else +inf (not runnable).  Sleeping
+        nodes only re-enter through a router wake."""
+        if n.asleep:
+            return math.inf
+        e = n.eng
+        if e.queue or e._active_idx or e._partial is not None:
+            return e.clock
+        t = math.inf
+        if n.pending:
+            t = n.pending[0].arrival
+        if n.handoffs:
+            h = n.handoffs[0][0]
+            if h < t:
+                t = h
+        if t is math.inf:
+            return math.inf
+        return t if t > e.clock else e.clock
+
+    # -- run -----------------------------------------------------------
+    def run(self, trace: Sequence[TrackedRequest]) -> FleetReport:
+        f = self.fleet
+        for n in self.nodes:
+            n.reset()
+        # replicate ContinuousBatchingEngine._prepare_run for the whole
+        # fleet: reset the trace's mutable per-run state, verify arrival
+        # monotonicity (stable re-sort only when violated), share the
+        # any-deadline flag with every node
+        arr = list(trace)
+        for r in arr:
+            r.generated = 0
+            r.context = 0
+            r.first_token_at = None
+            r.finished_at = None
+            r.admit_seq = -1
+        prev = -math.inf
+        for r in arr:
+            if r.arrival < prev:
+                arr.sort()
+                break
+            prev = r.arrival
+        any_deadline = any(r.deadline_ttft is not None for r in arr)
+        for n in self.nodes:
+            n.eng._any_deadline = any_deadline
+        self._records = {}
+        self._arrivals = deque(arr)
+        self._backlog = deque()
+        self._handoff_seq = 0
+        self.handoffs = 0
+        self.handoff_bytes = 0
+        self.requeued = 0
+        self.rerouted = 0
+        self.wakes = 0
+        self.slo_rejected = 0
+        self._fleet_rejected = 0
+        if f.autoscale:
+            for pool in (PREFILL, DECODE, COMBINED):
+                awake = 0
+                for n in self.nodes:
+                    if n.pool != pool:
+                        continue
+                    awake += 1
+                    n.asleep = awake > max(f.min_awake, 0)
+        # conservative-DES main loop: min-horizon entity steps next,
+        # router (dispatch) before nodes on ties so a node never admits
+        # at a timestamp the router still owes arrivals for
+        it = 0
+        while True:
+            rh = (self._arrivals[0].arrival if self._arrivals
+                  else math.inf)
+            best: Optional[_Node] = None
+            bh = math.inf
+            for n in self.nodes:
+                h = self._node_horizon(n)
+                if h < bh:
+                    bh = h
+                    best = n
+            if rh <= bh:
+                if best is None and rh is math.inf:
+                    break
+                if rh is not math.inf:
+                    self._router_step()
+                    continue
+            it += 1
+            if it > f.max_iters:
+                raise RuntimeError("fleet exceeded max_iters")
+            self._step_node(best)
+        if self._backlog:       # unreachable: flush runs per node step
+            raise RuntimeError("fleet backlog not drained")
+        return self._report()
+
+    # -- router --------------------------------------------------------
+    def _router_step(self) -> None:
+        """Dispatch every arrival at the next arrival timestamp (equal
+        arrivals batch together, FIFO — matching one engine
+        ``_admit_arrivals`` pass)."""
+        t = self._arrivals[0].arrival
+        while self._arrivals and self._arrivals[0].arrival <= t:
+            req = self._arrivals.popleft()
+            rec = {"req": req, "final": None, "rejected": False,
+                   "eta": 0.0}
+            self._records[req.request_id] = rec
+            if self._disagg:
+                rec["eta"] = self.sim.prefill_seconds(
+                    self.cfg, self._alloc, req.prompt_len,
+                    ccpg=self._residue_ccpg)[0]
+                self._dispatch_prefill(req, t)
+            else:
+                self._dispatch_combined(req, t)
+
+    @staticmethod
+    def _pf_load(n: _Node) -> int:
+        e = n.eng
+        return (len(n.pending) + len(e.queue)
+                + (1 if e._partial is not None else 0))
+
+    @staticmethod
+    def _dc_load(n: _Node) -> int:
+        return len(n.eng._active_idx) + len(n.handoffs)
+
+    def _dispatch_prefill(self, req: TrackedRequest, now: float) -> None:
+        f = self.fleet
+        rec = self._records[req.request_id]
+        targets = [n for n in self.nodes if n.pool == PREFILL]
+        awake = [n for n in targets if not n.asleep]
+        if f.slo_admission and req.deadline_ttft is not None:
+            # the BEST case (least-loaded awake node, its whole queue
+            # estimate ahead of us) already misses the deadline: reject
+            # at the router instead of burning prefill on a dead request
+            wait = min((n.outstanding_s for n in awake), default=0.0)
+            if now + wait + rec["eta"] >= req.arrival + req.deadline_ttft:
+                rec["rejected"] = True
+                self.slo_rejected += 1
+                self._fleet_rejected += 1
+                return
+        limit = f.engine.queue_limit
+        open_nodes = [n for n in awake if self._pf_load(n) < limit]
+        if f.autoscale:
+            asleep = [n for n in targets if n.asleep]
+            if asleep and (
+                    not open_nodes
+                    or min(self._pf_load(n) for n in open_nodes)
+                    >= f.scale_up_queue):
+                n0 = asleep[0]
+                self._wake(n0, now)
+                open_nodes.append(n0)
+        if not open_nodes:
+            # every awake prefill queue is full: HOLD the request in the
+            # router backlog (re-tried after every node step) instead of
+            # dropping it; reject only past the router's own bound
+            if len(self._backlog) >= f.queue_limit:
+                rec["rejected"] = True
+                self._fleet_rejected += 1
+            else:
+                self._backlog.append(req)
+            return
+        node = min(open_nodes,
+                   key=lambda n: (self._pf_load(n), n.node_id))
+        self._send_prefill(node, req, rec)
+
+    def _send_prefill(self, node: _Node, req: TrackedRequest,
+                      rec: Dict) -> None:
+        """Hand ``req`` to a prefill node as a max_new<=1 copy: the
+        prefill engine emits the first token and finishes, which fires
+        the handoff hook.  The ORIGINAL request object stays untouched
+        until the decode copy is built from the prefill result."""
+        pf = copy.copy(req)
+        pf.max_new = min(1, req.max_new)
+        rec["final"] = pf
+        node.pending.append(pf)
+        node.assigned.append(pf)
+        node.outstanding_s += rec["eta"]
+
+    def _dispatch_combined(self, req: TrackedRequest, now: float) -> None:
+        f = self.fleet
+        rec = self._records[req.request_id]
+        targets = [n for n in self.nodes if n.pool == COMBINED]
+        awake = [n for n in targets if not n.asleep]
+
+        def load(n: _Node) -> int:
+            return self._pf_load(n) + len(n.eng._active_idx)
+
+        if f.autoscale:
+            asleep = [n for n in targets if n.asleep]
+            if asleep and (not awake
+                           or min(load(n) for n in awake)
+                           >= f.scale_up_queue):
+                n0 = asleep[0]
+                self._wake(n0, now)
+                awake.append(n0)
+        if not awake:           # min_awake == 0 edge: wake on demand
+            n0 = targets[0]
+            self._wake(n0, now)
+            awake = [n0]
+        node = min(awake, key=lambda n: (load(n), n.node_id))
+        # combined nodes admit/reject through the ENGINE's own queue
+        # bound — unconditional dispatch keeps the 1-node fleet
+        # byte-identical to the bare engine
+        rec["final"] = req
+        node.pending.append(req)
+        node.assigned.append(req)
+
+    # -- prefill-finish hook / handoff ---------------------------------
+    def _on_prefill_done(self, node: _Node, pf: TrackedRequest) -> bool:
+        """`on_finish` hook on prefill nodes: export the finished
+        prefill's KV, build the decode-side copy, and ship it over the
+        fabric.  Returns True — KV ownership always leaves the prefill
+        engine here (export_table already released the local blocks)."""
+        rec = self._records[pf.request_id]
+        node.outstanding_s = max(0.0, node.outstanding_s - rec["eta"])
+        e = node.eng
+        handoff = None
+        if e.kv is not None and pf.request_id in e.kv.tables:
+            handoff = e.kv.export_table(pf.request_id)
+        orig = rec["req"]
+        if orig.max_new <= 1:
+            # the first token was everything asked for — done at prefill
+            rec["final"] = pf
+            return True
+        f = self.fleet
+        dc = copy.copy(orig)
+        dc.generated = pf.generated
+        dc.context = pf.context
+        dc.first_token_at = pf.first_token_at
+        dc.finished_at = None
+        dc.admit_seq = -1
+        if handoff is not None:
+            nbytes = handoff.nbytes     # block-padded, what the wire sees
+            if f.measured_handoff is not None:
+                nbytes += int(f.measured_handoff.prefill_bytes)
+        else:
+            nbytes = fleet_handoff_bytes(dc.context, self._bpt,
+                                         f.measured_handoff)
+        transfer_s = c2c_transfer_time(nbytes, self.sim.link)
+        rec["final"] = dc
+        self.handoffs += 1
+        self.handoff_bytes += nbytes
+        self._dispatch_handoff(dc, nbytes, transfer_s,
+                               e.clock + transfer_s, e.clock)
+        return True
+
+    def _dispatch_handoff(self, dc: TrackedRequest, nbytes: int,
+                          transfer_s: float, t_arr: float,
+                          now: float) -> None:
+        f = self.fleet
+        targets = [n for n in self.nodes if n.pool == DECODE]
+        awake = [n for n in targets if not n.asleep]
+        if f.autoscale:
+            asleep = [n for n in targets if n.asleep]
+            if asleep and (not awake
+                           or min(self._dc_load(n) for n in awake)
+                           >= f.scale_up_queue):
+                # scale-up rides the handoff: the wake starts NOW (at
+                # the prefill finish), the KV lands at max(wake end,
+                # fabric arrival) — ClusterWake precedes the kv_handoff
+                # C2CTransfer on the woken node's timeline
+                n0 = asleep[0]
+                self._wake(n0, now)
+                awake.append(n0)
+        if not awake:
+            n0 = targets[0]
+            self._wake(n0, now)
+            awake = [n0]
+        node = min(awake, key=lambda n: (self._dc_load(n), n.node_id))
+        self._enqueue_handoff(node, dc, nbytes, transfer_s, t_arr)
+
+    def _enqueue_handoff(self, node: _Node, dc: TrackedRequest,
+                         nbytes: int, transfer_s: float,
+                         t_arr: float) -> None:
+        seq = self._handoff_seq
+        self._handoff_seq += 1
+        insort(node.handoffs, (t_arr, seq, dc, nbytes, transfer_s))
+        node.assigned.append(dc)
+
+    def _reroute_handoff(self, dc: TrackedRequest, nbytes: int,
+                         transfer_s: float, now: float,
+                         exclude: _Node) -> None:
+        """The chosen decode node can never hold this context (empty
+        and still over capacity): pay a second fabric hop to a node
+        that can, or reject if none exists."""
+        # identity-based removal: TrackedRequest.__eq__ compares arrival
+        # only, so list.remove could drop a different equal-arrival copy
+        for i, r in enumerate(exclude.assigned):
+            if r is dc:
+                del exclude.assigned[i]
+                break
+        feas = [n for n in self.nodes
+                if n.pool == DECODE and n is not exclude
+                and (n.eng.kv is None
+                     or n.eng.kv.feasible(dc.context + 1))]
+        if not feas:
+            rec = self._records[dc.request_id]
+            rec["rejected"] = True
+            self._fleet_rejected += 1
+            return
+        node = min(feas, key=lambda n: (self._dc_load(n), n.node_id))
+        if node.asleep:
+            self._wake(node, now)
+        self.rerouted += 1
+        self.handoff_bytes += nbytes
+        self._enqueue_handoff(node, dc, nbytes, transfer_s,
+                              now + transfer_s)
+
+    # -- node stepping -------------------------------------------------
+    def _step_node(self, node: _Node) -> None:
+        if node.pool == DECODE:
+            self._step_decode(node)
+        else:
+            node.eng.step(node.pending)
+        if self._backlog:
+            self._try_flush_backlog()
+        if self.fleet.autoscale:
+            self._maybe_sleep(node)
+
+    def _step_decode(self, node: _Node) -> None:
+        e = node.eng
+        now = e.clock
+        # import every handoff the fabric has delivered, in arrival
+        # order; a full node keeps the head QUEUED (re-tried next step —
+        # re-queue, never drop), an empty-but-infeasible one re-routes
+        while node.handoffs and node.handoffs[0][0] <= now:
+            t_a, seq, dc, nb, ts = node.handoffs[0]
+            if e.import_request(dc, nbytes=nb, transfer_s=ts):
+                node.handoffs.pop(0)
+                continue
+            if node._last_deferred_seq != seq:
+                node._last_deferred_seq = seq
+                node.requeued += 1
+                self.requeued += 1
+            if not e._active_idx:
+                # nothing resident and it still doesn't fit: no future
+                # free() can help — this node is permanently infeasible
+                # for this context
+                node.handoffs.pop(0)
+                self._reroute_handoff(dc, nb, ts, now, exclude=node)
+                continue
+            break
+        e.queue_depth.append((now, len(node.handoffs)))
+        if e._active_idx:
+            e._decode_round()
+        elif node.handoffs:
+            gap = max(0.0, node.handoffs[0][0] - e.clock)
+            e.timeline.sleep(gap, power_W=e._idle_power)
+            e.events.append((e.clock, EventKind.IDLE, -1))
+
+    def _try_flush_backlog(self) -> None:
+        limit = self.fleet.engine.queue_limit
+        while self._backlog:
+            open_nodes = [n for n in self.nodes
+                          if n.pool == PREFILL and not n.asleep
+                          and self._pf_load(n) < limit]
+            if not open_nodes:
+                return
+            req = self._backlog.popleft()
+            node = min(open_nodes,
+                       key=lambda n: (self._pf_load(n), n.node_id))
+            self._send_prefill(node, req, self._records[req.request_id])
+
+    def _maybe_sleep(self, node: _Node) -> None:
+        if node.asleep or self._node_horizon(node) is not math.inf:
+            return
+        awake = sum(1 for m in self.nodes
+                    if m.pool == node.pool and not m.asleep)
+        if awake > max(self.fleet.min_awake, 0):
+            node.asleep = True
+
+    def _wake(self, node: _Node, now: float) -> None:
+        """Wake a sleeping node at simulated time ``now``: pad its
+        timeline to the wake signal at retention power, then charge the
+        REAL CCPG cluster-walk latency as a ClusterWake event."""
+        e = node.eng
+        gap = now - e.clock
+        if gap > 0:
+            e.timeline.sleep(gap, power_W=e._idle_power)
+            e.events.append((e.clock, EventKind.IDLE, -1))
+        dt, cyc = self.sim.wake_seconds(self._alloc)
+        if dt:
+            e.timeline.wake(dt, power_W=e._busy_power, cycles=cyc,
+                            cluster=node.node_id)
+        node.asleep = False
+        node.wakes += 1
+        self.wakes += 1
+
+    # -- reporting -----------------------------------------------------
+    def _report(self) -> FleetReport:
+        f = self.fleet
+        wall = max(n.eng.timeline.now for n in self.nodes)
+        for n in self.nodes:
+            # pad every node to the cluster wall clock at its idle
+            # power, so per-node energy covers the whole run.  The
+            # 1-node gap is exactly 0.0 — no event, bare-engine
+            # byte-identity preserved.
+            gap = wall - n.eng.timeline.now
+            if gap > 0:
+                n.eng.timeline.sleep(gap, power_W=n.eng._idle_power)
+        node_reports = [n.eng._report(n.assigned) for n in self.nodes]
+        if len(self.nodes) > 1:
+            for nr, n in zip(node_reports, self.nodes):
+                nr.node_id = n.node_id
+                nr.pool = n.pool
+        lats: List[float] = []
+        ttfts: List[float] = []
+        finished = 0
+        for rec in self._records.values():
+            final = rec["final"]
+            if final is None or final.finished_at is None:
+                continue
+            finished += 1
+            arrival = rec["req"].arrival
+            lats.append(final.finished_at - arrival)
+            if final.first_token_at is not None:
+                ttfts.append(final.first_token_at - arrival)
+        nan = [np.nan]
+        lat_a = np.array(lats) if lats else np.array(nan)
+        ttft_a = np.array(ttfts) if ttfts else np.array(nan)
+        tokens = sum(nr.tokens_generated for nr in node_reports)
+        energy = sum(nr.energy_J for nr in node_reports)
+        rejected = (sum(nr.rejected for nr in node_reports)
+                    + self._fleet_rejected)
+        wall = max(wall, 1e-12)
+        return FleetReport(
+            n_nodes=len(self.nodes),
+            n_prefill=f.n_prefill if self._disagg else 0,
+            n_decode=f.n_decode if self._disagg else 0,
+            handoff=self._disagg,
+            n_requests=len(self._records),
+            finished=finished,
+            rejected=rejected,
+            wall_s=wall,
+            tokens_generated=tokens,
+            tokens_per_s=tokens / wall,
+            energy_J=energy,
+            tokens_per_J=tokens / max(energy, 1e-12),
+            p50_latency_s=float(np.percentile(lat_a, 50)),
+            p99_latency_s=float(np.percentile(lat_a, 99)),
+            p50_ttft_s=float(np.percentile(ttft_a, 50)),
+            p99_ttft_s=float(np.percentile(ttft_a, 99)),
+            handoffs=self.handoffs,
+            handoff_bytes=self.handoff_bytes,
+            requeued_handoffs=self.requeued,
+            rerouted_handoffs=self.rerouted,
+            wakes=self.wakes,
+            slo_rejected=self.slo_rejected,
+            node_reports=node_reports,
+        )
+
+    def save_chrome_trace(self, path) -> None:
+        """One merged chrome://tracing document, each node its own
+        process (pid = node id, named ``node<i>:<pool>``)."""
+        doc = merge_chrome_traces(
+            [(f"node{n.node_id}:{n.pool}", n.eng.timeline)
+             for n in self.nodes])
+        with open(path, "w") as fh:
+            json.dump(doc, fh)
+
+
+def fleet_serve(cfg, trace: Sequence[TrackedRequest], *,
+                fleet: Optional[FleetConfig] = None,
+                sim: Optional[PicnicSimulator] = None) -> FleetReport:
+    """One-call convenience wrapper: run ``trace`` through a fresh
+    fleet (the `repro.launch.fleet()` facade lands here)."""
+    return FleetEngine(cfg, fleet, sim=sim).run(trace)

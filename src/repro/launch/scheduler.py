@@ -31,6 +31,7 @@ class EventKind(str, Enum):
     REJECT = "reject"
     IDLE = "idle"        # used by launch/serving_engine (gap to next arrival)
     PREEMPT = "preempt"  # paged-KV watermark eviction (recompute-on-resume)
+    HANDOFF = "handoff"  # fleet: resident KV imported from a prefill node
 
 
 def deadline_at_risk(head: Optional["Request"], clock: float,

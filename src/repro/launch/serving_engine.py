@@ -60,10 +60,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from bisect import bisect_left
 from collections import deque
 from heapq import heappop, heappush
-from typing import Deque, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (Callable, Deque, Dict, Iterable, List, Optional,
+                    Sequence, Tuple)
 
 import numpy as np
 
@@ -73,6 +75,7 @@ from repro.core.interconnect import c2c_average_power
 from repro.core.scheduling import ChipletAllocation, allocate_chiplets
 from repro.core.simulator import PicnicSimulator
 from repro.core.timeline import Timeline
+from repro.launch.config import ServingConfig
 from repro.launch.scheduler import EventKind, Request, deadline_at_risk
 from repro.runtime.kv_cache import (BlockAllocator, KVCacheConfig,
                                     OutOfBlocks)
@@ -110,110 +113,133 @@ class TrackedRequest(Request):
 _TOKEN_STRIDE = 1 << 24     # id-space stride between synthetic vocab pools
 
 
-def poisson_trace(n_requests: int, rate_rps: float, *, seed: int = 0,
-                  prompt_len: int = 512, max_new: int = 64,
-                  prompt_jitter: float = 0.25,
-                  deadline_ttft: Optional[float] = None,
-                  prefix_len: int = 0, prefix_frac: float = 0.9,
-                  prefix_groups: int = 1) -> List[TrackedRequest]:
-    """Open-loop Poisson arrivals at ``rate_rps`` requests/second, with
-    prompt lengths jittered uniformly by +-``prompt_jitter``.  Arrivals
-    are monotone by construction (cumulative exponential gaps), so
-    ``run()`` never has to re-sort this trace.
+class Trace(List[TrackedRequest]):
+    """An arrival trace: a list of :class:`TrackedRequest` with the two
+    construction recipes as classmethods — ``Trace.poisson(...)`` for
+    open-loop synthetic arrivals and ``Trace.replay(rows)`` for recorded
+    ones (the ISSUE 9 unified trace surface, re-exported from
+    ``repro.launch``).  It subclasses ``list`` so every existing
+    consumer (engines, sweeps, benches) takes it unchanged; the legacy
+    ``poisson_trace`` / ``replay_trace`` module functions delegate here
+    and return the same object."""
 
-    With ``prefix_len > 0`` every request carries synthetic
-    ``prompt_tokens``: a ``prefix_frac`` share of requests open with one
-    of ``prefix_groups`` shared system prompts of ``prefix_len`` tokens
-    (positive ids, disjoint per group) followed by per-request unique
-    tokens (negative ids, disjoint per request) — the prefix-heavy
-    workload the sharing allocator deduplicates.  ``prefix_len = 0``
-    (the default) draws nothing extra from the RNG, so default traces
-    are byte-identical to the pre-sharing generator."""
-    rng = np.random.default_rng(seed)
-    t = 0.0
-    out: List[TrackedRequest] = []
-    for i in range(n_requests):
-        t += float(rng.exponential(1.0 / rate_rps))
-        p = max(1, int(round(prompt_len
-                             * (1.0 + prompt_jitter
-                                * float(rng.uniform(-1.0, 1.0))))))
-        tokens: Optional[Tuple[int, ...]] = None
-        if prefix_len > 0:
-            shares = float(rng.uniform()) < prefix_frac
-            g = int(rng.integers(prefix_groups)) if prefix_groups > 1 else 0
-            uniq = -(i * _TOKEN_STRIDE + 1)     # request-private pool
-            if shares:
-                pre = min(prefix_len, p - 1)
-                tokens = (tuple(g * _TOKEN_STRIDE + 1 + j
-                                for j in range(pre))
-                          + tuple(uniq - j for j in range(p - pre)))
+    @classmethod
+    def poisson(cls, n_requests: int, rate_rps: float, *, seed: int = 0,
+                prompt_len: int = 512, max_new: int = 64,
+                prompt_jitter: float = 0.25,
+                deadline_ttft: Optional[float] = None,
+                prefix_len: int = 0, prefix_frac: float = 0.9,
+                prefix_groups: int = 1) -> "Trace":
+        """Open-loop Poisson arrivals at ``rate_rps`` requests/second,
+        with prompt lengths jittered uniformly by +-``prompt_jitter``.
+        Arrivals are monotone by construction (cumulative exponential
+        gaps), so ``run()`` never has to re-sort this trace.
+
+        With ``prefix_len > 0`` every request carries synthetic
+        ``prompt_tokens``: a ``prefix_frac`` share of requests open with
+        one of ``prefix_groups`` shared system prompts of ``prefix_len``
+        tokens (positive ids, disjoint per group) followed by
+        per-request unique tokens (negative ids, disjoint per request)
+        — the prefix-heavy workload the sharing allocator deduplicates.
+        ``prefix_len = 0`` (the default) draws nothing extra from the
+        RNG, so default traces are byte-identical to the pre-sharing
+        generator."""
+        rng = np.random.default_rng(seed)
+        t = 0.0
+        out = cls()
+        for i in range(n_requests):
+            t += float(rng.exponential(1.0 / rate_rps))
+            p = max(1, int(round(prompt_len
+                                 * (1.0 + prompt_jitter
+                                    * float(rng.uniform(-1.0, 1.0))))))
+            tokens: Optional[Tuple[int, ...]] = None
+            if prefix_len > 0:
+                shares = float(rng.uniform()) < prefix_frac
+                g = (int(rng.integers(prefix_groups))
+                     if prefix_groups > 1 else 0)
+                uniq = -(i * _TOKEN_STRIDE + 1)     # request-private pool
+                if shares:
+                    pre = min(prefix_len, p - 1)
+                    tokens = (tuple(g * _TOKEN_STRIDE + 1 + j
+                                    for j in range(pre))
+                              + tuple(uniq - j for j in range(p - pre)))
+                else:
+                    tokens = tuple(uniq - j for j in range(p))
+            out.append(TrackedRequest(arrival=t, request_id=i,
+                                      prompt_len=p, max_new=max_new,
+                                      deadline_ttft=deadline_ttft,
+                                      prompt_tokens=tokens))
+        return out
+
+    @classmethod
+    def replay(cls, rows: Iterable) -> "Trace":
+        """Replay recorded arrivals.  ``rows`` are ``(arrival_s,
+        prompt_len, max_new)`` or ``(arrival_s, prompt_len, max_new,
+        deadline_ttft)`` tuples, or dicts with those keys
+        (``deadline_ttft`` optional in both forms).  The returned trace
+        is sorted by arrival ONCE here (stable, after request ids are
+        assigned in row order) so every ``run()`` re-use skips the
+        per-run re-sort."""
+        out = cls()
+        for i, row in enumerate(rows):
+            if isinstance(row, dict):
+                out.append(TrackedRequest(
+                    arrival=float(row["arrival_s"]), request_id=i,
+                    prompt_len=int(row["prompt_len"]),
+                    max_new=int(row["max_new"]),
+                    deadline_ttft=row.get("deadline_ttft")))
             else:
-                tokens = tuple(uniq - j for j in range(p))
-        out.append(TrackedRequest(arrival=t, request_id=i, prompt_len=p,
-                                  max_new=max_new,
-                                  deadline_ttft=deadline_ttft,
-                                  prompt_tokens=tokens))
-    return out
+                arrival, prompt_len, max_new, *rest = row
+                deadline = rest[0] if rest else None
+                out.append(TrackedRequest(
+                    arrival=float(arrival), request_id=i,
+                    prompt_len=int(prompt_len), max_new=int(max_new),
+                    deadline_ttft=(None if deadline is None
+                                   else float(deadline))))
+        out.sort()      # stable on arrival — same order `sorted()` gave
+        return out
 
 
-def replay_trace(rows: Iterable) -> List[TrackedRequest]:
-    """Replay recorded arrivals.  ``rows`` are ``(arrival_s, prompt_len,
-    max_new)`` or ``(arrival_s, prompt_len, max_new, deadline_ttft)``
-    tuples, or dicts with those keys (``deadline_ttft`` optional in both
-    forms).  The returned trace is sorted by arrival ONCE here (stable,
-    after request ids are assigned in row order) so every ``run()``
-    re-use skips the per-run re-sort."""
-    out: List[TrackedRequest] = []
-    for i, row in enumerate(rows):
-        if isinstance(row, dict):
-            out.append(TrackedRequest(
-                arrival=float(row["arrival_s"]), request_id=i,
-                prompt_len=int(row["prompt_len"]),
-                max_new=int(row["max_new"]),
-                deadline_ttft=row.get("deadline_ttft")))
-        else:
-            arrival, prompt_len, max_new, *rest = row
-            deadline = rest[0] if rest else None
-            out.append(TrackedRequest(
-                arrival=float(arrival), request_id=i,
-                prompt_len=int(prompt_len), max_new=int(max_new),
-                deadline_ttft=None if deadline is None else float(deadline)))
-    out.sort()          # stable on arrival — same order `sorted()` gave
-    return out
+def poisson_trace(n_requests: int, rate_rps: float, **kw) -> Trace:
+    """Legacy spelling of :meth:`Trace.poisson` (same signature)."""
+    return Trace.poisson(n_requests, rate_rps, **kw)
+
+
+def replay_trace(rows: Iterable) -> Trace:
+    """Legacy spelling of :meth:`Trace.replay`."""
+    return Trace.replay(rows)
 
 
 # ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class EngineConfig:
-    max_batch: int = 8          # KV-cache slots = max co-resident requests
-    queue_limit: int = 256      # admission queue bound (then reject)
-    decode_quantum: int = 4     # decode rounds per allowed prefill
-    ccpg: bool = False          # cluster power gating (paper §II-E)
-    dynamic_ccpg: bool = False  # full ClusterWake latency per iteration
-    #                             instead of the folded pre-wake residue
-    overlap: float = 0.0        # fraction of decode C2C hidden by compute
-    max_iters: int = 2_000_000  # safety valve for the event loop
-    # -- paged KV cache (None = capacity unbounded, paging off; the
-    #    default path stays byte-identical to timeline_golden.json) -----
-    kv_cache: Optional[KVCacheConfig] = None
-    # chunked prefill: prompts longer than this are prefilled in chunks
-    # of at most this many tokens, one chunk per engine iteration, so a
-    # long prompt cannot monopolize an iteration (0 = off)
-    chunked_prefill_tokens: int = 0
-    # columnar TimelineIR recording (the fast simulation core).  False
-    # restores the one-dataclass-per-append reference recorder — both
-    # are byte-identical (tests/test_fastpath.py); the toggle exists for
-    # the equivalence tests and the microbench before/after measurement.
-    columnar_timeline: bool = True
-    # aggregate-only TimelineIR recording (the sweep-engine recorder):
-    # running sums and counts only, NO event stream — reading
-    # `timeline.events` / exporting a trace raises.  Every report-level
-    # aggregate stays byte-identical to the other recorders (same float
-    # adds in the same order); takes precedence over columnar_timeline.
-    aggregate_timeline: bool = False
+# legacy positional field order of the pre-ISSUE-9 EngineConfig — the
+# shim maps positional construction through it
+_LEGACY_ENGINE_FIELDS = tuple(
+    f.name for f in dataclasses.fields(ServingConfig))
+
+
+class EngineConfig(ServingConfig):
+    """DEPRECATED alias of :class:`repro.launch.config.ServingConfig`.
+
+    Same fields and defaults; still accepts the legacy positional form.
+    Construction emits a ``DeprecationWarning`` (asserted by
+    tests/test_serving_api.py) — new code should build the keyword-only,
+    versioned ``ServingConfig`` instead."""
+
+    def __init__(self, *args, **kw):
+        warnings.warn(
+            "EngineConfig is deprecated; construct repro.launch."
+            "ServingConfig (keyword-only, to_dict/from_dict) instead",
+            DeprecationWarning, stacklevel=2)
+        if args:
+            if len(args) > len(_LEGACY_ENGINE_FIELDS):
+                raise TypeError(
+                    f"EngineConfig takes at most "
+                    f"{len(_LEGACY_ENGINE_FIELDS)} positional arguments")
+            kw = {**dict(zip(_LEGACY_ENGINE_FIELDS, args)), **kw}
+        super().__init__(**kw)
 
 
 @dataclasses.dataclass
@@ -268,6 +294,13 @@ class ServingReport:
     queue_depth: List[Tuple[float, int]]   # (clock_s, waiting) timeline
     c2c_bytes_total: int
     ccpg: bool
+    # fleet attribution (launch/fleet_engine.py): which node produced this
+    # report and its pool role ("prefill" | "decode" | "combined").
+    # Both stay None on single-node runs — and row() then omits them —
+    # so every pre-fleet BENCH_*.json artifact and the regression gate
+    # remain byte-identical.
+    node_id: Optional[int] = None
+    pool: Optional[str] = None
 
     def row(self) -> Dict:
         def _r(x: float, nd: int):
@@ -275,7 +308,7 @@ class ServingReport:
             # become None so the row stays strict-JSON serializable
             # instead of emitting bare `NaN` tokens
             return None if math.isnan(x) else round(x, nd)
-        return {
+        out = {
             "requests": self.n_requests,
             "finished": self.finished,
             "rejected": self.rejected,
@@ -290,6 +323,10 @@ class ServingReport:
             "max_queue_depth": self.max_queue_depth,
             "wall_s": _r(self.wall_s, 4),
         }
+        if self.node_id is not None:
+            out["node_id"] = self.node_id
+            out["pool"] = self.pool
+        return out
 
     def summary(self) -> str:
         lines = [
@@ -324,11 +361,19 @@ class ContinuousBatchingEngine:
     """
 
     def __init__(self, cfg, sim: Optional[PicnicSimulator] = None,
-                 engine: Optional[EngineConfig] = None,
+                 engine: Optional[ServingConfig] = None,
                  alloc: Optional[ChipletAllocation] = None):
         self.cfg = cfg
         self.sim = sim if sim is not None else PicnicSimulator()
-        self.engine = engine if engine is not None else EngineConfig()
+        self.engine = engine if engine is not None else ServingConfig()
+        # fleet hook: called at every request-finish site with the
+        # finished request; returning True transfers KV ownership to the
+        # caller (the engine then skips its own `kv.free`).  Installed
+        # once by FleetEngine on prefill nodes; survives reset() so a
+        # re-run keeps its wiring.  None (the default) is checked with
+        # `is not None` at each site, keeping the single-node float/event
+        # sequence byte-identical.
+        self.on_finish: Optional[Callable[[TrackedRequest], bool]] = None
         # `alloc` lets N engines of a sweep grid share one allocation
         # object (allocate_chiplets is deterministic, so sharing changes
         # id()-keyed memo hit rates, never results); default: private.
@@ -706,7 +751,9 @@ class ContinuousBatchingEngine:
             req.finished_at = self.clock
             self.events.append((self.clock, EventKind.FINISH,
                                 req.request_id))
-            if self.kv is not None:
+            handed = (self.on_finish is not None
+                      and bool(self.on_finish(req)))
+            if self.kv is not None and not handed:
                 self.kv.free(req.request_id)
         else:
             req.admit_seq = self._admit_counter
@@ -884,6 +931,8 @@ class ContinuousBatchingEngine:
                 req.finished_at = clock
                 events.append((clock, EventKind.FINISH, req.request_id))
                 self._slot_release(i)
+                if self.on_finish is not None:
+                    self.on_finish(req)  # no KV to hand on this path
             return
         # paged path: preemption can interrupt any resident mid-decode,
         # so per-round object state must stay exact
@@ -896,6 +945,8 @@ class ContinuousBatchingEngine:
                 req.finished_at = clock
                 events.append((clock, EventKind.FINISH, req.request_id))
                 self._slot_release(i)
+                if self.on_finish is not None and self.on_finish(req):
+                    continue        # KV ownership handed to the fleet
                 kv.free(req.request_id)
 
     def step(self, pending: Deque[TrackedRequest]) -> EventKind:
@@ -937,6 +988,51 @@ class ContinuousBatchingEngine:
             self.events.append((self.clock, EventKind.IDLE, -1))
             return EventKind.IDLE
         return EventKind.IDLE
+
+    # ------------------------------------------------------------------
+    def import_request(self, req: TrackedRequest, *, nbytes: int = 0,
+                       transfer_s: float = 0.0) -> bool:
+        """Admit a request whose prefill (and first token) ran on
+        ANOTHER engine, arriving with resident KV over the fabric — the
+        decode-side half of the fleet's prefill->decode handoff.
+
+        Occupies a slot directly (no prefill compute here); with paging
+        on, a fresh LOCAL block table covering ``req.context`` tokens is
+        allocated (`BlockAllocator.import_table` — block ids never
+        travel between allocators, only the footprint does).  The KV
+        payload lands on this node's timeline as a non-advancing
+        ``C2CTransfer`` (phase ``"kv_handoff"``): the fleet already
+        folded the transfer latency into the request's arrival time, so
+        the event prices bytes/energy, not time.  Returns False with
+        state untouched when no slot is free or the blocks don't fit —
+        the caller re-queues (never drops)."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        if self.kv is not None:
+            reserve = (self.kv.cfg.watermark_blocks
+                       if self._active_idx else 0)
+            if not self.kv.can_admit(req.context + 1, reserve=reserve):
+                return False
+            try:
+                self.kv.import_table(req.request_id, req.context)
+            except OutOfBlocks:
+                # fragmented growth raced the headroom check: roll back
+                if req.request_id in self.kv.tables:
+                    self.kv.free(req.request_id)
+                return False
+        if nbytes:
+            self.timeline.c2c(nbytes, phase="kv_handoff", source="fleet",
+                              dur_s=transfer_s)
+        req.admit_seq = self._admit_counter
+        self._admit_counter += 1
+        self._slot_occupy(slot, req)
+        if self.kv is None:
+            heappush(self._finish_heap,
+                     (self._round_no + req.max_new - req.generated, slot))
+        self.events.append((self.clock, EventKind.HANDOFF,
+                            req.request_id))
+        return True
 
     # ------------------------------------------------------------------
     def _prepare_run(self, trace: Sequence[TrackedRequest]
@@ -1049,5 +1145,5 @@ def serve_trace(cfg, trace: Sequence[TrackedRequest], *,
     """One-call convenience wrapper: run ``trace`` through a fresh engine."""
     eng = ContinuousBatchingEngine(
         cfg, sim=sim,
-        engine=EngineConfig(max_batch=max_batch, ccpg=ccpg, **engine_kw))
+        engine=ServingConfig(max_batch=max_batch, ccpg=ccpg, **engine_kw))
     return eng.run(trace)

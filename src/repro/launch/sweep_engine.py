@@ -101,9 +101,10 @@ from repro.core.scheduling import (ChipletAllocation, DecodeCostSurface,
                                    allocate_chiplets)
 from repro.core.simulator import PicnicSimulator
 from repro.core.timeline import SweepAggregates
+from repro.launch.config import ServingConfig
 from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                         EngineConfig, KVCacheStats,
-                                         ServingReport, TrackedRequest)
+                                         KVCacheStats, ServingReport,
+                                         TrackedRequest)
 
 log = logging.getLogger(__name__)
 
@@ -123,7 +124,8 @@ class SweepCell:
     key: str
     cfg: object
     trace: Sequence[TrackedRequest]
-    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+    engine: ServingConfig = dataclasses.field(
+        default_factory=ServingConfig)
     sim: Optional[PicnicSimulator] = None
 
 

@@ -123,6 +123,22 @@ class BlockTable:
         return len(self.blocks) - self.n_dram
 
 
+@dataclass(frozen=True)
+class KVHandoff:
+    """The serialized block set of one finished-prefill request — what
+    moves over the photonic fabric in a prefill -> decode node handoff
+    (launch/fleet_engine.py).  The simulator carries no tensor data, so only
+    the logical shape travels: the context token count and the
+    block-padded byte footprint.  The destination allocator
+    re-materializes a fresh LOCAL table from it (:meth:`BlockAllocator
+    .import_table`); physical block ids are allocator-private and never
+    cross nodes."""
+    request_id: int
+    tokens: int                 # context tokens the table covered
+    n_blocks: int
+    nbytes: int                 # block-padded wire footprint
+
+
 _CHAIN_SEED = 0x9E3779B9   # root of every prefix hash chain
 
 
@@ -190,6 +206,11 @@ class BlockAllocator:
         self.cow_copied_bytes = 0
         self.n_shared_blocks = 0      # blocks with refcnt >= 2 right now
         self.peak_shared_blocks = 0
+        # fleet handoff accounting (kept OFF KVCacheStats.row() so
+        # single-node paged artifacts stay byte-identical)
+        self.exported_tables = 0
+        self.exported_bytes = 0
+        self.imported_tables = 0
 
     # -- tier predicates ----------------------------------------------
     def is_dram(self, block_id: int) -> bool:
@@ -311,6 +332,39 @@ class BlockAllocator:
         for b in reversed(t.blocks):
             self._release_block(b, request_id)
         return len(t.blocks)
+
+    # -- fleet handoff (serialize / re-admit a resident block set) -----
+    def export_table(self, request_id: int) -> KVHandoff:
+        """Serialize ``request_id``'s block set for a cross-node handoff
+        and RELEASE it locally: the returned :class:`KVHandoff` carries
+        the logical footprint (tokens, blocks, block-padded bytes) that
+        rides the fabric; the physical blocks go back to this
+        allocator's free lists (and leave the prefix index with their
+        last reader, like any :meth:`free`)."""
+        t = self.tables[request_id]
+        h = KVHandoff(request_id=request_id, tokens=t.tokens,
+                      n_blocks=len(t.blocks),
+                      nbytes=len(t.blocks) * self.cfg.block_bytes)
+        self.free(request_id)
+        self.exported_tables += 1
+        self.exported_bytes += h.nbytes
+        return h
+
+    def import_table(self, request_id: int, tokens) -> int:
+        """Re-admit a handed-off block set on THIS allocator: allocate
+        fresh local blocks covering ``tokens`` context tokens (a
+        :class:`KVHandoff` or a plain count).  Raises
+        :class:`OutOfBlocks` like :meth:`ensure` (partial growth kept —
+        the caller frees or retries) and ``ValueError`` if the id is
+        already resident.  Returns the number of blocks allocated."""
+        if isinstance(tokens, KVHandoff):
+            tokens = tokens.tokens
+        if request_id in self.tables:
+            raise ValueError(
+                f"request {request_id} already resident; cannot import")
+        n = self.ensure(request_id, int(tokens))
+        self.imported_tables += 1
+        return n
 
     # -- refcount plumbing ---------------------------------------------
     def _append_new(self, t: BlockTable, block: int) -> None:

@@ -16,7 +16,7 @@ from repro.core import (C2CTransfer, ClusterWake, ComputeSpan, CycleModel,
                         EnergySample, PicnicSimulator, Timeline, TokenEmit)
 from repro.core.scheduling import allocate_chiplets
 from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                         EngineConfig, poisson_trace,
+                                         ServingConfig, poisson_trace,
                                          replay_trace)
 from repro.runtime.kv_cache import KVCacheConfig, kv_bytes_per_token
 
@@ -27,6 +27,11 @@ GOLDEN = json.loads(
 def _hexdict(obj) -> dict:
     d = dataclasses.asdict(obj)
     d.pop("queue_depth", None)
+    # per-node attribution (ISSUE 9 fleet) stays None outside a fleet and
+    # is absent from the committed golden — drop it exactly when unset
+    for k in ("node_id", "pool"):
+        if k in d and d[k] is None:
+            d.pop(k)
     return {k: (v.hex() if isinstance(v, float) else v) for k, v in d.items()}
 
 
@@ -38,10 +43,10 @@ def cfg():
 def _engine_pair(cfg, **engine_kw):
     """(fast, reference): identical policy/config, different recorders."""
     fast = ContinuousBatchingEngine(
-        cfg, sim=PicnicSimulator(), engine=EngineConfig(**engine_kw))
+        cfg, sim=PicnicSimulator(), engine=ServingConfig(**engine_kw))
     ref = ContinuousBatchingEngine(
         cfg, sim=PicnicSimulator(cycle_model=CycleModel(memoize=False)),
-        engine=EngineConfig(columnar_timeline=False, **engine_kw))
+        engine=ServingConfig(columnar_timeline=False, **engine_kw))
     return fast, ref
 
 
@@ -139,7 +144,7 @@ def test_serving_golden_byte_identical_both_recorders(cfg, columnar):
     byte-for-byte by BOTH recording modes of the SoA engine."""
     for key in sorted(GOLDEN["serving"]):
         eng = ContinuousBatchingEngine(
-            cfg, engine=EngineConfig(max_batch=4, ccpg=(key == "ccpg=True"),
+            cfg, engine=ServingConfig(max_batch=4, ccpg=(key == "ccpg=True"),
                                      columnar_timeline=columnar))
         rep = eng.run(poisson_trace(24, rate_rps=40, seed=0, prompt_len=256,
                                     max_new=32))
@@ -335,7 +340,7 @@ def test_engine_fallback_hands_subclass_real_contexts(cfg):
     def run(cm):
         eng = ContinuousBatchingEngine(
             cfg, sim=PicnicSimulator(cycle_model=cm),
-            engine=EngineConfig(max_batch=3, decode_quantum=1))
+            engine=ServingConfig(max_batch=3, decode_quantum=1))
         return eng.run(replay_trace(rows))
 
     r_sub = run(PerRequest())                # memoized: probes -> affine?
@@ -388,7 +393,7 @@ def test_run_handles_hand_built_unsorted_trace(cfg):
         TrackedRequest(arrival=0.4, request_id=0, prompt_len=16, max_new=2),
         TrackedRequest(arrival=0.0, request_id=1, prompt_len=16, max_new=2),
     ]
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(max_batch=2))
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(max_batch=2))
     rep = eng.run(unsorted_trace)
     assert rep.finished == 2
     prefills = {rid: t for t, k, rid in eng.events if k.value == "prefill"}
@@ -397,7 +402,7 @@ def test_run_handles_hand_built_unsorted_trace(cfg):
 
 def test_rerun_after_construction_sort_is_idempotent(cfg):
     trace = replay_trace([(0.2, 32, 4), (0.0, 64, 8)])
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(max_batch=2))
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(max_batch=2))
     assert eng.run(trace).row() == eng.run(trace).row()
 
 
@@ -419,7 +424,7 @@ def test_dump_chrome_trace_streams_identical_json(cfg, tmp_path):
 
 def test_engine_streamed_trace_has_all_categories(cfg, tmp_path):
     eng = ContinuousBatchingEngine(
-        cfg, engine=EngineConfig(max_batch=2, ccpg=True, dynamic_ccpg=True))
+        cfg, engine=ServingConfig(max_batch=2, ccpg=True, dynamic_ccpg=True))
     eng.run(replay_trace([(0.0, 32, 4), (0.5, 32, 4)]))
     path = tmp_path / "eng.json"
     eng.timeline.save_chrome_trace(path)        # alias of dump_

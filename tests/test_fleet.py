@@ -1,0 +1,348 @@
+"""Disaggregated prefill/decode fleet (ISSUE 9 tentpole).
+
+Locks the launch/fleet_engine.py contract:
+
+  * a 1-node combined fleet (handoff off) reproduces the bare
+    ContinuousBatchingEngine EXACTLY — hex-identical report floats, the
+    same event log and the same timeline event stream;
+  * disaggregated runs finish every request, price every handoff as a
+    phase="kv_handoff" C2CTransfer on the decode side, and attribute
+    per-node reports (node_id / pool);
+  * router edge cases: an all-busy prefill pool HOLDS arrivals in the
+    backlog (never drops), a full decode node re-queues an out-of-blocks
+    handoff (never drops), a permanently infeasible one re-routes or
+    rejects;
+  * autoscaling: a scale-up wake rides the handoff, so ClusterWake
+    precedes the first kv_handoff C2CTransfer on the woken node's
+    timeline.
+"""
+import copy
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import PicnicSimulator
+from repro.core.timeline import C2CTransfer, ClusterWake
+from repro.launch import FleetConfig, ServingConfig, Trace
+from repro.launch.fleet_engine import DECODE, PREFILL, FleetEngine, fleet_serve
+from repro.launch.serving_engine import ContinuousBatchingEngine
+from repro.runtime.kv_cache import KVCacheConfig
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama3.2-1b")
+
+
+def _trace(n=24, rate=40, prompt=256, max_new=32, seed=0, **kw):
+    return Trace.poisson(n, rate_rps=rate, seed=seed, prompt_len=prompt,
+                         max_new=max_new, **kw)
+
+
+def _hexdict(obj) -> dict:
+    d = dataclasses.asdict(obj)
+    d.pop("queue_depth", None)
+    return {k: (v.hex() if isinstance(v, float) else v)
+            for k, v in d.items()}
+
+
+def _hexevents(timeline):
+    out = []
+    for e in timeline.events:
+        out.append(tuple(v.hex() if isinstance(v, float) else v
+                         for v in dataclasses.astuple(e)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Degenerate identity: 1-node combined fleet == bare engine
+# ---------------------------------------------------------------------------
+
+def test_one_node_combined_fleet_identical_to_bare_engine(cfg):
+    """The fleet layer adds NOTHING on the degenerate path: same report
+    (hex floats), same event log, same timeline event stream, same
+    final clock."""
+    ecfg = ServingConfig(max_batch=4, ccpg=True)
+    trace = _trace()
+
+    bare = ContinuousBatchingEngine(cfg, sim=PicnicSimulator(), engine=ecfg)
+    rep = bare.run([copy.copy(r) for r in trace])
+
+    fe = FleetEngine(cfg,
+                     FleetConfig(n_prefill=1, n_decode=0, handoff=False,
+                                 engine=ecfg),
+                     sim=PicnicSimulator())
+    frep = fe.run([copy.copy(r) for r in trace])
+
+    node = fe.nodes[0]
+    nrep = frep.node_reports[0]
+    # single-node fleet: attribution stays None, row() omits it — the
+    # BENCH artifact schema is unchanged
+    assert nrep.node_id is None and nrep.pool is None
+    assert "node_id" not in nrep.row()
+    assert _hexdict(nrep) == _hexdict(rep)
+    assert node.eng.events == bare.events
+    assert _hexevents(node.eng.timeline) == _hexevents(bare.timeline)
+    assert node.eng.timeline.now.hex() == bare.timeline.now.hex()
+    # fleet aggregate mirrors the single node
+    assert frep.finished == rep.finished
+    assert frep.tokens_generated == rep.tokens_generated
+    assert frep.handoffs == 0 and frep.handoff_bytes == 0
+
+
+def test_fleet_serve_wrapper_matches_engine(cfg):
+    ecfg = ServingConfig(max_batch=4)
+    trace = _trace(n=8)
+    r1 = fleet_serve(cfg, [copy.copy(r) for r in trace],
+                     fleet=FleetConfig(engine=ecfg), sim=PicnicSimulator())
+    r2 = FleetEngine(cfg, FleetConfig(engine=ecfg),
+                     sim=PicnicSimulator()).run([copy.copy(r) for r in trace])
+    assert r1.row() == r2.row()
+
+
+# ---------------------------------------------------------------------------
+# Disaggregation: handoff accounting + attribution
+# ---------------------------------------------------------------------------
+
+def test_disagg_finishes_all_and_prices_handoffs(cfg):
+    ecfg = ServingConfig(max_batch=4, ccpg=True)
+    fe = FleetEngine(cfg,
+                     FleetConfig(n_prefill=1, n_decode=1, engine=ecfg),
+                     sim=PicnicSimulator())
+    trace = _trace()
+    rep = fe.run([copy.copy(r) for r in trace])
+    assert rep.finished == len(trace)
+    assert rep.rejected == 0
+    assert rep.handoffs == len(trace)       # every request decodes remotely
+    assert rep.handoff_bytes > 0
+    # the decode node's timeline carries one kv_handoff C2CTransfer per
+    # handoff, and their wire bytes sum to the fleet's accounting
+    dc = next(n for n in fe.nodes if n.pool == DECODE)
+    c2c = [e for e in dc.eng.timeline.events
+           if isinstance(e, C2CTransfer) and e.phase == "kv_handoff"]
+    assert len(c2c) == rep.handoffs
+    assert sum(e.nbytes for e in c2c) == rep.handoff_bytes
+    assert all(e.source == "fleet" for e in c2c)
+    # multi-node run: per-node attribution is set and surfaces in row()
+    for nr, n in zip(rep.node_reports, fe.nodes):
+        assert nr.node_id == n.node_id and nr.pool == n.pool
+        assert nr.row()["pool"] in (PREFILL, DECODE)
+    # TTFT comes from the prefill node, full latency from the decode
+    # node — both present in the fleet aggregate
+    assert rep.p50_ttft_s < rep.p50_latency_s
+
+
+def test_handoff_bytes_analytic_pricing(cfg):
+    """With no paged cache the wire bytes are context * bytes/token
+    (Table-II-style analytic), overridable per fleet."""
+    bpt = 1000
+    ecfg = ServingConfig(max_batch=4)
+    fe = FleetEngine(cfg,
+                     FleetConfig(n_prefill=1, n_decode=1, engine=ecfg,
+                                 handoff_bytes_per_token=bpt),
+                     sim=PicnicSimulator())
+    trace = _trace(n=6)
+    rep = fe.run([copy.copy(r) for r in trace])
+    # context at handoff = prompt + the prefill-emitted first token
+    expect = sum((r.prompt_len + 1) * bpt for r in trace)
+    assert rep.handoff_bytes == expect
+
+
+def test_max_new_one_requests_finish_at_prefill(cfg):
+    """A request that only wants one token never ships KV anywhere."""
+    ecfg = ServingConfig(max_batch=4)
+    fe = FleetEngine(cfg,
+                     FleetConfig(n_prefill=1, n_decode=1, engine=ecfg),
+                     sim=PicnicSimulator())
+    trace = _trace(n=6, max_new=1)
+    rep = fe.run([copy.copy(r) for r in trace])
+    assert rep.finished == len(trace)
+    assert rep.handoffs == 0 and rep.handoff_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# Router edge cases
+# ---------------------------------------------------------------------------
+
+def test_all_prefill_pool_busy_holds_backlog(cfg):
+    """Every awake prefill queue full -> the router HOLDS the arrival in
+    its backlog and re-dispatches after node steps; nothing drops."""
+    ecfg = ServingConfig(max_batch=2, queue_limit=2)
+    fe = FleetEngine(cfg,
+                     FleetConfig(n_prefill=1, n_decode=1, engine=ecfg),
+                     sim=PicnicSimulator())
+    # a burst: 16 arrivals at effectively the same instant swamp a
+    # queue_limit=2 node many times over
+    trace = _trace(n=16, rate=100000, prompt=256, max_new=8)
+    rep = fe.run([copy.copy(r) for r in trace])
+    assert rep.finished == len(trace)
+    assert rep.rejected == 0
+
+
+def test_router_rejects_past_its_own_bound(cfg):
+    ecfg = ServingConfig(max_batch=2, queue_limit=1)
+    fe = FleetEngine(cfg,
+                     FleetConfig(n_prefill=1, n_decode=1, engine=ecfg,
+                                 queue_limit=2),
+                     sim=PicnicSimulator())
+    trace = _trace(n=12, rate=100000, prompt=256, max_new=8)
+    rep = fe.run([copy.copy(r) for r in trace])
+    assert rep.rejected > 0
+    assert rep.finished + rep.rejected == len(trace)
+
+
+def test_decode_oob_requeues_instead_of_dropping(cfg):
+    """A decode node out of KV blocks keeps the handoff queued until a
+    resident finishes — re-queued, never dropped."""
+    # one resident context (256 prompt + 32 new ~ 18 blocks) fits, two
+    # do not -> the second import must wait for the first to free
+    kvc = KVCacheConfig(n_blocks=24, block_tokens=16, dram_blocks=0,
+                        bytes_per_token=4096)
+    ecfg = ServingConfig(max_batch=4, kv_cache=kvc,
+                         chunked_prefill_tokens=128)
+    fe = FleetEngine(cfg,
+                     FleetConfig(n_prefill=1, n_decode=1, engine=ecfg),
+                     sim=PicnicSimulator())
+    trace = _trace(n=4, rate=100000, prompt=256, max_new=32)
+    rep = fe.run([copy.copy(r) for r in trace])
+    assert rep.finished == len(trace)
+    assert rep.rejected == 0
+    assert rep.requeued_handoffs >= 1
+
+
+def test_infeasible_handoff_reroutes_or_rejects(cfg):
+    """_reroute_handoff: a context no decode node can ever hold is
+    rejected (not dropped silently, not retried forever); with a
+    feasible sibling it pays a second hop instead."""
+    kvc = KVCacheConfig(n_blocks=24, block_tokens=16, dram_blocks=0,
+                        bytes_per_token=4096)
+    ecfg = ServingConfig(max_batch=4, kv_cache=kvc)
+    fe = FleetEngine(cfg,
+                     FleetConfig(n_prefill=1, n_decode=2, engine=ecfg),
+                     sim=PicnicSimulator())
+    fe.run([copy.copy(r) for r in _trace(n=2, max_new=4)])  # prime state
+
+    nodes = [n for n in fe.nodes if n.pool == DECODE]
+    # a context far past every node's capacity: reject
+    big = _trace(n=1)[0]
+    big.context = 10_000
+    fe._records[big.request_id] = {"req": big, "final": big,
+                                   "rejected": False, "eta": 0.0}
+    before = fe._fleet_rejected
+    fe._reroute_handoff(big, 123, 1e-6, now=0.0, exclude=nodes[0])
+    assert fe._records[big.request_id]["rejected"]
+    assert fe._fleet_rejected == before + 1
+    # a small context re-routes to the sibling decode node
+    small = _trace(n=1, seed=1)[0]
+    small.request_id = 999
+    small.context = 64
+    fe._records[999] = {"req": small, "final": small,
+                        "rejected": False, "eta": 0.0}
+    rerouted_before = fe.rerouted
+    fe._reroute_handoff(small, 123, 1e-6, now=0.0, exclude=nodes[0])
+    assert fe.rerouted == rerouted_before + 1
+    assert any(h[2] is small for h in nodes[1].handoffs)
+
+
+def test_slo_admission_rejects_unreachable_deadlines(cfg):
+    """Opt-in SLO gate: a TTFT deadline the least-loaded prefill node
+    already cannot meet rejects at the router, before burning prefill."""
+    ecfg = ServingConfig(max_batch=2)
+    fe = FleetEngine(cfg,
+                     FleetConfig(n_prefill=1, n_decode=1, engine=ecfg,
+                                 slo_admission=True),
+                     sim=PicnicSimulator())
+    # deadline far below one prefill's latency: everything but the
+    # impossible is rejected up front
+    trace = _trace(n=8, rate=2000, prompt=2048, max_new=8,
+                   deadline_ttft=1e-6)
+    rep = fe.run([copy.copy(r) for r in trace])
+    assert rep.slo_rejected > 0
+    assert rep.finished + rep.rejected == len(trace)
+
+
+# ---------------------------------------------------------------------------
+# Autoscaling
+# ---------------------------------------------------------------------------
+
+def test_wake_rides_handoff_ordering(cfg):
+    """Scale-up during a handoff: the woken decode node's timeline shows
+    the ClusterWake BEFORE its first kv_handoff C2CTransfer — the wake
+    starts at the prefill finish, the KV lands after."""
+    ecfg = ServingConfig(max_batch=4, ccpg=True)
+    fe = FleetEngine(cfg,
+                     FleetConfig(n_prefill=2, n_decode=2, engine=ecfg,
+                                 autoscale=True, min_awake=1,
+                                 scale_up_queue=2),
+                     sim=PicnicSimulator())
+    rep = fe.run([copy.copy(r) for r in _trace(n=24, rate=40)])
+    assert rep.finished == 24
+    assert rep.wakes > 0
+    # the second decode node started asleep; if traffic woke it, its
+    # event stream must open with the wake, not the transfer
+    woken = [n for n in fe.nodes
+             if n.pool == DECODE and n.node_id >= 3 and n.wakes > 0]
+    assert woken, "expected the initially-asleep decode node to wake"
+    for n in woken:
+        evs = n.eng.timeline.events
+        i_wake = next(i for i, e in enumerate(evs)
+                      if isinstance(e, ClusterWake))
+        i_kv = next(i for i, e in enumerate(evs)
+                    if isinstance(e, C2CTransfer)
+                    and e.phase == "kv_handoff")
+        assert i_wake < i_kv
+
+
+def test_autoscale_off_never_wakes(cfg):
+    ecfg = ServingConfig(max_batch=4)
+    fe = FleetEngine(cfg,
+                     FleetConfig(n_prefill=2, n_decode=2, engine=ecfg),
+                     sim=PicnicSimulator())
+    rep = fe.run([copy.copy(r) for r in _trace(n=12)])
+    assert rep.wakes == 0
+    assert all(not isinstance(e, ClusterWake)
+               for n in fe.nodes for e in n.eng.timeline.events)
+
+
+# ---------------------------------------------------------------------------
+# Reporting / trace export
+# ---------------------------------------------------------------------------
+
+def test_report_row_and_summary(cfg):
+    fe = FleetEngine(cfg, FleetConfig(engine=ServingConfig(max_batch=4)),
+                     sim=PicnicSimulator())
+    rep = fe.run([copy.copy(r) for r in _trace(n=8)])
+    row = rep.row()
+    assert row["nodes"] == 2 and row["handoff"] is True
+    assert row["finished"] == 8
+    assert isinstance(rep.summary(), str) and "FleetReport" in rep.summary()
+    assert not math.isnan(rep.tokens_per_J)
+
+
+def test_merged_chrome_trace_one_process_per_node(cfg, tmp_path):
+    fe = FleetEngine(cfg, FleetConfig(engine=ServingConfig(max_batch=4)),
+                     sim=PicnicSimulator())
+    fe.run([copy.copy(r) for r in _trace(n=6)])
+    path = tmp_path / "fleet_trace.json"
+    fe.save_chrome_trace(path)
+    doc = json.loads(path.read_text())
+    pids = {e["pid"] for e in doc["traceEvents"]}
+    assert pids == {0, 1}
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e.get("ph") == "M" and e.get("name") == "process_name"}
+    assert names == {"node0:prefill", "node1:decode"}
+
+
+def test_rerun_is_deterministic(cfg):
+    fc = FleetConfig(n_prefill=1, n_decode=1,
+                     engine=ServingConfig(max_batch=4, ccpg=True))
+    trace = _trace(n=12)
+    r1 = FleetEngine(cfg, fc, sim=PicnicSimulator()).run(
+        [copy.copy(r) for r in trace])
+    r2 = FleetEngine(cfg, fc, sim=PicnicSimulator()).run(
+        [copy.copy(r) for r in trace])
+    assert r1.row() == r2.row()
+    assert _hexdict(r1.node_reports[0]) == _hexdict(r2.node_reports[0])

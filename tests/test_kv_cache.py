@@ -15,7 +15,7 @@ from repro.core import PicnicSimulator
 from repro.core.scheduling import CycleModel, allocate_chiplets
 from repro.core.timeline import C2CTransfer, TokenEmit
 from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                         EngineConfig, EventKind,
+                                         ServingConfig, EventKind,
                                          replay_trace, serve_trace)
 from repro.runtime.kv_cache import (BlockAllocator, KVCacheConfig,
                                     OutOfBlocks, kv_bytes_per_token,
@@ -544,7 +544,7 @@ def test_roomy_cache_matches_infinite(cfg):
     infinite-capacity schedule (same report numbers, no preemptions)."""
     rows = [(0.01 * i, 64 + 8 * i, 12) for i in range(8)]
     r_inf = serve_trace(cfg, replay_trace(rows), max_batch=4)
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(
         max_batch=4, kv_cache=_kvc(cfg, n_blocks=10_000)))
     r_kv = eng.run(replay_trace(rows))
     assert r_kv.row() == r_inf.row()
@@ -559,7 +559,7 @@ def test_preemption_restores_exact_context_lengths(cfg):
     still finishes with context == prompt_len + max_new and generated ==
     max_new, and at least one preemption actually happened."""
     trace = replay_trace([(0.0, 100, 60) for _ in range(6)])
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(
         max_batch=4, kv_cache=_kvc(cfg, n_blocks=40)))
     rep = eng.run(trace)
     st_ = eng.kv_stats
@@ -582,7 +582,7 @@ def test_spill_charges_c2c_and_dram_energy(cfg):
     remote reads make the run slower and hungrier than an unconstrained
     one."""
     rows = [(0.0, 200, 40) for _ in range(4)]
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(
         max_batch=4, kv_cache=_kvc(cfg, n_blocks=40, dram_blocks=80)))
     rep = eng.run(replay_trace(rows))
     st_ = eng.kv_stats
@@ -606,7 +606,7 @@ def test_admission_waits_for_blocks_not_just_slots(cfg):
     the queue (not reject it) until residents finish and free blocks."""
     kvc = _kvc(cfg, n_blocks=20)            # 320 tokens of KV
     trace = replay_trace([(0.0, 150, 30), (0.0, 150, 30), (0.0, 150, 8)])
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(
         max_batch=8, kv_cache=kvc))         # slots are NOT the binding cap
     rep = eng.run(trace)
     assert rep.finished == 3 and rep.rejected == 0
@@ -620,7 +620,7 @@ def test_infeasible_request_rejected_upfront(cfg):
     admission, not deadlocked."""
     kvc = KVCacheConfig(n_blocks=4, block_tokens=16,
                         bytes_per_token=kv_bytes_per_token(cfg))
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(
         max_batch=2, kv_cache=kvc))
     rep = eng.run(replay_trace([(0.0, 1000, 4), (0.0, 20, 4)]))
     assert rep.rejected == 1 and rep.finished == 1
@@ -634,7 +634,7 @@ def test_chunked_prefill_bounds_decode_stall(cfg):
     rows = [(0.0, 64, 400), (0.001, 8192, 4)]
 
     def run(chunk):
-        eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+        eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(
             max_batch=4, chunked_prefill_tokens=chunk))
         rep = eng.run(replay_trace(rows))
         ts = [e.t0 for e in eng.timeline.events
@@ -656,7 +656,7 @@ def test_chunked_prefill_partial_is_preemptible(cfg):
     kvc = KVCacheConfig(n_blocks=84, block_tokens=16,
                         bytes_per_token=kv_bytes_per_token(cfg))
     rows = [(0.0, 20, 600), (0.001, 1200, 8)]
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(
         max_batch=4, kv_cache=kvc, chunked_prefill_tokens=16,
         decode_quantum=4))
     trace = replay_trace(rows)
@@ -692,7 +692,7 @@ def test_rerunning_a_trace_is_idempotent(cfg):
     objects must reproduce the first run's report exactly (with and
     without paging)."""
     for kvc in (None, _kvc(cfg, n_blocks=40)):
-        eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+        eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(
             max_batch=4, kv_cache=kvc))
         trace = replay_trace([(0.0, 100, 8), (0.01, 64, 8)])
         r1 = eng.run(trace)

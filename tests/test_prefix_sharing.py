@@ -15,7 +15,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.timeline import C2CTransfer
 from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                         EngineConfig, poisson_trace)
+                                         ServingConfig, poisson_trace)
 from repro.runtime.kv_cache import KVCacheConfig, kv_bytes_per_token
 
 GOLDEN_PATH = Path(__file__).parent / "golden" / "prefix_golden.json"
@@ -24,6 +24,11 @@ GOLDEN_PATH = Path(__file__).parent / "golden" / "prefix_golden.json"
 def _hexdict(obj) -> dict:
     d = dataclasses.asdict(obj)
     d.pop("queue_depth", None)
+    # per-node attribution (ISSUE 9 fleet) stays None outside a fleet and
+    # is absent from the committed golden — drop it exactly when unset
+    for k in ("node_id", "pool"):
+        if k in d and d[k] is None:
+            d.pop(k)
     return {k: (v.hex() if isinstance(v, float) else v) for k, v in d.items()}
 
 
@@ -47,7 +52,7 @@ def _prefix_trace(prefix_len=256, n=12, prompt_len=320, max_new=24,
 
 
 def _run(cfg, share: bool, trace, **kv_kw):
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(
         max_batch=4, ccpg=True, kv_cache=_kvc(cfg, share, **kv_kw),
         chunked_prefill_tokens=64))
     rep = eng.run(trace)

@@ -9,7 +9,7 @@ from repro.core import CCPGModel, CycleModel, PicnicSimulator
 from repro.core.scheduling import allocate_chiplets
 from repro.launch.scheduler import CostModel
 from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                         EngineConfig, EventKind,
+                                         ServingConfig, EventKind,
                                          poisson_trace, replay_trace,
                                          serve_trace)
 
@@ -133,7 +133,7 @@ def test_admission_respects_queue_limit(cfg):
 def test_no_admission_before_arrival(cfg):
     """The engine may not prefill a request before it arrives."""
     trace = replay_trace([(0.5 * i, 64, 4) for i in range(6)])
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(max_batch=4))
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(max_batch=4))
     eng.run(trace)
     prefills = {rid: t for t, k, rid in eng.events
                 if k == EventKind.PREFILL}
@@ -147,7 +147,7 @@ def test_decode_is_preemption_free(cfg):
     generated == max_new at finish."""
     trace = poisson_trace(16, rate_rps=200, seed=2, prompt_len=64,
                           max_new=12)
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(max_batch=4))
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(max_batch=4))
     eng.run(trace)
     for r in trace:
         kinds = [k for _, k, rid in eng.events if rid == r.request_id]
@@ -193,7 +193,7 @@ def test_ttft_deadline_forces_early_prefill_tuple_form(cfg):
     """The deadline override fires identically from a 4-tuple row."""
     trace = replay_trace([(0.0, 256, 512), (0.01, 64, 4, 0.02)])
     eng = ContinuousBatchingEngine(
-        cfg, engine=EngineConfig(max_batch=4, decode_quantum=10 ** 6))
+        cfg, engine=ServingConfig(max_batch=4, decode_quantum=10 ** 6))
     eng.run(trace)
     sim = PicnicSimulator()
     alloc = allocate_chiplets(cfg, sim.tile)
@@ -210,7 +210,7 @@ def test_ttft_deadline_forces_early_prefill(cfg):
              "deadline_ttft": 0.02}]
     trace = replay_trace(rows)
     eng = ContinuousBatchingEngine(
-        cfg, engine=EngineConfig(max_batch=4, decode_quantum=10 ** 6))
+        cfg, engine=ServingConfig(max_batch=4, decode_quantum=10 ** 6))
     eng.run(trace)
     # the at-risk check fires between iterations, so the deadline can slip
     # by at most one decode round; without the override the quantum would

@@ -18,7 +18,7 @@ from repro.core import (C2CTransfer, ClusterSleep, ClusterWake, ComputeSpan,
 from repro.core.scheduling import DecodeCostSurface, allocate_chiplets
 from repro.core.timeline import SweepAggregates
 from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                         EngineConfig, poisson_trace,
+                                         ServingConfig, poisson_trace,
                                          replay_trace)
 from repro.launch.sweep_engine import SweepCell, SweepEngine, sweep_serve
 from repro.runtime.kv_cache import KVCacheConfig, kv_bytes_per_token
@@ -69,7 +69,7 @@ def test_sweep_matches_scalar_mixed_grid(cfg):
                                   max_new=48)
             cells.append(SweepCell(
                 key=f"b{mb}_g{int(ccpg)}", cfg=cfg, trace=trace,
-                engine=EngineConfig(max_batch=mb, ccpg=ccpg,
+                engine=ServingConfig(max_batch=mb, ccpg=ccpg,
                                     chunked_prefill_tokens=256)))
     results = sweep_serve(cells)
     assert len(results) == len(cells)
@@ -101,7 +101,7 @@ def test_sweep_property_random_cells(cfg, rate, mb, ccpg, chunk, seed):
         SweepCell(f"c{i}", cfg,
                   poisson_trace(10, rate, seed=seed + i,
                                 prompt_len=pl, max_new=mn),
-                  engine=EngineConfig(max_batch=mb, ccpg=ccpg,
+                  engine=ServingConfig(max_batch=mb, ccpg=ccpg,
                                       chunked_prefill_tokens=chunk))
         for i, (pl, mn) in enumerate(((128, 16), (512, 64), (96, 96)))
     ]
@@ -127,7 +127,7 @@ def test_sweep_property_paged_cells(cfg, n_blocks, bt, dram, share, seed):
     trace = poisson_trace(12, 50.0, seed=seed, prompt_len=256, max_new=64,
                           prefix_len=192 if share else 0, prefix_frac=0.75)
     cell = SweepCell("paged", cfg, trace, sim=sim,
-                     engine=EngineConfig(max_batch=4, ccpg=True,
+                     engine=ServingConfig(max_batch=4, ccpg=True,
                                          kv_cache=kvc))
     (res,) = sweep_serve([cell])
     assert res.fallback is None
@@ -141,7 +141,7 @@ def test_sweep_shared_trace_object_not_mutated(cfg):
     trace = poisson_trace(8, 40.0, seed=0, max_new=24)
     snap = [(r.arrival, r.prompt_len, r.max_new) for r in trace]
     cells = [SweepCell(f"c{i}", cfg, trace,
-                       engine=EngineConfig(max_batch=1 + i))
+                       engine=ServingConfig(max_batch=1 + i))
              for i in range(3)]
     for res, cell in zip(sweep_serve(cells), cells):
         _assert_cell_identical(res, cell)
@@ -166,7 +166,7 @@ def test_sweep_lifted_lanes_vectorized(cfg, engine_kw, trace_kw):
     """The PR-7 scalar-fallback feature axes now run vectorized: the
     result is unflagged (``fallback is None``) and byte-identical."""
     trace = poisson_trace(8, 30.0, seed=2, max_new=24, **trace_kw)
-    cell = SweepCell("fb", cfg, trace, engine=EngineConfig(**engine_kw))
+    cell = SweepCell("fb", cfg, trace, engine=ServingConfig(**engine_kw))
     vanilla = SweepCell("ok", cfg, poisson_trace(8, 30.0, seed=2,
                                                  max_new=24))
     lifted, ok = sweep_serve([cell, vanilla])
@@ -193,7 +193,7 @@ def test_sweep_property_lifted_lane_cells(cfg, overlap, dyn, ttft, chunk,
                           **trace_kw)
     cell = SweepCell(
         "lift", cfg, trace,
-        engine=EngineConfig(max_batch=mb, overlap=overlap,
+        engine=ServingConfig(max_batch=mb, overlap=overlap,
                             ccpg=dyn, dynamic_ccpg=dyn,
                             chunked_prefill_tokens=chunk))
     (res,) = sweep_serve([cell])
@@ -218,7 +218,7 @@ def test_sweep_property_paged_lifted_cells(cfg, dyn, overlap, ttft, seed):
     trace = poisson_trace(10, 50.0, seed=seed, prompt_len=256, max_new=64,
                           **trace_kw)
     cell = SweepCell("pl", cfg, trace, sim=sim,
-                     engine=EngineConfig(max_batch=4, ccpg=True,
+                     engine=ServingConfig(max_batch=4, ccpg=True,
                                          dynamic_ccpg=dyn, overlap=overlap,
                                          kv_cache=kvc))
     (res,) = sweep_serve([cell])
@@ -236,7 +236,7 @@ def test_sweep_prefill_cruise_identical(cfg):
     for kw in (dict(), dict(ccpg=True, dynamic_ccpg=True),
                dict(overlap=0.5)):
         cell = SweepCell("pf", cfg, trace,
-                         engine=EngineConfig(chunked_prefill_tokens=128,
+                         engine=ServingConfig(chunked_prefill_tokens=128,
                                              **kw))
         (res,) = sweep_serve([cell])
         assert res.fallback is None, kw
@@ -297,7 +297,7 @@ def test_sweep_recalibration_between_runs(cfg):
     sim = PicnicSimulator()
     trace = poisson_trace(10, 40.0, seed=5, max_new=32)
     mk = lambda: [SweepCell(f"c{mb}", cfg, trace,
-                            sim=sim, engine=EngineConfig(max_batch=mb))
+                            sim=sim, engine=ServingConfig(max_batch=mb))
                   for mb in (2, 8)]
     before = sweep_serve(mk())
     sim.cycle_model.alpha = sim.cycle_model.alpha * 0.5   # __setattr__ stamp
@@ -310,7 +310,7 @@ def test_sweep_recalibration_between_runs(cfg):
         ref_sim = PicnicSimulator()
         ref_sim.cycle_model.alpha = ref_sim.cycle_model.alpha * 0.5
         ref = ContinuousBatchingEngine(
-            cfg, sim=ref_sim, engine=EngineConfig(max_batch=mb)
+            cfg, sim=ref_sim, engine=ServingConfig(max_batch=mb)
         ).run([copy.copy(r) for r in trace])
         assert _hexdict(res_a.report) == _hexdict(ref)
 
@@ -446,9 +446,9 @@ def test_aggregate_only_refuses_event_access():
 
 
 def test_aggregate_only_engine_report_identical(cfg):
-    """EngineConfig.aggregate_timeline drops event storage but must not
+    """ServingConfig.aggregate_timeline drops event storage but must not
     perturb a single reported float."""
-    base = EngineConfig(max_batch=4, ccpg=True)
+    base = ServingConfig(max_batch=4, ccpg=True)
     trace = poisson_trace(16, 40.0, seed=6, max_new=48)
     fast = ContinuousBatchingEngine(
         cfg, sim=PicnicSimulator(),
@@ -717,7 +717,7 @@ def test_sweep_groups_share_allocation_and_surface(cfg):
     sim = PicnicSimulator()
     cells = [SweepCell(f"c{i}", cfg,
                        poisson_trace(4, 30.0, seed=i, max_new=8),
-                       sim=sim, engine=EngineConfig(max_batch=mb))
+                       sim=sim, engine=ServingConfig(max_batch=mb))
              for i, mb in enumerate((2, 8, 4))]
     eng = SweepEngine(cells)
     assert len(eng._groups) == 1

@@ -11,7 +11,7 @@ from repro.core import (EVENT_CATEGORIES, C2CTransfer, ClusterSleep,
                         ClusterWake, ComputeSpan, EnergySample,
                         PicnicSimulator, Timeline, TokenEmit, TrafficTrace)
 from repro.launch.serving_engine import (ContinuousBatchingEngine,
-                                         EngineConfig, poisson_trace,
+                                         ServingConfig, poisson_trace,
                                          replay_trace, serve_trace)
 
 GOLDEN = json.loads(
@@ -21,6 +21,11 @@ GOLDEN = json.loads(
 def _hexdict(obj) -> dict:
     d = dataclasses.asdict(obj)
     d.pop("queue_depth", None)
+    # per-node attribution (ISSUE 9 fleet) stays None outside a fleet and
+    # is absent from the committed golden — drop it exactly when unset
+    for k in ("node_id", "pool"):
+        if k in d and d[k] is None:
+            d.pop(k)
     return {k: (v.hex() if isinstance(v, float) else v) for k, v in d.items()}
 
 
@@ -216,7 +221,7 @@ def test_chrome_trace_roundtrips_with_all_categories(cfg, tmp_path):
 
 def test_engine_timeline_exports_chrome_trace(cfg):
     eng = ContinuousBatchingEngine(
-        cfg, engine=EngineConfig(max_batch=2, ccpg=True, dynamic_ccpg=True))
+        cfg, engine=ServingConfig(max_batch=2, ccpg=True, dynamic_ccpg=True))
     eng.run(replay_trace([(0.0, 32, 4), (0.5, 32, 4)]))
     d = json.loads(json.dumps(eng.timeline.to_chrome_trace()))
     assert {c.__name__ for c in EVENT_CATEGORIES} <= _categories(d)
@@ -228,7 +233,7 @@ def test_engine_timeline_exports_chrome_trace(cfg):
 
 def test_engine_report_derives_from_timeline(cfg):
     """ServingReport and the timeline agree: one integrator."""
-    eng = ContinuousBatchingEngine(cfg, engine=EngineConfig(max_batch=4))
+    eng = ContinuousBatchingEngine(cfg, engine=ServingConfig(max_batch=4))
     rep = eng.run(poisson_trace(12, rate_rps=50, seed=3, prompt_len=64,
                                 max_new=8))
     tl = eng.timeline
