@@ -53,7 +53,8 @@ BASELINE_DIR = BENCH_DIR / "baseline"
 # higher-is-better headline families (substring match on the metric key)
 HEADLINE = ("tokens_per_s", "tokens_per_J", "throughput_tok_s",
             "efficiency_tok_J", "speedup", "eff_impr",
-            "paged_vs_infinite_tput", "cells_per_s")
+            "paged_vs_infinite_tput", "cells_per_s", "availability",
+            "goodput_retention")
 # lower-is-better families: real wall clocks (see microbench.py)
 LOWER_IS_BETTER = ("wall_ms",)
 # max relative host-calibration mismatch for wall-clock comparability
@@ -101,6 +102,16 @@ TOLERANCE_OVERRIDES = {
     ("BENCH_fleet.json", "tokens_per_J"): 0.10,
     ("BENCH_fleet.json", "fleet_best_tokens_per_J"): 0.10,
     ("BENCH_fleet.json", "disagg_vs_combined_eff_speedup"): 0.10,
+    # chaos doc (ISSUE 10): same shape as the fleet doc — it carries
+    # host_ops_per_s (doc-level WALL_BENCH_TOL widening), but every
+    # availability/goodput number is a deterministic DES output of the
+    # seeded fault schedule: pin them tight, leave only the harness
+    # wall loose.  Documented in EXPERIMENTS.md §Chaos-sweep.
+    ("BENCH_chaos.json", "wall_ms"): 0.50,
+    ("BENCH_chaos.json", "availability"): 0.10,
+    ("BENCH_chaos.json", "worst_availability"): 0.10,
+    ("BENCH_chaos.json", "goodput_tokens_per_s"): 0.10,
+    ("BENCH_chaos.json", "chaos_goodput_retention"): 0.10,
 }
 
 

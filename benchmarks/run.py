@@ -621,6 +621,107 @@ def bench_fleet():
     return rows
 
 
+def bench_chaos():
+    """Deterministic fault injection over the fleet (ISSUE 10 tentpole):
+    fault profile x node count through launch/fleet_engine.py with a
+    seeded FaultConfig schedule.  Profiles: zero-fault baseline, link
+    degradation windows (FEC/retransmit overhead on every handoff in
+    the window), node crash + recovery (KV lost; survivors re-routed
+    with recompute-from-prompt) and full chaos (links + crashes + CCPG
+    wake failures).  Headlines: worst-case availability, chaos goodput
+    retention vs the zero-fault baseline, and MTTR.  The zero-fault
+    default is asserted hex-identical to an inert FaultConfig in-bench,
+    so the fault machinery provably prices nothing when no fault is
+    declared."""
+    from repro.configs import get_config
+    from repro.core import PicnicSimulator
+    from repro.launch import FleetConfig, ServingConfig, Trace
+    from repro.launch.config import FaultConfig
+    from repro.launch.fleet_engine import FleetEngine
+    try:
+        from benchmarks.microbench import _host_calibration
+    except ImportError:                     # `python benchmarks/run.py`
+        from microbench import _host_calibration
+    t0 = time.time()
+    cfg = get_config("llama3.2-1b")
+    cal = _host_calibration()
+    ecfg = ServingConfig(max_batch=8, ccpg=True)
+
+    def profile(name, n_nodes):
+        if name == "none":
+            return None
+        if name == "links":
+            return FaultConfig.seeded(seed=11, n_nodes=n_nodes,
+                                      horizon_s=0.8, link_windows=2)
+        if name == "crash":
+            return FaultConfig.seeded(seed=12, n_nodes=n_nodes,
+                                      horizon_s=0.8, node_crashes=1)
+        return FaultConfig.seeded(seed=13, n_nodes=n_nodes,
+                                  horizon_s=0.8, link_windows=2,
+                                  node_crashes=2, wake_faults=1)
+
+    def hexrow(row):
+        return {k: (v.hex() if isinstance(v, float) else v)
+                for k, v in row.items()}
+
+    shapes = {2: (1, 1), 4: (2, 2)}
+    profiles = ("none", "links", "crash", "chaos")
+    t_wall = time.perf_counter()
+    rows, avail, goodput, mttr = [], {}, {}, {}
+    base_tput = {}
+    for n, (p, d) in shapes.items():
+        trace = Trace.poisson(48, rate_rps=60, seed=0,
+                              prompt_len=512, max_new=64)
+        for prof in profiles:
+            fc = FleetConfig(n_prefill=p, n_decode=d, handoff=True,
+                             engine=ecfg, fault=profile(prof, n))
+            eng = FleetEngine(cfg, fc, sim=PicnicSimulator())
+            rep = eng.run([copy.copy(r) for r in trace])
+            key = f"n{n}_p{p}d{d}_{prof}"
+            assert rep.finished + rep.rejected == rep.n_requests, \
+                f"chaos cell {key}: silent request loss"
+            row = rep.row()
+            rows.append({"cell": key, **row})
+            if prof == "none":
+                base_tput[n] = rep.tokens_per_s
+                # zero-fault identity: an INERT FaultConfig must price
+                # nothing — hex-identical row to fault=None
+                fc_inert = FleetConfig(n_prefill=p, n_decode=d,
+                                       handoff=True, engine=ecfg,
+                                       fault=FaultConfig())
+                rep_i = FleetEngine(cfg, fc_inert,
+                                    sim=PicnicSimulator()).run(
+                    [copy.copy(r) for r in trace])
+                assert hexrow(rep_i.row()) == hexrow(row), \
+                    f"chaos cell {key}: inert FaultConfig not inert"
+            else:
+                avail[key] = row["availability"]
+                goodput[key] = row["goodput_tokens_per_s"]
+                if row["mttr_s"] is not None:
+                    mttr[key] = row["mttr_s"]
+    t_wall = time.perf_counter() - t_wall
+
+    worst_avail = min(avail.values())
+    retention = min(goodput[f"n{n}_p{p}d{d}_chaos"] / base_tput[n]
+                    for n, (p, d) in shapes.items())
+    _save("chaos", rows)
+    _bench_artifact("chaos", {
+        "worst_availability": round(worst_avail, 6),
+        "chaos_goodput_retention": round(retention, 4),
+        "availability": avail,
+        "goodput_tokens_per_s": goodput,
+        "mttr_s": mttr,
+        "p99_ttft_s": {r["cell"]: r["p99_ttft_s"] for r in rows},
+        "finished": {r["cell"]: r["finished"] for r in rows},
+        "rejected": {r["cell"]: r["rejected"] for r in rows},
+        "wall_ms": round(t_wall * 1e3, 1),
+    }, rows=rows, extra={"host_ops_per_s": round(cal, 1)})
+    _emit("chaos", t0,
+          f"worst_availability={worst_avail:.4f} "
+          f"goodput_retention={retention:.3f}")
+    return rows
+
+
 def bench_distributed():
     """Measured HLO collectives -> photonic cost model (ISSUE 2 tentpole).
 
@@ -831,6 +932,7 @@ BENCHES = {
     "paged": bench_paged,
     "sweep": bench_sweep,
     "fleet": bench_fleet,
+    "chaos": bench_chaos,
     "distributed": bench_distributed,
     "roofline": bench_roofline,
     "kernels": bench_kernels,

@@ -26,6 +26,7 @@ from .ccpg import CCPGModel, CLUSTER_SIZE
 from .interconnect import (OPTICAL, ELECTRICAL, MeasuredTraffic,
                            c2c_average_power, TrafficTrace)
 from .timeline import (Timeline, ComputeSpan, C2CTransfer, ClusterWake,
-                       ClusterSleep, EnergySample, TokenEmit,
-                       EVENT_CATEGORIES)
+                       ClusterSleep, EnergySample, TokenEmit, NodeFail,
+                       NodeRecover, EVENT_CATEGORIES,
+                       FAULT_EVENT_CATEGORIES, ALL_EVENT_CATEGORIES)
 from .simulator import PicnicSimulator, comparison_table, PLATFORMS

@@ -48,6 +48,23 @@ def dram_access_power(bytes_per_second: float) -> float:
     return bytes_per_second * 8 * E_DRAM_ACCESS
 
 
+def retransmit_overhead_bytes(payload_bytes: int,
+                              retransmit_frac: float) -> int:
+    """Extra wire bytes a degraded link re-sends for one transfer.
+
+    When ring-resonator thermal drift pushes the BER past the FEC
+    budget, a ``retransmit_frac`` fraction of the payload fails FEC and
+    is re-transmitted (launch/config.LinkFault window).  The overhead
+    rides the same :class:`LinkSpec` as the payload — priced on the
+    timeline as ``C2CTransfer(phase="retransmit")`` with duration
+    ``c2c_transfer_time(overhead, link)`` — so a degraded window slows
+    *and* burns energy exactly in proportion to the traffic it carries.
+    """
+    if retransmit_frac <= 0.0:
+        return 0
+    return int(int(payload_bytes) * retransmit_frac)
+
+
 def fleet_handoff_bytes(context_tokens: int, bytes_per_token: int,
                         measured: "Optional[MeasuredTraffic]" = None
                         ) -> int:

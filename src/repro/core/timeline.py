@@ -134,15 +134,42 @@ class TokenEmit:
     request_id: int = -1
 
 
-Event = Union[ComputeSpan, C2CTransfer, ClusterWake, ClusterSleep,
-              EnergySample, TokenEmit]
+@dataclass(frozen=True)
+class NodeFail:
+    """A fleet node dies at instant ``t0`` holding its in-flight KV
+    (fault injection, launch/config.FaultConfig).  Appended to the
+    failing node's own timeline; the router's recovery actions
+    (re-routes, recompute prefills, retransmits) land on the survivors'
+    timelines as ordinary spans/transfers."""
+    t0: float
+    node: int = -1
 
+
+@dataclass(frozen=True)
+class NodeRecover:
+    """The node rejoins the fleet at ``t0`` after ``downtime_s`` of
+    being dead (its timeline is padded with a zero-power sleep over the
+    gap — a dead node burns nothing)."""
+    t0: float
+    node: int = -1
+    downtime_s: float = 0.0
+
+
+Event = Union[ComputeSpan, C2CTransfer, ClusterWake, ClusterSleep,
+              EnergySample, TokenEmit, NodeFail, NodeRecover]
+
+# The core categories every full trace contains; the fault kinds only
+# appear when fault injection is on, so they live in their own tuple
+# (trace-completeness checks iterate EVENT_CATEGORIES).
 EVENT_CATEGORIES: Tuple[Type, ...] = (
     ComputeSpan, C2CTransfer, ClusterWake, ClusterSleep, EnergySample,
     TokenEmit)
+FAULT_EVENT_CATEGORIES: Tuple[Type, ...] = (NodeFail, NodeRecover)
+ALL_EVENT_CATEGORIES: Tuple[Type, ...] = \
+    EVENT_CATEGORIES + FAULT_EVENT_CATEGORIES
 
-# columnar class ids, in EVENT_CATEGORIES order
-_COMPUTE, _C2C, _WAKE, _SLEEP, _SAMPLE, _TOKEN = range(6)
+# columnar class ids, in ALL_EVENT_CATEGORIES order
+_COMPUTE, _C2C, _WAKE, _SLEEP, _SAMPLE, _TOKEN, _FAIL, _RECOVER = range(8)
 
 
 # ---------------------------------------------------------------------------
@@ -179,15 +206,16 @@ class Timeline:
         self._span_s: Dict[Tuple[str, Optional[str]], float] = \
             defaultdict(float)
         if aggregate_only:
-            self._counts = [0] * 6             # per-class append counts
+            self._counts = [0] * 8             # per-class append counts
         elif columnar:
             # per-class parallel columns + one global class-id sequence;
             # dataclass events are materialized lazily from these
             self._seq: List[int] = []
             self._cols: Tuple[Tuple[list, ...], ...] = tuple(
-                tuple([] for _ in range(n)) for n in (7, 5, 4, 3, 2, 3))
+                tuple([] for _ in range(n))
+                for n in (7, 5, 4, 3, 2, 3, 2, 3))
             self._mat: List[Event] = []        # lazy materialization cache
-            self._cursors = [0] * 6            # per-class materialize pos
+            self._cursors = [0] * 8            # per-class materialize pos
         else:
             self._events: List[Event] = []
 
@@ -373,6 +401,35 @@ class Timeline:
                 TokenEmit(at, 1, rid) for rid in request_ids)
         self.tokens += b
 
+    def node_fail(self, node: int = -1, *,
+                  t0: Optional[float] = None) -> None:
+        """Concurrent instant: this node crashed (fault injection)."""
+        at = self.now if t0 is None else t0
+        if self.aggregate_only:
+            self._counts[_FAIL] += 1
+        elif self.columnar:
+            self._seq.append(_FAIL)
+            c = self._cols[_FAIL]
+            c[0].append(at)
+            c[1].append(node)
+        else:
+            self._events.append(NodeFail(at, node))
+
+    def node_recover(self, node: int = -1, *, downtime_s: float = 0.0,
+                     t0: Optional[float] = None) -> None:
+        """Concurrent instant: this node rejoined after a crash."""
+        at = self.now if t0 is None else t0
+        if self.aggregate_only:
+            self._counts[_RECOVER] += 1
+        elif self.columnar:
+            self._seq.append(_RECOVER)
+            c = self._cols[_RECOVER]
+            c[0].append(at)
+            c[1].append(node)
+            c[2].append(downtime_s)
+        else:
+            self._events.append(NodeRecover(at, node, downtime_s))
+
     def sample(self, power_W: float) -> None:
         if self.aggregate_only:
             self._counts[_SAMPLE] += 1
@@ -411,7 +468,7 @@ class Timeline:
         if len(self._mat) < len(self._seq):
             mat, cur, cols = self._mat, self._cursors, self._cols
             ctors = (ComputeSpan, C2CTransfer, ClusterWake, ClusterSleep,
-                     EnergySample, TokenEmit)
+                     EnergySample, TokenEmit, NodeFail, NodeRecover)
             for cid in self._seq[len(mat):]:
                 i = cur[cid]
                 mat.append(ctors[cid](*(col[i] for col in cols[cid])))
@@ -428,8 +485,8 @@ class Timeline:
             yield from self._events
             return
         ctors = (ComputeSpan, C2CTransfer, ClusterWake, ClusterSleep,
-                 EnergySample, TokenEmit)
-        cur = [0] * 6
+                 EnergySample, TokenEmit, NodeFail, NodeRecover)
+        cur = [0] * 8
         cols = self._cols
         for cid in self._seq:
             i = cur[cid]
@@ -444,6 +501,8 @@ class Timeline:
         "ClusterSleep": ("t0", "dur_s", "power_W"),
         "EnergySample": ("t0", "power_W"),
         "TokenEmit": ("t0", "n", "request_id"),
+        "NodeFail": ("t0", "node"),
+        "NodeRecover": ("t0", "node", "downtime_s"),
     }
 
     def column(self, cls: Type, field: str) -> list:
@@ -474,7 +533,8 @@ class Timeline:
 
     _CIDS = {"ComputeSpan": _COMPUTE, "C2CTransfer": _C2C,
              "ClusterWake": _WAKE, "ClusterSleep": _SLEEP,
-             "EnergySample": _SAMPLE, "TokenEmit": _TOKEN}
+             "EnergySample": _SAMPLE, "TokenEmit": _TOKEN,
+             "NodeFail": _FAIL, "NodeRecover": _RECOVER}
 
     def count(self, cls: Type) -> int:
         if self.aggregate_only:
@@ -506,6 +566,9 @@ class Timeline:
     # -- Chrome trace export ------------------------------------------
     _TIDS = {"ComputeSpan": 1, "C2CTransfer": 2, "ClusterWake": 3,
              "ClusterSleep": 4, "TokenEmit": 5}
+    # fault lanes: their thread metadata is emitted ONLY when such
+    # events exist, so zero-fault traces stay byte-identical
+    _FAULT_TIDS = {"NodeFail": 6, "NodeRecover": 7}
 
     def iter_chrome_events(self, *, process_name: str = "picnic",
                            pid: int = 0) -> Iterator[Dict]:
@@ -520,6 +583,11 @@ class Timeline:
         for lane, tid in sorted(self._TIDS.items(), key=lambda kv: kv[1]):
             yield {"ph": "M", "pid": pid, "tid": tid,
                    "name": "thread_name", "args": {"name": lane}}
+        for lane, tid in sorted(self._FAULT_TIDS.items(),
+                                key=lambda kv: kv[1]):
+            if self.count(ALL_EVENT_CATEGORIES[tid]) > 0:
+                yield {"ph": "M", "pid": pid, "tid": tid,
+                       "name": "thread_name", "args": {"name": lane}}
 
         def span(cat, name, e, args):
             return {"ph": "X", "pid": pid, "tid": self._TIDS[cat],
@@ -552,6 +620,18 @@ class Timeline:
                        "cat": "TokenEmit", "name": f"tok x{e.n}",
                        "ts": ts, "s": "t",
                        "args": {"n": e.n, "request_id": e.request_id}}
+            elif isinstance(e, NodeFail):
+                yield {"ph": "i", "pid": pid,
+                       "tid": self._FAULT_TIDS["NodeFail"],
+                       "cat": "NodeFail", "name": "node_fail",
+                       "ts": ts, "s": "p", "args": {"node": e.node}}
+            elif isinstance(e, NodeRecover):
+                yield {"ph": "i", "pid": pid,
+                       "tid": self._FAULT_TIDS["NodeRecover"],
+                       "cat": "NodeRecover", "name": "node_recover",
+                       "ts": ts, "s": "p",
+                       "args": {"node": e.node,
+                                "downtime_s": e.downtime_s}}
 
     def to_chrome_trace(self, *, process_name: str = "picnic",
                         pid: int = 0) -> Dict:

@@ -9,10 +9,13 @@ This package is also the PUBLIC serving API (ISSUE 9): one documented
 facade over the three execution tiers, so examples and benchmarks stop
 importing module internals —
 
-  * configs   — :class:`ServingConfig` (per-node engine knobs) and
-    :class:`FleetConfig` (pool shape / router / handoff / autoscaling),
-    both keyword-only and versioned with ``to_dict()``/``from_dict()``
-    round-trip and unknown-key rejection (`repro.launch.config`);
+  * configs   — :class:`ServingConfig` (per-node engine knobs),
+    :class:`FleetConfig` (pool shape / router / handoff / autoscaling)
+    and :class:`FaultConfig` (deterministic fault schedules: LinkFault
+    degradation windows, NodeFault crash/recover, WakeFault CCPG wake
+    failures), all keyword-only and versioned with
+    ``to_dict()``/``from_dict()`` round-trip and unknown-key rejection
+    (`repro.launch.config`);
   * traces    — :class:`Trace` with ``Trace.poisson(...)`` /
     ``Trace.replay(rows)`` classmethods (one arrival/deadline/prefix
     spec; the legacy ``poisson_trace``/``replay_trace`` functions
@@ -34,14 +37,16 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
-from repro.launch.config import FleetConfig, ServingConfig
+from repro.launch.config import (FaultConfig, FleetConfig, LinkFault,
+                                 NodeFault, ServingConfig, WakeFault)
 from repro.launch.serving_engine import (ServingReport, Trace,
                                          TrackedRequest, poisson_trace,
                                          replay_trace)
 
 __all__ = [
-    "FleetConfig", "ServingConfig", "ServingReport", "Trace",
-    "TrackedRequest", "poisson_trace", "replay_trace",
+    "FaultConfig", "FleetConfig", "LinkFault", "NodeFault",
+    "ServingConfig", "ServingReport", "Trace",
+    "TrackedRequest", "WakeFault", "poisson_trace", "replay_trace",
     "serve", "sweep", "fleet",
 ]
 

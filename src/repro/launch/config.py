@@ -27,7 +27,9 @@ Pure Python, JAX-free, like the rest of the analytic serving stack.
 from __future__ import annotations
 
 import dataclasses
-from typing import ClassVar, Dict, Optional
+import math
+import random
+from typing import ClassVar, Dict, Optional, Tuple
 
 from repro.core.interconnect import MeasuredTraffic
 from repro.runtime.kv_cache import KVCacheConfig
@@ -115,12 +117,143 @@ class ServingConfig:
         return cls(**d)
 
 
+@dataclasses.dataclass(frozen=True)
+class LinkFault:
+    """One photonic link-degradation window.
+
+    Thermal drift of the ring resonators raises the BER past the FEC
+    budget for ``[t_start, t_end)``; every KV handoff sent during the
+    window re-transmits ``retransmit_frac`` of its payload, priced on
+    the timeline as ``C2CTransfer(phase="retransmit")`` riding the same
+    link model as the payload itself.
+    """
+    t_start: float
+    t_end: float
+    retransmit_frac: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFault:
+    """One fleet-node crash/recover event: the node freezes at
+    ``t_fail`` holding its in-flight KV (lost), and rejoins the fleet at
+    ``t_recover`` (inf = never).  The router only learns of the death
+    when the heartbeat gap crosses ``FaultConfig.heartbeat_dead_s``."""
+    node: int
+    t_fail: float
+    t_recover: float = math.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class WakeFault:
+    """CCPG wake failures: the first ``failures`` ClusterWake attempts
+    on this node time out (regulator settle never completes); each
+    failed attempt costs ``FaultConfig.wake_timeout_s`` plus the
+    RestartPolicy backoff before the router retries or falls back to
+    the awake pool."""
+    node: int
+    failures: int = 1
+
+
+@dataclasses.dataclass(kw_only=True)
+class FaultConfig:
+    """A reproducible fault schedule for the fleet (ISSUE 10).
+
+    Declarative and fully deterministic: the schedule is data, not
+    callbacks, so the same FaultConfig replayed against the same trace
+    yields a hex-identical report and timeline.  ``seeded()`` draws a
+    schedule from a seed for fault-rate sweeps.  An empty schedule is
+    inert — the fleet takes the exact zero-fault code paths.
+    """
+    SCHEMA_VERSION: ClassVar[int] = 1
+
+    seed: int = 0
+    links: Tuple[LinkFault, ...] = ()
+    nodes: Tuple[NodeFault, ...] = ()
+    wakes: Tuple[WakeFault, ...] = ()
+    # CCPG wake retry policy (RestartPolicy on the DES clock)
+    wake_timeout_s: float = 2e-3
+    wake_retries: int = 3
+    wake_backoff_base_s: float = 1e-3
+    wake_backoff_max_s: float = 16e-3
+    # DES-clock HeartbeatMonitor thresholds: a crashed node keeps
+    # receiving work until its heartbeat gap crosses heartbeat_dead_s
+    # (bounded pile-up, drained and re-routed at detection)
+    heartbeat_suspect_s: float = 5e-3
+    heartbeat_dead_s: float = 20e-3
+    # degraded-mode load shedding: when capacity has dropped, shed the
+    # re-routed requests whose TTFT deadline is already infeasible
+    # (counted as fault_shed, never silent) instead of recomputing them
+    shed_infeasible: bool = True
+
+    def active(self) -> bool:
+        """Inert configs (no scheduled faults) take zero-fault paths."""
+        return bool(self.links or self.nodes or self.wakes)
+
+    @classmethod
+    def seeded(cls, *, seed: int, n_nodes: int, horizon_s: float,
+               link_windows: int = 0, node_crashes: int = 0,
+               wake_faults: int = 0, recover: bool = True,
+               **knobs) -> "FaultConfig":
+        """Draw a reproducible schedule: same seed -> same faults."""
+        rng = random.Random(seed)
+        links = tuple(sorted(
+            (LinkFault(t_start=(t0 := rng.uniform(0.05, 0.70) * horizon_s),
+                       t_end=t0 + rng.uniform(0.05, 0.25) * horizon_s,
+                       retransmit_frac=rng.uniform(0.05, 0.30))
+             for _ in range(link_windows)),
+            key=lambda w: (w.t_start, w.t_end)))
+        crash_ids = sorted(rng.sample(range(n_nodes),
+                                      min(node_crashes, n_nodes)))
+        nodes = tuple(
+            NodeFault(node=i,
+                      t_fail=(tf := rng.uniform(0.10, 0.60) * horizon_s),
+                      t_recover=(tf + rng.uniform(0.10, 0.30) * horizon_s
+                                 if recover else math.inf))
+            for i in crash_ids)
+        wake_ids = sorted(rng.sample(range(n_nodes),
+                                     min(wake_faults, n_nodes)))
+        wakes = tuple(WakeFault(node=i, failures=1 + rng.randrange(2))
+                      for i in wake_ids)
+        return cls(seed=seed, links=links, nodes=nodes, wakes=wakes,
+                   **knobs)
+
+    def to_dict(self) -> Dict:
+        d = {"schema": self.SCHEMA_VERSION}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name in ("links", "nodes", "wakes"):
+                v = [dataclasses.asdict(x) for x in v]
+            d[f.name] = v
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FaultConfig":
+        d = _check_schema(cls, d)
+        _check_known_keys(cls, d)
+        for key, sub in (("links", LinkFault), ("nodes", NodeFault),
+                         ("wakes", WakeFault)):
+            items = d.get(key)
+            if items is not None:
+                built = []
+                for x in items:
+                    if isinstance(x, dict):
+                        _check_known_keys(sub, x)
+                        x = sub(**x)
+                    built.append(x)
+                d[key] = tuple(built)
+        return cls(**d)
+
+
 @dataclasses.dataclass(kw_only=True)
 class FleetConfig:
     """Fleet-level knobs for `launch.fleet_engine.FleetEngine`: pool shape,
     router policy, KV-handoff pricing and node autoscaling.  Every node
-    runs one :class:`ServingConfig` (the ``engine`` block)."""
-    SCHEMA_VERSION: ClassVar[int] = 1
+    runs one :class:`ServingConfig` (the ``engine`` block).
+
+    Schema 2 adds the optional ``fault`` block (:class:`FaultConfig`);
+    absent/None keeps the zero-fault fleet byte-identical to schema 1.
+    """
+    SCHEMA_VERSION: ClassVar[int] = 2
 
     # pool shape.  handoff=True splits the fleet into n_prefill
     # dedicated prefill nodes and n_decode decode nodes with priced KV
@@ -163,6 +296,10 @@ class FleetConfig:
     # node's chiplets, which the analytic footprint ignores.
     measured_handoff: Optional[MeasuredTraffic] = None
     max_iters: int = 8_000_000  # safety valve over ALL node steps
+    # deterministic fault injection (ISSUE 10): link-degradation
+    # windows, CCPG wake failures and node crash/recover events.  None
+    # (or an inert FaultConfig) keeps every zero-fault code path.
+    fault: Optional[FaultConfig] = None
 
     @property
     def n_nodes(self) -> int:
@@ -176,6 +313,8 @@ class FleetConfig:
                 v = v.to_dict()
             elif f.name == "measured_handoff" and v is not None:
                 v = dataclasses.asdict(v)
+            elif f.name == "fault" and v is not None:
+                v = v.to_dict()
             d[f.name] = v
         return d
 
@@ -190,4 +329,7 @@ class FleetConfig:
         if isinstance(mh, dict):
             _check_known_keys(MeasuredTraffic, mh)
             d["measured_handoff"] = MeasuredTraffic(**mh)
+        fl = d.get("fault")
+        if isinstance(fl, dict):
+            d["fault"] = FaultConfig.from_dict(fl)
         return cls(**d)

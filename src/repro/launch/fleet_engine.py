@@ -45,6 +45,22 @@ router first on ties.  The minimum-horizon entity can never receive an
 earlier input from the others, so the interleave is causally safe and
 deterministic.
 
+Fault injection (ISSUE 10): an optional, fully deterministic
+``FleetConfig.fault`` schedule becomes a third DES entity.  Link
+degradation windows price FEC/retransmit overhead on every handoff sent
+inside them (``C2CTransfer(phase="retransmit")``); CCPG wake failures
+cost a bounded `RestartPolicy` retry walk before the router falls back
+to the awake pool; node crashes freeze a node's engine mid-flight (its
+KV is lost) and the router — running `HeartbeatMonitor` on the DES
+clock — only learns of the death after ``heartbeat_dead_s``, at which
+point it drains the dead node's mailboxes: raw arrivals re-dispatch,
+queued handoffs re-route, and partially-decoded residents
+recompute-from-prompt on the prefill pool (prefix sharing adopts any
+still-indexed prompt blocks, cutting the recompute bill).  Degraded
+mode sheds deadline-infeasible work first — counted (``fault_shed``),
+never silent.  With ``fault=None`` every code path above is skipped and
+the fleet stays byte-identical to the zero-fault engine.
+
 Pure Python + numpy like the engine underneath — no JAX import.
 
   PYTHONPATH=src python -c "from repro.launch import fleet; ..."
@@ -61,7 +77,9 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.interconnect import c2c_transfer_time, fleet_handoff_bytes
+from repro.core.interconnect import (c2c_transfer_time,
+                                     fleet_handoff_bytes,
+                                     retransmit_overhead_bytes)
 from repro.core.scheduling import ChipletAllocation, allocate_chiplets
 from repro.core.simulator import PicnicSimulator
 from repro.core.timeline import merge_chrome_traces
@@ -69,6 +87,8 @@ from repro.launch.config import FleetConfig, ServingConfig
 from repro.launch.scheduler import EventKind
 from repro.launch.serving_engine import (ContinuousBatchingEngine,
                                          ServingReport, TrackedRequest)
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, RestartPolicy,
+                                           WorkerState)
 from repro.runtime.kv_cache import kv_bytes_per_token
 
 PREFILL = "prefill"
@@ -82,7 +102,9 @@ class _Node:
 
     __slots__ = ("node_id", "pool", "eng", "pending", "handoffs",
                  "assigned", "asleep", "wakes", "requeued",
-                 "outstanding_s", "_last_deferred_seq")
+                 "outstanding_s", "_last_deferred_seq",
+                 "crashed", "down", "fail_t", "wake_fails_left",
+                 "wake_policy")
 
     def __init__(self, node_id: int, pool: str, cfg, sim, engine_cfg,
                  alloc):
@@ -95,9 +117,10 @@ class _Node:
         # engine admits them itself, preserving its queue_limit/reject
         # semantics)
         self.pending: Deque[TrackedRequest] = deque()
-        # (arrival_s, seq, request, nbytes, transfer_s) — handed-off
-        # requests in fabric-arrival order (insort: wakes and re-routes
-        # can land out of order)
+        # (arrival_s, seq, request, nbytes, transfer_s, phase,
+        # retransmit_bytes, retransmit_s) — handed-off requests in
+        # fabric-arrival order (insort: wakes and re-routes can land
+        # out of order)
         self.handoffs: List[Tuple] = []
         self.assigned: List[TrackedRequest] = []
         self.asleep = False
@@ -105,6 +128,13 @@ class _Node:
         self.requeued = 0
         self.outstanding_s = 0.0     # router's prefill-work estimate
         self._last_deferred_seq = -1
+        # fault state: crashed = the node is frozen (ground truth);
+        # down = the router has DETECTED the crash and excludes it
+        self.crashed = False
+        self.down = False
+        self.fail_t = math.nan
+        self.wake_fails_left = 0     # CCPG wake attempts that time out
+        self.wake_policy: Optional[RestartPolicy] = None
 
     def reset(self) -> None:
         self.eng.reset()
@@ -116,6 +146,11 @@ class _Node:
         self.requeued = 0
         self.outstanding_s = 0.0
         self._last_deferred_seq = -1
+        self.crashed = False
+        self.down = False
+        self.fail_t = math.nan
+        self.wake_fails_left = 0
+        self.wake_policy = None
 
 
 @dataclasses.dataclass
@@ -146,11 +181,27 @@ class FleetReport:
     wakes: int
     slo_rejected: int
     node_reports: List[ServingReport]
+    # fault/degraded-mode metrics — populated only when the run had an
+    # active FaultConfig (``availability is not None`` gates row()/
+    # summary() emission, keeping zero-fault artifacts byte-identical)
+    router_rejected: Optional[int] = None
+    fault_shed: Optional[int] = None
+    node_failures: Optional[int] = None
+    node_recoveries: Optional[int] = None
+    downtime_s: Optional[float] = None
+    mttr_s: Optional[float] = None
+    availability: Optional[float] = None
+    goodput_tokens_per_s: Optional[float] = None
+    recomputes: Optional[int] = None
+    recompute_tokens: Optional[int] = None
+    retransmit_bytes: Optional[int] = None
+    wake_retries: Optional[int] = None
+    wake_fallbacks: Optional[int] = None
 
     def row(self) -> Dict:
         def _r(x: float, nd: int):
             return None if math.isnan(x) else round(x, nd)
-        return {
+        row = {
             "nodes": self.n_nodes,
             "prefill_nodes": self.n_prefill,
             "decode_nodes": self.n_decode,
@@ -171,11 +222,29 @@ class FleetReport:
             "slo_rejected": self.slo_rejected,
             "wall_s": _r(self.wall_s, 4),
         }
+        if self.availability is not None:
+            # reject attribution by cause + chaos headline metrics
+            row.update({
+                "router_rejected": self.router_rejected,
+                "fault_shed": self.fault_shed,
+                "node_failures": self.node_failures,
+                "node_recoveries": self.node_recoveries,
+                "availability": _r(self.availability, 6),
+                "goodput_tokens_per_s": _r(self.goodput_tokens_per_s, 1),
+                "mttr_s": _r(self.mttr_s, 4),
+                "downtime_s": _r(self.downtime_s, 4),
+                "recomputes": self.recomputes,
+                "recompute_tokens": self.recompute_tokens,
+                "retransmit_MB": round(self.retransmit_bytes / 1e6, 3),
+                "wake_retries": self.wake_retries,
+                "wake_fallbacks": self.wake_fallbacks,
+            })
+        return row
 
     def summary(self) -> str:
         shape = (f"{self.n_prefill}P+{self.n_decode}D"
                  if self.handoff else f"{self.n_nodes}x combined")
-        return "\n".join([
+        lines = [
             f"FleetReport ({shape})",
             f"  requests          {self.finished}/{self.n_requests} "
             f"finished, {self.rejected} rejected "
@@ -193,7 +262,25 @@ class FleetReport:
             f"{self.requeued_handoffs} re-queued, "
             f"{self.rerouted_handoffs} re-routed)",
             f"  node wakes        {self.wakes}",
-        ])
+        ]
+        if self.availability is not None:
+            mttr = (f"{self.mttr_s:.4f} s"
+                    if self.mttr_s == self.mttr_s else "n/a")
+            lines += [
+                f"  fault model       {self.node_failures} failures / "
+                f"{self.node_recoveries} recoveries, "
+                f"availability {self.availability:.4f}, MTTR {mttr}",
+                f"  degraded mode     {self.fault_shed} shed, "
+                f"{self.router_rejected} router-rejected, "
+                f"{self.recomputes} recomputes "
+                f"({self.recompute_tokens} tokens), "
+                f"{self.retransmit_bytes / 1e6:.2f} MB retransmitted, "
+                f"{self.wake_retries} wake retries / "
+                f"{self.wake_fallbacks} fallbacks",
+                f"  goodput           "
+                f"{self.goodput_tokens_per_s:.1f} tok/s",
+            ]
+        return "\n".join(lines)
 
 
 class FleetEngine:
@@ -244,14 +331,45 @@ class FleetEngine:
         self.wakes = 0
         self.slo_rejected = 0
         self._fleet_rejected = 0
+        # fault-injection state (run()-rebuilt; inert when fault=None)
+        fc = f.fault
+        self._fault_on = fc is not None and fc.active()
+        if fc is not None:
+            for nf in fc.nodes:
+                if not 0 <= nf.node < len(self.nodes):
+                    raise ValueError(
+                        f"NodeFault.node {nf.node} outside fleet "
+                        f"of {len(self.nodes)} nodes")
+            for wf in fc.wakes:
+                if not 0 <= wf.node < len(self.nodes):
+                    raise ValueError(
+                        f"WakeFault.node {wf.node} outside fleet "
+                        f"of {len(self.nodes)} nodes")
+        self._sched: List[Tuple[float, int, int]] = []
+        self._sched_i = 0
+        self._pending_detect: List[Tuple[float, int]] = []
+        self._monitor: Optional[HeartbeatMonitor] = None
+        self._des_now = 0.0
+        self._mttr: List[float] = []
+        self.router_rejected = 0
+        self.fault_shed = 0
+        self.node_failures = 0
+        self.node_recoveries = 0
+        self.recomputes = 0
+        self.recompute_tokens = 0
+        self.retransmit_bytes = 0
+        self.wake_retries = 0
+        self.wake_fallbacks = 0
+        self.downtime_total = 0.0
 
     # -- horizons ------------------------------------------------------
     def _node_horizon(self, n: _Node) -> float:
         """Earliest simulated time node ``n``'s next step can happen:
         its clock while it holds work, else its next input's arrival
         (clamped to the clock), else +inf (not runnable).  Sleeping
-        nodes only re-enter through a router wake."""
-        if n.asleep:
+        nodes only re-enter through a router wake.  A crashed node is
+        frozen — it re-enters only through the recovery event."""
+        if n.asleep or n.crashed:
             return math.inf
         e = n.eng
         if e.queue or e._active_idx or e._partial is not None:
@@ -303,6 +421,43 @@ class FleetEngine:
         self.wakes = 0
         self.slo_rejected = 0
         self._fleet_rejected = 0
+        # rebuild the deterministic fault schedule for this run
+        fc = f.fault
+        self._fault_on = fc is not None and fc.active()
+        self._sched = []
+        self._sched_i = 0
+        self._pending_detect = []
+        self._monitor = None
+        self._des_now = 0.0
+        self._mttr = []
+        self.router_rejected = 0
+        self.fault_shed = 0
+        self.node_failures = 0
+        self.node_recoveries = 0
+        self.recomputes = 0
+        self.recompute_tokens = 0
+        self.retransmit_bytes = 0
+        self.wake_retries = 0
+        self.wake_fallbacks = 0
+        self.downtime_total = 0.0
+        if self._fault_on:
+            for wf in fc.wakes:
+                n = self.nodes[wf.node]
+                n.wake_fails_left = int(wf.failures)
+                n.wake_policy = RestartPolicy(
+                    base_backoff_s=fc.wake_backoff_base_s,
+                    max_backoff_s=fc.wake_backoff_max_s)
+            ev: List[Tuple[float, int, int]] = []
+            for nf in fc.nodes:
+                ev.append((nf.t_fail, 0, nf.node))
+                if math.isfinite(nf.t_recover):
+                    ev.append((nf.t_recover, 1, nf.node))
+            ev.sort()
+            self._sched = ev
+            self._monitor = HeartbeatMonitor(
+                len(self.nodes), suspect_s=fc.heartbeat_suspect_s,
+                dead_s=fc.heartbeat_dead_s,
+                clock=lambda: self._des_now)
         if f.autoscale:
             for pool in (PREFILL, DECODE, COMBINED):
                 awake = 0
@@ -325,6 +480,14 @@ class FleetEngine:
                 if h < bh:
                     bh = h
                     best = n
+            # the fault schedule is a third DES entity; it steps first
+            # on ties so crashes/detections/recoveries are visible to
+            # the router step at the same timestamp (zero-fault: fh is
+            # always +inf and this branch never runs)
+            fh = self._fault_horizon()
+            if fh < math.inf and fh <= rh and fh <= bh:
+                self._fault_step()
+                continue
             if rh <= bh:
                 if best is None and rh is math.inf:
                     break
@@ -335,8 +498,16 @@ class FleetEngine:
             if it > f.max_iters:
                 raise RuntimeError("fleet exceeded max_iters")
             self._step_node(best)
-        if self._backlog:       # unreachable: flush runs per node step
-            raise RuntimeError("fleet backlog not drained")
+        if self._backlog:
+            if self._fault_on:
+                # degraded mode: every live route is gone (e.g. the
+                # whole prefill pool died without recovery).  Shed the
+                # stranded work, counted — never silently dropped.
+                while self._backlog:
+                    req = self._backlog.popleft()
+                    self._shed(self._records[req.request_id])
+            else:               # unreachable: flush runs per node step
+                raise RuntimeError("fleet backlog not drained")
         return self._report()
 
     # -- router --------------------------------------------------------
@@ -371,15 +542,20 @@ class FleetEngine:
     def _dispatch_prefill(self, req: TrackedRequest, now: float) -> None:
         f = self.fleet
         rec = self._records[req.request_id]
-        targets = [n for n in self.nodes if n.pool == PREFILL]
+        targets = [n for n in self.nodes
+                   if n.pool == PREFILL and not n.down]
         awake = [n for n in targets if not n.asleep]
-        if f.slo_admission and req.deadline_ttft is not None:
+        if (f.slo_admission and req.deadline_ttft is not None
+                and req.first_token_at is None):
             # the BEST case (least-loaded awake node, its whole queue
             # estimate ahead of us) already misses the deadline: reject
-            # at the router instead of burning prefill on a dead request
+            # at the router instead of burning prefill on a dead request.
+            # Recompute re-dispatches (first token already out) are
+            # exempt — their SLO is already met or missed.
             wait = min((n.outstanding_s for n in awake), default=0.0)
             if now + wait + rec["eta"] >= req.arrival + req.deadline_ttft:
                 rec["rejected"] = True
+                rec["cause"] = "slo"
                 self.slo_rejected += 1
                 self._fleet_rejected += 1
                 return
@@ -392,14 +568,16 @@ class FleetEngine:
                     or min(self._pf_load(n) for n in open_nodes)
                     >= f.scale_up_queue):
                 n0 = asleep[0]
-                self._wake(n0, now)
-                open_nodes.append(n0)
+                if self._wake(n0, now):
+                    open_nodes.append(n0)
         if not open_nodes:
             # every awake prefill queue is full: HOLD the request in the
             # router backlog (re-tried after every node step) instead of
             # dropping it; reject only past the router's own bound
             if len(self._backlog) >= f.queue_limit:
                 rec["rejected"] = True
+                rec["cause"] = "router"
+                self.router_rejected += 1
                 self._fleet_rejected += 1
             else:
                 self._backlog.append(req)
@@ -424,7 +602,8 @@ class FleetEngine:
     def _dispatch_combined(self, req: TrackedRequest, now: float) -> None:
         f = self.fleet
         rec = self._records[req.request_id]
-        targets = [n for n in self.nodes if n.pool == COMBINED]
+        targets = [n for n in self.nodes
+                   if n.pool == COMBINED and not n.down]
         awake = [n for n in targets if not n.asleep]
 
         def load(n: _Node) -> int:
@@ -436,12 +615,17 @@ class FleetEngine:
                            or min(load(n) for n in awake)
                            >= f.scale_up_queue):
                 n0 = asleep[0]
-                self._wake(n0, now)
-                awake.append(n0)
+                if self._wake(n0, now):
+                    awake.append(n0)
         if not awake:           # min_awake == 0 edge: wake on demand
-            n0 = targets[0]
-            self._wake(n0, now)
-            awake = [n0]
+            for n0 in targets:
+                if self._wake(n0, now, force=True):
+                    awake = [n0]
+                    break
+        if not awake:
+            # every combined node is detected-dead: shed, counted
+            self._shed(rec)
+            return
         node = min(awake, key=lambda n: (load(n), n.node_id))
         # combined nodes admit/reject through the ENGINE's own queue
         # bound — unconditional dispatch keeps the 1-node fleet
@@ -463,8 +647,11 @@ class FleetEngine:
         if e.kv is not None and pf.request_id in e.kv.tables:
             handoff = e.kv.export_table(pf.request_id)
         orig = rec["req"]
-        if orig.max_new <= 1:
-            # the first token was everything asked for — done at prefill
+        if pf.generated >= orig.max_new:
+            # everything asked for is out — done at prefill.  Covers the
+            # zero-fault max_new<=1 case (fresh pf generates exactly
+            # min(1, max_new)) AND a recompute re-prefill whose resumed
+            # generated count already reached the original budget.
             rec["final"] = pf
             return True
         f = self.fleet
@@ -482,18 +669,35 @@ class FleetEngine:
             nbytes = fleet_handoff_bytes(dc.context, self._bpt,
                                          f.measured_handoff)
         transfer_s = c2c_transfer_time(nbytes, self.sim.link)
+        # a fresh prefill hands off with generated <= 1; anything more
+        # is a crash-recovery recompute shipping rebuilt KV
+        phase = "kv_recompute" if pf.generated > 1 else "kv_handoff"
+        extra = 0
+        extra_s = 0.0
+        if self._fault_on:
+            frac = self._link_frac(e.clock)
+            if frac > 0.0:
+                extra = retransmit_overhead_bytes(nbytes, frac)
+                extra_s = c2c_transfer_time(extra, self.sim.link)
+                self.retransmit_bytes += extra
         rec["final"] = dc
         self.handoffs += 1
         self.handoff_bytes += nbytes
-        self._dispatch_handoff(dc, nbytes, transfer_s,
-                               e.clock + transfer_s, e.clock)
+        t_arr = e.clock + transfer_s
+        if extra:
+            t_arr += extra_s
+        self._dispatch_handoff(dc, nbytes, transfer_s, t_arr, e.clock,
+                               phase=phase, extra=extra,
+                               extra_s=extra_s)
         return True
 
     def _dispatch_handoff(self, dc: TrackedRequest, nbytes: int,
                           transfer_s: float, t_arr: float,
-                          now: float) -> None:
+                          now: float, *, phase: str = "kv_handoff",
+                          extra: int = 0, extra_s: float = 0.0) -> None:
         f = self.fleet
-        targets = [n for n in self.nodes if n.pool == DECODE]
+        targets = [n for n in self.nodes
+                   if n.pool == DECODE and not n.down]
         awake = [n for n in targets if not n.asleep]
         if f.autoscale:
             asleep = [n for n in targets if n.asleep]
@@ -505,29 +709,43 @@ class FleetEngine:
                 # fabric arrival) — ClusterWake precedes the kv_handoff
                 # C2CTransfer on the woken node's timeline
                 n0 = asleep[0]
-                self._wake(n0, now)
-                awake.append(n0)
+                if self._wake(n0, now):
+                    awake.append(n0)
         if not awake:
-            n0 = targets[0]
-            self._wake(n0, now)
-            awake = [n0]
+            # the first token is already out — never shed mid-flight
+            # work for a transient wake failure, so keep retrying down
+            # the pool (force=True exhausts each node's wake-fail
+            # budget); shed only when the whole pool is detected-dead
+            for n0 in targets:
+                if self._wake(n0, now, force=True):
+                    awake = [n0]
+                    break
+        if not awake:
+            self._shed(self._records[dc.request_id])
+            return
         node = min(awake, key=lambda n: (self._dc_load(n), n.node_id))
-        self._enqueue_handoff(node, dc, nbytes, transfer_s, t_arr)
+        self._enqueue_handoff(node, dc, nbytes, transfer_s, t_arr,
+                              phase=phase, extra=extra, extra_s=extra_s)
 
     def _enqueue_handoff(self, node: _Node, dc: TrackedRequest,
                          nbytes: int, transfer_s: float,
-                         t_arr: float) -> None:
+                         t_arr: float, *, phase: str = "kv_handoff",
+                         extra: int = 0, extra_s: float = 0.0) -> None:
         seq = self._handoff_seq
         self._handoff_seq += 1
-        insort(node.handoffs, (t_arr, seq, dc, nbytes, transfer_s))
+        insort(node.handoffs,
+               (t_arr, seq, dc, nbytes, transfer_s, phase, extra,
+                extra_s))
         node.assigned.append(dc)
 
     def _reroute_handoff(self, dc: TrackedRequest, nbytes: int,
                          transfer_s: float, now: float,
-                         exclude: _Node) -> None:
+                         exclude: _Node, *,
+                         phase: str = "kv_handoff",
+                         cause: str = "router") -> None:
         """The chosen decode node can never hold this context (empty
-        and still over capacity): pay a second fabric hop to a node
-        that can, or reject if none exists."""
+        and still over capacity, or detected dead): pay a second fabric
+        hop to a node that can, or reject if none exists."""
         # identity-based removal: TrackedRequest.__eq__ compares arrival
         # only, so list.remove could drop a different equal-arrival copy
         for i, r in enumerate(exclude.assigned):
@@ -536,20 +754,46 @@ class FleetEngine:
                 break
         feas = [n for n in self.nodes
                 if n.pool == DECODE and n is not exclude
+                and not n.down
                 and (n.eng.kv is None
                      or n.eng.kv.feasible(dc.context + 1))]
         if not feas:
             rec = self._records[dc.request_id]
             rec["rejected"] = True
+            rec["cause"] = cause
+            if cause == "fault_shed":
+                self.fault_shed += 1
+            else:
+                self.router_rejected += 1
             self._fleet_rejected += 1
             return
         node = min(feas, key=lambda n: (self._dc_load(n), n.node_id))
         if node.asleep:
-            self._wake(node, now)
+            if not self._wake(node, now, force=True):
+                rec = self._records[dc.request_id]
+                rec["rejected"] = True
+                rec["cause"] = "fault_shed"
+                self.fault_shed += 1
+                self._fleet_rejected += 1
+                return
+        # the second hop crosses the fabric NOW — re-price any link
+        # degradation window covering the re-route time
+        extra = 0
+        extra_s = 0.0
+        if self._fault_on:
+            frac = self._link_frac(now)
+            if frac > 0.0:
+                extra = retransmit_overhead_bytes(nbytes, frac)
+                extra_s = c2c_transfer_time(extra, self.sim.link)
+                self.retransmit_bytes += extra
+        t_arr = now + transfer_s
+        if extra:
+            t_arr += extra_s
         self.rerouted += 1
         self.handoff_bytes += nbytes
-        self._enqueue_handoff(node, dc, nbytes, transfer_s,
-                              now + transfer_s)
+        self._enqueue_handoff(node, dc, nbytes, transfer_s, t_arr,
+                              phase=phase, extra=extra,
+                              extra_s=extra_s)
 
     # -- node stepping -------------------------------------------------
     def _step_node(self, node: _Node) -> None:
@@ -569,8 +813,9 @@ class FleetEngine:
         # order; a full node keeps the head QUEUED (re-tried next step —
         # re-queue, never drop), an empty-but-infeasible one re-routes
         while node.handoffs and node.handoffs[0][0] <= now:
-            t_a, seq, dc, nb, ts = node.handoffs[0]
-            if e.import_request(dc, nbytes=nb, transfer_s=ts):
+            t_a, seq, dc, nb, ts, ph, xb, xs = node.handoffs[0]
+            if e.import_request(dc, nbytes=nb, transfer_s=ts, phase=ph,
+                                retransmit_bytes=xb, retransmit_s=xs):
                 node.handoffs.pop(0)
                 continue
             if node._last_deferred_seq != seq:
@@ -582,7 +827,8 @@ class FleetEngine:
                 # free() can help — this node is permanently infeasible
                 # for this context
                 node.handoffs.pop(0)
-                self._reroute_handoff(dc, nb, ts, now, exclude=node)
+                self._reroute_handoff(dc, nb, ts, now, exclude=node,
+                                      phase=ph)
                 continue
             break
         e.queue_depth.append((now, len(node.handoffs)))
@@ -598,6 +844,7 @@ class FleetEngine:
         while self._backlog:
             open_nodes = [n for n in self.nodes
                           if n.pool == PREFILL and not n.asleep
+                          and not n.down
                           and self._pf_load(n) < limit]
             if not open_nodes:
                 return
@@ -607,18 +854,57 @@ class FleetEngine:
             self._send_prefill(node, req, self._records[req.request_id])
 
     def _maybe_sleep(self, node: _Node) -> None:
-        if node.asleep or self._node_horizon(node) is not math.inf:
+        if node.asleep or node.crashed or node.down:
+            return
+        if self._node_horizon(node) is not math.inf:
             return
         awake = sum(1 for m in self.nodes
                     if m.pool == node.pool and not m.asleep)
         if awake > max(self.fleet.min_awake, 0):
             node.asleep = True
 
-    def _wake(self, node: _Node, now: float) -> None:
+    def _wake(self, node: _Node, now: float,
+              force: bool = False) -> bool:
         """Wake a sleeping node at simulated time ``now``: pad its
         timeline to the wake signal at retention power, then charge the
-        REAL CCPG cluster-walk latency as a ClusterWake event."""
+        REAL CCPG cluster-walk latency as a ClusterWake event.
+
+        Fault mode: a node carrying injected `WakeFault` budget times
+        out instead of waking.  The router retries with `RestartPolicy`
+        exponential backoff — each failed attempt costs
+        ``wake_timeout_s + backoff`` of wall time, padded onto the
+        target's timeline at retention power.  With ``force=False`` the
+        walk is bounded by ``wake_retries`` and returns False on
+        exhaustion (caller falls back to the awake pool); ``force=True``
+        keeps retrying until the (finite) fault budget drains — used
+        when mid-flight work cannot be shed.  A crashed/detected-dead
+        node never wakes.  Returns True iff the node is awake on exit.
+        """
+        if node.crashed or node.down:
+            self.wake_fallbacks += 1
+            return False
         e = node.eng
+        if self._fault_on and node.wake_fails_left > 0:
+            fc = self.fleet.fault
+            pol = node.wake_policy
+            budget = max(int(fc.wake_retries), 1)
+            delay = 0.0
+            attempts = 0
+            while node.wake_fails_left > 0 and (force
+                                                or attempts < budget):
+                attempts += 1
+                node.wake_fails_left -= 1
+                backoff = pol.next_backoff(now + delay)
+                pol.record_failure(now + delay)
+                delay += fc.wake_timeout_s + backoff
+            self.wake_retries += attempts
+            if node.wake_fails_left > 0:
+                # retry budget exhausted and the cluster still won't
+                # come up: fall back to the awake pool
+                self.wake_fallbacks += 1
+                return False
+            # the successful wake starts after the failed walk
+            now = now + delay
         gap = now - e.clock
         if gap > 0:
             e.timeline.sleep(gap, power_W=e._idle_power)
@@ -630,6 +916,209 @@ class FleetEngine:
         node.asleep = False
         node.wakes += 1
         self.wakes += 1
+        return True
+
+    # -- fault injection -----------------------------------------------
+    def _shed(self, rec: Dict) -> None:
+        """Degraded-mode load shed: counted and attributed, never
+        silent."""
+        rec["rejected"] = True
+        rec["cause"] = "fault_shed"
+        self.fault_shed += 1
+        self._fleet_rejected += 1
+
+    def _link_frac(self, t: float) -> float:
+        """Retransmit fraction of the worst LinkFault window covering
+        simulated time ``t`` (0.0 outside every window)."""
+        frac = 0.0
+        for w in self.fleet.fault.links:
+            if w.t_start <= t < w.t_end and w.retransmit_frac > frac:
+                frac = w.retransmit_frac
+        return frac
+
+    def _fault_horizon(self) -> float:
+        """Earliest pending fault-entity action: the next scheduled
+        fail/recover event, or the next heartbeat detection deadline."""
+        if not self._fault_on:
+            return math.inf
+        t = math.inf
+        if self._sched_i < len(self._sched):
+            t = self._sched[self._sched_i][0]
+        if self._pending_detect and self._pending_detect[0][0] < t:
+            t = self._pending_detect[0][0]
+        return t
+
+    def _fault_step(self) -> None:
+        """Process exactly one fault-entity action at the fault
+        horizon (schedule events before detections on ties, so a
+        recovery landing exactly at its own detection deadline
+        heartbeats first and the sweep stays clean)."""
+        st = (self._sched[self._sched_i][0]
+              if self._sched_i < len(self._sched) else math.inf)
+        dt = (self._pending_detect[0][0]
+              if self._pending_detect else math.inf)
+        if st <= dt:
+            t, kind, nid = self._sched[self._sched_i]
+            self._sched_i += 1
+            node = self.nodes[nid]
+            if kind == 0:
+                if not node.crashed:
+                    self._fail_node(node, t)
+            else:
+                if node.crashed:
+                    self._recover_node(node, t)
+        else:
+            self._detect(dt)
+        # a recovery (or detection re-dispatch) may have re-opened
+        # capacity for held work
+        if self._backlog:
+            self._try_flush_backlog()
+
+    def _fail_node(self, node: _Node, t: float) -> None:
+        """Crash ``node`` at simulated time ``t``: its engine freezes
+        mid-flight (KV lost with it) and its last heartbeat lands at
+        ``t`` — the router stays oblivious until the monitor's
+        ``heartbeat_dead_s`` gap elapses, so pre-detection dispatches
+        still pile onto the corpse (drained at detection)."""
+        fc = self.fleet.fault
+        node.crashed = True
+        node.fail_t = t
+        self.node_failures += 1
+        e = node.eng
+        e.timeline.node_fail(node.node_id, t0=max(t, e.clock))
+        self._des_now = t
+        self._monitor.heartbeat(node.node_id)
+        self._pending_detect.append((t + fc.heartbeat_dead_s,
+                                     node.node_id))
+
+    def _recover_node(self, node: _Node, t: float) -> None:
+        """The crashed node comes back at ``t``: pad the outage at zero
+        power (it was dark), stamp the NodeRecover instant, revive its
+        monitor slot and make it routable again.  Whatever it held when
+        it died was already re-routed at detection (or, for an
+        undetected blip, is still resident and simply resumes)."""
+        e = node.eng
+        down_for = t - node.fail_t
+        self._mttr.append(down_for)
+        self.downtime_total += down_for
+        self.node_recoveries += 1
+        gap = t - e.clock
+        if gap > 0:
+            e.timeline.sleep(gap, power_W=0.0)
+            e.events.append((e.clock, EventKind.IDLE, -1))
+        e.timeline.node_recover(node.node_id, downtime_s=down_for,
+                                t0=max(t, e.clock))
+        self._des_now = t
+        self._monitor.revive(node.node_id)
+        self._monitor.heartbeat(node.node_id)
+        node.crashed = False
+        node.down = False
+        node.fail_t = math.nan
+        node._last_deferred_seq = -1
+
+    def _detect(self, td: float) -> None:
+        """A heartbeat detection deadline fired: every live node
+        heartbeats, the monitor sweeps on the DES clock, and any node
+        whose gap crossed ``dead_s`` is marked down and drained.  The
+        scheduled deadline itself is authoritative: it sits at exactly
+        ``fail_t + dead_s``, where the sweep's ``now - last_heartbeat``
+        subtraction can land one ULP short of ``dead_s`` — a due entry
+        whose node is still crashed is dead by construction, whether or
+        not the float comparison agrees."""
+        due = []
+        while self._pending_detect and self._pending_detect[0][0] <= td:
+            due.append(self._pending_detect.pop(0)[1])
+        self._des_now = td
+        mon = self._monitor
+        for n in self.nodes:
+            if not n.crashed:
+                mon.heartbeat(n.node_id)
+        dead = set(mon.sweep())
+        for nid in due:
+            if self.nodes[nid].crashed and nid not in dead:
+                mon.workers[nid].state = WorkerState.DEAD
+                dead.add(nid)
+        for nid in sorted(dead):
+            node = self.nodes[nid]
+            if node.crashed and not node.down:
+                self._drain_failed(node, td)
+
+    def _drain_failed(self, node: _Node, now: float) -> None:
+        """The router finally KNOWS ``node`` is dead: drain everything
+        parked on it and re-route the survivors.  Raw arrivals
+        re-dispatch as-is; queued handoffs pay a second fabric hop;
+        partially-decoded residents lost their KV with the node and
+        recompute-from-prompt on the prefill pool.  Deadline-infeasible
+        fresh work is shed (counted) when ``shed_infeasible`` is on;
+        mid-decode work (first token out) is never shed here."""
+        fc = self.fleet.fault
+        node.down = True
+        e = node.eng
+        raw = list(node.pending)
+        node.pending.clear()
+        dropped = e.drop_inflight()
+        hand = list(node.handoffs)
+        node.handoffs.clear()
+        lost = {id(x) for x in raw}
+        lost.update(id(x) for x in dropped)
+        lost.update(id(h[2]) for h in hand)
+        node.assigned = [r for r in node.assigned
+                         if id(r) not in lost]
+        node.outstanding_s = 0.0
+
+        def infeasible(req: TrackedRequest, eta: float) -> bool:
+            return (fc.shed_infeasible
+                    and req.deadline_ttft is not None
+                    and req.first_token_at is None
+                    and now + eta >= req.arrival + req.deadline_ttft)
+
+        for x in raw + dropped:
+            rec = self._records.get(x.request_id)
+            if rec is None or rec["rejected"]:
+                continue
+            if node.pool == COMBINED:
+                # combined victims re-enter whole; the destination
+                # engine's recompute-on-resume rebuilds any lost decode
+                # progress from the prompt
+                if x.generated:
+                    self.recomputes += 1
+                    self.recompute_tokens += x.prompt_len + x.generated
+                x.admit_seq = -1
+                x.finished_at = None
+                if infeasible(x, 0.0):
+                    self._shed(rec)
+                else:
+                    self._dispatch_combined(x, now)
+            elif x.first_token_at is None:
+                # fresh prefill died before its first token: re-dispatch
+                # the ORIGINAL request (the lost copy produced nothing)
+                if infeasible(rec["req"], rec["eta"]):
+                    self._shed(rec)
+                else:
+                    self._dispatch_prefill(rec["req"], now)
+            else:
+                self._dispatch_recompute(rec, x, now)
+        for h in hand:
+            self._reroute_handoff(h[2], h[3], h[4], now, exclude=node,
+                                  phase=h[5], cause="fault_shed")
+
+    def _dispatch_recompute(self, rec: Dict, x: TrackedRequest,
+                            now: float) -> None:
+        """A partially-decoded request lost its KV with a dead decode
+        node: re-prefill prompt+generated on the prefill pool (prefix
+        sharing adopts any still-indexed prompt blocks, cutting the
+        bill), then hand the rebuilt KV back to a live decode node as a
+        ``kv_recompute`` handoff and resume where it died."""
+        self.recomputes += 1
+        self.recompute_tokens += x.prompt_len + x.generated
+        rc = copy.copy(x)
+        rc.finished_at = None
+        rc.admit_seq = -1
+        rec["eta"] = self.sim.prefill_seconds(
+            self.cfg, self._alloc, rc.prompt_len + rc.generated,
+            ccpg=self._residue_ccpg)[0]
+        rec["final"] = rc
+        self._dispatch_prefill(rc, now)
 
     # -- reporting -----------------------------------------------------
     def _report(self) -> FleetReport:
@@ -639,10 +1128,12 @@ class FleetEngine:
             # pad every node to the cluster wall clock at its idle
             # power, so per-node energy covers the whole run.  The
             # 1-node gap is exactly 0.0 — no event, bare-engine
-            # byte-identity preserved.
+            # byte-identity preserved.  A still-crashed node pads dark.
             gap = wall - n.eng.timeline.now
             if gap > 0:
-                n.eng.timeline.sleep(gap, power_W=n.eng._idle_power)
+                n.eng.timeline.sleep(
+                    gap,
+                    power_W=0.0 if n.crashed else n.eng._idle_power)
         node_reports = [n.eng._report(n.assigned) for n in self.nodes]
         if len(self.nodes) > 1:
             for nr, n in zip(node_reports, self.nodes):
@@ -668,6 +1159,33 @@ class FleetEngine:
         rejected = (sum(nr.rejected for nr in node_reports)
                     + self._fleet_rejected)
         wall = max(wall, 1e-12)
+        fault_kw: Dict = {}
+        if self._fault_on:
+            # downtime accrues to the report wall for nodes that never
+            # recovered; availability is node-time weighted
+            downtime = self.downtime_total + sum(
+                wall - n.fail_t for n in self.nodes if n.crashed)
+            goodput_tokens = 0
+            for rec in self._records.values():
+                final = rec["final"]
+                if final is not None and final.finished_at is not None:
+                    goodput_tokens += final.generated
+            fault_kw = dict(
+                router_rejected=self.router_rejected,
+                fault_shed=self.fault_shed,
+                node_failures=self.node_failures,
+                node_recoveries=self.node_recoveries,
+                downtime_s=downtime,
+                mttr_s=(sum(self._mttr) / len(self._mttr)
+                        if self._mttr else float("nan")),
+                availability=1.0 - downtime / (len(self.nodes) * wall),
+                goodput_tokens_per_s=goodput_tokens / wall,
+                recomputes=self.recomputes,
+                recompute_tokens=self.recompute_tokens,
+                retransmit_bytes=self.retransmit_bytes,
+                wake_retries=self.wake_retries,
+                wake_fallbacks=self.wake_fallbacks,
+            )
         return FleetReport(
             n_nodes=len(self.nodes),
             n_prefill=f.n_prefill if self._disagg else 0,
@@ -692,6 +1210,7 @@ class FleetEngine:
             wakes=self.wakes,
             slo_rejected=self.slo_rejected,
             node_reports=node_reports,
+            **fault_kw,
         )
 
     def save_chrome_trace(self, path) -> None:

@@ -991,7 +991,9 @@ class ContinuousBatchingEngine:
 
     # ------------------------------------------------------------------
     def import_request(self, req: TrackedRequest, *, nbytes: int = 0,
-                       transfer_s: float = 0.0) -> bool:
+                       transfer_s: float = 0.0, phase: str = "kv_handoff",
+                       retransmit_bytes: int = 0,
+                       retransmit_s: float = 0.0) -> bool:
         """Admit a request whose prefill (and first token) ran on
         ANOTHER engine, arriving with resident KV over the fabric — the
         decode-side half of the fleet's prefill->decode handoff.
@@ -1005,7 +1007,15 @@ class ContinuousBatchingEngine:
         folded the transfer latency into the request's arrival time, so
         the event prices bytes/energy, not time.  Returns False with
         state untouched when no slot is free or the blocks don't fit —
-        the caller re-queues (never drops)."""
+        the caller re-queues (never drops).
+
+        Fault injection (launch/config.FaultConfig) rides the same
+        import: ``phase="kv_recompute"`` marks a handoff whose KV was
+        recomputed after a node crash, and ``retransmit_bytes`` prices
+        the FEC-overflow overhead of a degraded link window as a second
+        ``C2CTransfer(phase="retransmit", source="fault")`` on the same
+        link — both default off, keeping the zero-fault event stream
+        byte-identical."""
         slot = self._free_slot()
         if slot is None:
             return False
@@ -1022,8 +1032,11 @@ class ContinuousBatchingEngine:
                     self.kv.free(req.request_id)
                 return False
         if nbytes:
-            self.timeline.c2c(nbytes, phase="kv_handoff", source="fleet",
+            self.timeline.c2c(nbytes, phase=phase, source="fleet",
                               dur_s=transfer_s)
+        if retransmit_bytes:
+            self.timeline.c2c(retransmit_bytes, phase="retransmit",
+                              source="fault", dur_s=retransmit_s)
         req.admit_seq = self._admit_counter
         self._admit_counter += 1
         self._slot_occupy(slot, req)
@@ -1033,6 +1046,30 @@ class ContinuousBatchingEngine:
         self.events.append((self.clock, EventKind.HANDOFF,
                             req.request_id))
         return True
+
+    def drop_inflight(self) -> List[TrackedRequest]:
+        """Crash semantics for the fleet's fault layer: every in-flight
+        request — queued, resident mid-decode, or mid-chunked-prefill —
+        is dropped and returned; their KV block tables (lost with the
+        node) are freed.  The timeline is deliberately untouched: a dead
+        node emits nothing, and the recovery costs (recompute prefills,
+        re-routed handoffs) land on the survivors' timelines."""
+        dropped: List[TrackedRequest] = list(self.queue)
+        self.queue.clear()
+        for i in list(self._active_idx):
+            req = self._slot_release(i)
+            dropped.append(req)
+            if self.kv is not None and req.request_id in self.kv.tables:
+                self.kv.free(req.request_id)
+        if self._partial is not None:
+            req = self._partial[0]
+            dropped.append(req)
+            if self.kv is not None and req.request_id in self.kv.tables:
+                self.kv.free(req.request_id)
+            self._partial = None
+        self._finish_heap.clear()
+        self.decode_credit = 0
+        return dropped
 
     # ------------------------------------------------------------------
     def _prepare_run(self, trace: Sequence[TrackedRequest]

@@ -101,7 +101,7 @@ from repro.core.scheduling import (ChipletAllocation, DecodeCostSurface,
                                    allocate_chiplets)
 from repro.core.simulator import PicnicSimulator
 from repro.core.timeline import SweepAggregates
-from repro.launch.config import ServingConfig
+from repro.launch.config import FaultConfig, FleetConfig, ServingConfig
 from repro.launch.serving_engine import (ContinuousBatchingEngine,
                                          KVCacheStats, ServingReport,
                                          TrackedRequest)
@@ -127,6 +127,12 @@ class SweepCell:
     engine: ServingConfig = dataclasses.field(
         default_factory=ServingConfig)
     sim: Optional[PicnicSimulator] = None
+    # an ACTIVE fault schedule demotes the cell to the scalar fallback
+    # path (flagged in SweepResult.fallback): crash/recovery re-routing
+    # is inherently event-driven and runs through a 1-node combined
+    # FleetEngine instead of the lockstep burst fold.  An inert
+    # FaultConfig (no faults declared) stays on the vector path.
+    fault: Optional[FaultConfig] = None
 
 
 @dataclasses.dataclass
@@ -217,7 +223,12 @@ class SweepEngine:
             if group is None:
                 group = self._groups[gkey] = _Group(sim, cell.cfg)
             group.max_batch = max(group.max_batch, cell.engine.max_batch)
-            vec.append((pos, cell, group))
+            if cell.fault is not None and cell.fault.active():
+                self._fallbacks.append(
+                    (pos, cell, group,
+                     "fault injection (1-node fleet fallback)"))
+            else:
+                vec.append((pos, cell, group))
 
         # batched cost surfaces, one per group; a surface with no affine
         # lane (memoization off / non-affine subclass) demotes the whole
@@ -307,6 +318,20 @@ class SweepEngine:
         for pos, cell, group, reason in self._fallbacks:
             log.debug("sweep cell %r: scalar fallback (%s)", cell.key,
                       reason)
+            if cell.fault is not None and cell.fault.active():
+                # fault cell: run it as a degenerate 1-node combined
+                # fleet so the crash/recovery machinery applies; the
+                # node's own ServingReport is the cell result
+                from repro.launch.fleet_engine import FleetEngine
+                fcfg = FleetConfig(n_prefill=1, n_decode=0,
+                                   handoff=False, engine=cell.engine,
+                                   fault=cell.fault)
+                feng = FleetEngine(cell.cfg, fcfg, sim=group.sim)
+                frep = feng.run([copy.copy(r) for r in cell.trace])
+                results[pos] = SweepResult(
+                    cell.key, frep.node_reports[0],
+                    feng.nodes[0].eng.kv_stats, fallback=reason)
+                continue
             eng = ContinuousBatchingEngine(cell.cfg, sim=group.sim,
                                            engine=cell.engine,
                                            alloc=group.alloc)

@@ -101,8 +101,9 @@ def main(argv=None):
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             jax.block_until_ready(metrics["loss"])
         except WorkerFailure:
-            policy.record_failure()
-            if not policy.should_restart():
+            now = time.time()
+            policy.record_failure(now)
+            if not policy.should_restart(now):
                 raise
             ckpt.wait()
             ls = latest_step(args.ckpt_dir)

@@ -16,6 +16,11 @@ import time
 from enum import Enum
 from typing import Callable, Dict, List, Optional, Tuple
 
+__all__ = [
+    "WorkerState", "Worker", "HeartbeatMonitor", "RestartPolicy",
+    "plan_elastic_mesh", "TrainingSupervisor", "WorkerFailure",
+]
+
 
 class WorkerState(str, Enum):
     HEALTHY = "healthy"
@@ -32,10 +37,16 @@ class Worker:
 
 
 class HeartbeatMonitor:
-    """suspect after `suspect_s` without heartbeat, dead after `dead_s`."""
+    """suspect after `suspect_s` without heartbeat, dead after `dead_s`.
+
+    The clock is injected and mandatory: the same state machine runs on
+    wall time in a real deployment and on the DES clock inside the fleet
+    simulator, and a silent ``time.time`` fallback would let real time
+    leak into simulations.
+    """
 
     def __init__(self, n_workers: int, suspect_s: float = 10.0,
-                 dead_s: float = 30.0, clock: Callable[[], float] = time.time):
+                 dead_s: float = 30.0, *, clock: Callable[[], float]):
         self.clock = clock
         now = clock()
         self.workers = {i: Worker(i, now) for i in range(n_workers)}
@@ -85,19 +96,17 @@ class RestartPolicy:
     def __post_init__(self):
         self.history: List[float] = []
 
-    def should_restart(self, now: Optional[float] = None) -> bool:
-        now = time.time() if now is None else now
+    def should_restart(self, now: float) -> bool:
         self.history = [t for t in self.history if now - t < self.window_s]
         return len(self.history) < self.max_restarts
 
-    def next_backoff(self, now: Optional[float] = None) -> float:
-        now = time.time() if now is None else now
+    def next_backoff(self, now: float) -> float:
         recent = [t for t in self.history if now - t < self.window_s]
         return min(self.base_backoff_s * (2 ** len(recent) if recent else 1),
                    self.max_backoff_s)
 
-    def record_failure(self, now: Optional[float] = None):
-        self.history.append(time.time() if now is None else now)
+    def record_failure(self, now: float):
+        self.history.append(now)
 
 
 def plan_elastic_mesh(n_healthy_pods: int, chips_per_pod: int = 256,
@@ -123,11 +132,13 @@ class TrainingSupervisor:
     """
 
     def __init__(self, policy: RestartPolicy, save_every: int,
-                 checkpointer, monitor: Optional[HeartbeatMonitor] = None):
+                 checkpointer, monitor: Optional[HeartbeatMonitor] = None,
+                 clock: Callable[[], float] = time.time):
         self.policy = policy
         self.save_every = save_every
         self.ckpt = checkpointer
         self.monitor = monitor
+        self.clock = clock
         self.restarts = 0
 
     def run(self, state, step: int, n_steps: int, run_step, make_batch,
@@ -139,8 +150,9 @@ class TrainingSupervisor:
                 if step % self.save_every == 0:
                     self.ckpt.save(step, state, {"step": step})
             except WorkerFailure as e:
-                self.policy.record_failure()
-                if not self.policy.should_restart():
+                now = self.clock()
+                self.policy.record_failure(now)
+                if not self.policy.should_restart(now):
                     raise RuntimeError("failure budget exhausted") from e
                 self.restarts += 1
                 state, step = restore_fn()

@@ -1,0 +1,387 @@
+"""Deterministic fault injection + graceful degradation (ISSUE 10).
+
+Locks the chaos contract of launch/fleet_engine.py:
+
+  * an INERT FaultConfig is invisible — hex-identical reports, event
+    logs and timelines vs ``fault=None`` (the zero-fault code paths are
+    byte-identical, not merely close);
+  * the same FaultConfig replayed (or round-tripped through
+    to_dict/from_dict) yields hex-identical results — faults are data,
+    not wall-clock accidents;
+  * killing a node mid-run never loses work silently: every request
+    either finishes (with visible kv_recompute / retransmit pricing on
+    the survivors' timelines) or is counted rejected with a cause;
+  * NodeFail / NodeRecover land on the dead node's own timeline,
+    downtime accrues at zero power, and availability / MTTR come out of
+    the DES clock;
+  * CCPG wake failures retry with backoff then fall back to the awake
+    pool — never a hang, never a silent drop;
+  * a golden pins one full chaos run (report floats + event counts) so
+    refactors can't drift the fault arithmetic unnoticed.
+
+Regenerate the golden after an INTENDED change:
+
+    PYTHONPATH=src:tests python tests/test_chaos.py
+"""
+import copy
+import dataclasses
+import json
+from pathlib import Path
+
+import pytest
+
+import _hyp_compat
+
+_hyp_compat.install()   # also needed on the __main__ regen path
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import get_config
+from repro.core import PicnicSimulator
+from repro.core.timeline import (C2CTransfer, ClusterSleep, EnergySample,
+                                 NodeFail, NodeRecover)
+from repro.launch import FleetConfig, ServingConfig, Trace
+from repro.launch.config import (FaultConfig, LinkFault, NodeFault,
+                                 WakeFault)
+from repro.launch.fleet_engine import FleetEngine
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "chaos_golden.json"
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama3.2-1b")
+
+
+def _trace(n=24, rate=40, prompt=256, max_new=32, seed=0, **kw):
+    return Trace.poisson(n, rate_rps=rate, seed=seed, prompt_len=prompt,
+                         max_new=max_new, **kw)
+
+
+def _hexdict(obj) -> dict:
+    d = dataclasses.asdict(obj)
+    d.pop("queue_depth", None)
+    d.pop("node_reports", None)
+    return {k: (v.hex() if isinstance(v, float) else v)
+            for k, v in d.items()}
+
+
+def _hexevents(timeline):
+    out = []
+    for e in timeline.events:
+        out.append(tuple(v.hex() if isinstance(v, float) else v
+                         for v in dataclasses.astuple(e)))
+    return out
+
+
+def _run(cfg, fleet, trace):
+    fe = FleetEngine(cfg, fleet, sim=PicnicSimulator())
+    rep = fe.run([copy.copy(r) for r in trace])
+    return fe, rep
+
+
+# ---------------------------------------------------------------------------
+# Zero-fault byte-identity
+# ---------------------------------------------------------------------------
+
+def test_inert_fault_config_is_invisible(cfg):
+    """fault=None and an inert FaultConfig() take the SAME code paths:
+    hex-identical fleet report, node reports, event logs and timelines,
+    and the report row gains no fault columns."""
+    ecfg = ServingConfig(max_batch=4, ccpg=True)
+    trace = _trace()
+    base = FleetConfig(n_prefill=2, n_decode=2, engine=ecfg)
+    inert = dataclasses.replace(base, fault=FaultConfig())
+    assert not FaultConfig().active()
+
+    fe0, rep0 = _run(cfg, base, trace)
+    fe1, rep1 = _run(cfg, inert, trace)
+
+    assert _hexdict(rep1) == _hexdict(rep0)
+    assert rep1.availability is None and rep1.mttr_s is None
+    assert "availability" not in rep1.row()
+    for n0, n1 in zip(fe0.nodes, fe1.nodes):
+        assert n1.eng.events == n0.eng.events
+        assert _hexevents(n1.eng.timeline) == _hexevents(n0.eng.timeline)
+    for r0, r1 in zip(rep0.node_reports, rep1.node_reports):
+        assert _hexdict(r1) == _hexdict(r0)
+
+
+# ---------------------------------------------------------------------------
+# Determinism of an ACTIVE schedule
+# ---------------------------------------------------------------------------
+
+def _chaos_fleet(fault):
+    return FleetConfig(n_prefill=2, n_decode=2,
+                       engine=ServingConfig(max_batch=4, ccpg=True),
+                       fault=fault)
+
+
+def _chaos_fault():
+    """Fixed mixed scenario: a link-degradation window spanning the busy
+    phase + the first decode node dying and rejoining."""
+    return FaultConfig(
+        links=(LinkFault(t_start=0.02, t_end=0.45, retransmit_frac=0.2),),
+        nodes=(NodeFault(node=2, t_fail=0.15, t_recover=0.37),))
+
+
+def test_same_fault_config_hex_identical(cfg):
+    trace = _trace()
+    _, rep0 = _run(cfg, _chaos_fleet(_chaos_fault()), trace)
+    _, rep1 = _run(cfg, _chaos_fleet(_chaos_fault()), trace)
+    assert _hexdict(rep1) == _hexdict(rep0)
+    for a, b in zip(rep0.node_reports, rep1.node_reports):
+        assert _hexdict(a) == _hexdict(b)
+    # ... and through the config wire format
+    fc2 = FaultConfig.from_dict(_chaos_fault().to_dict())
+    assert fc2 == _chaos_fault()
+    _, rep2 = _run(cfg, _chaos_fleet(fc2), trace)
+    assert _hexdict(rep2) == _hexdict(rep0)
+
+
+def test_seeded_schedule_reproducible():
+    a = FaultConfig.seeded(seed=7, n_nodes=4, horizon_s=1.0,
+                           link_windows=2, node_crashes=2, wake_faults=1)
+    b = FaultConfig.seeded(seed=7, n_nodes=4, horizon_s=1.0,
+                           link_windows=2, node_crashes=2, wake_faults=1)
+    c = FaultConfig.seeded(seed=8, n_nodes=4, horizon_s=1.0,
+                           link_windows=2, node_crashes=2, wake_faults=1)
+    assert a == b and a != c and a.active()
+    for w in a.links:
+        assert 0.0 < w.t_start < w.t_end
+    for nf in a.nodes:
+        assert 0 <= nf.node < 4 and nf.t_fail < nf.t_recover
+
+
+# ---------------------------------------------------------------------------
+# Crash / recover semantics
+# ---------------------------------------------------------------------------
+
+def test_killed_decode_node_survivors_all_finish(cfg):
+    """Kill decode node 2 while it holds in-flight KV: nothing silently
+    lost — every request finishes or is counted rejected; the recovery
+    work is VISIBLE (kv_recompute prefills, retransmit transfers,
+    NodeFail/NodeRecover on the dead node's timeline)."""
+    trace = _trace()
+    fe, rep = _run(cfg, _chaos_fleet(_chaos_fault()), trace)
+
+    assert rep.finished + rep.rejected == len(trace)
+    assert rep.node_failures == 1 and rep.node_recoveries == 1
+    assert rep.availability is not None and 0.0 < rep.availability < 1.0
+    assert rep.mttr_s == pytest.approx(rep.downtime_s)
+    assert rep.downtime_s > 0.0
+    # reject attribution: every rejection carries a cause
+    assert rep.rejected == (rep.slo_rejected + rep.router_rejected
+                            + rep.fault_shed)
+
+    phases = {e.phase for n in fe.nodes for e in n.eng.timeline.events
+              if isinstance(e, C2CTransfer)}
+    assert "retransmit" in phases          # link window priced the FEC
+    assert rep.retransmit_bytes > 0
+    # the dead node held partially-decoded KV: it was rebuilt from the
+    # prompt and is VISIBLE as a kv_recompute handoff, never silent
+    assert rep.recomputes > 0 and rep.recompute_tokens > 0
+    assert "kv_recompute" in phases
+
+    dead = fe.nodes[2]
+    evs = dead.eng.timeline.events
+    fails = [e for e in evs if isinstance(e, NodeFail)]
+    recs = [e for e in evs if isinstance(e, NodeRecover)]
+    assert len(fails) == 1 and len(recs) == 1
+    assert fails[0].node == 2 and recs[0].node == 2
+    assert recs[0].downtime_s == pytest.approx(0.37 - 0.15)
+    # the dead gap is padded at ZERO power — a dead node burns nothing
+    pads = [e for e in evs if isinstance(e, ClusterSleep) and e.power_W == 0.0]
+    assert pads and sum(p.dur_s for p in pads) > 0.0
+    # the fleet row exposes the chaos block
+    row = rep.row()
+    assert {"availability", "goodput_tokens_per_s", "mttr_s",
+            "downtime_s"} <= row.keys()
+    assert "fault model" in rep.summary()
+    assert "availability" in rep.summary()
+
+
+def test_crash_without_recovery_never_silent(cfg):
+    """A combined-pool node that dies and never comes back: the fleet
+    drains its work to the survivor or sheds it WITH a cause; downtime
+    accrues to the end of the run."""
+    fc = FaultConfig(nodes=(NodeFault(node=1, t_fail=0.05),))
+    fleet = FleetConfig(n_prefill=2, n_decode=0, handoff=False,
+                        engine=ServingConfig(max_batch=4, ccpg=True),
+                        fault=fc)
+    trace = _trace()
+    fe, rep = _run(cfg, fleet, trace)
+    assert rep.finished + rep.rejected == len(trace)
+    assert rep.node_failures == 1 and rep.node_recoveries == 0
+    assert rep.mttr_s is None or rep.mttr_s != rep.mttr_s  # NaN -> None
+    # unrecovered downtime runs to the wall
+    assert rep.downtime_s == pytest.approx(rep.wall_s - 0.05)
+    assert 0.0 < rep.availability < 1.0
+    assert rep.rejected == (rep.slo_rejected + rep.router_rejected
+                            + rep.fault_shed)
+    # the dead node stays frozen: after its NodeFail instant nothing
+    # runs — only the end-of-run zero-power pad follows
+    dead = fe.nodes[1]
+    evs = dead.eng.timeline.events
+    i_fail = next(i for i, e in enumerate(evs) if isinstance(e, NodeFail))
+    tail = evs[i_fail + 1:]
+    assert tail and all(isinstance(e, (ClusterSleep, EnergySample))
+                        for e in tail)
+    assert any(isinstance(e, ClusterSleep) and e.power_W == 0.0
+               for e in tail)
+
+
+def test_transient_blip_resumes_in_place(cfg):
+    """A crash shorter than heartbeat_dead_s is never DETECTED: the
+    router keeps routing, the node resumes its own queue on recovery,
+    and nothing is drained or shed."""
+    fc = FaultConfig(nodes=(NodeFault(node=0, t_fail=0.05,
+                                      t_recover=0.055),),
+                     heartbeat_dead_s=0.050)
+    fleet = FleetConfig(n_prefill=2, n_decode=0, handoff=False,
+                        engine=ServingConfig(max_batch=4, ccpg=True),
+                        fault=fc)
+    _, rep = _run(cfg, fleet, trace := _trace())
+    assert rep.finished == len(trace)
+    assert rep.fault_shed == 0 and rep.recomputes == 0
+    assert rep.node_failures == 1 and rep.node_recoveries == 1
+    assert rep.mttr_s == pytest.approx(0.005)
+
+
+# ---------------------------------------------------------------------------
+# CCPG wake faults
+# ---------------------------------------------------------------------------
+
+def test_wake_faults_retry_with_backoff_then_succeed(cfg):
+    """Autoscale wants the asleep decode node; its first wake attempts
+    time out.  The router retries (bounded, backoff-priced) and the
+    fleet still finishes everything."""
+    fc = FaultConfig(wakes=(WakeFault(node=3, failures=2),))
+    fleet = FleetConfig(n_prefill=2, n_decode=2,
+                        engine=ServingConfig(max_batch=4, ccpg=True),
+                        autoscale=True, min_awake=1, scale_up_queue=2,
+                        fault=fc)
+    trace = _trace()
+    fe, rep = _run(cfg, fleet, trace)
+    assert rep.finished == len(trace)
+    assert rep.wake_retries >= 2
+    assert rep.wakes > 0
+    # the retries priced real time: the woken node's first event starts
+    # strictly later than it would have zero-fault
+    fe0, rep0 = _run(cfg, dataclasses.replace(fleet, fault=None), trace)
+    assert rep.wall_s >= rep0.wall_s
+
+
+def test_wake_fault_budget_exhaustion_falls_back(cfg):
+    """More failures than the retry budget: the router gives up on the
+    faulty node (wake_fallbacks) and lands the work on the awake pool —
+    requests still finish or shed with a cause, never hang."""
+    fc = FaultConfig(wakes=(WakeFault(node=3, failures=50),),
+                     wake_retries=3)
+    fleet = FleetConfig(n_prefill=2, n_decode=2,
+                        engine=ServingConfig(max_batch=4, ccpg=True),
+                        autoscale=True, min_awake=1, scale_up_queue=2,
+                        fault=fc)
+    trace = _trace()
+    fe, rep = _run(cfg, fleet, trace)
+    assert rep.finished + rep.rejected == len(trace)
+    assert rep.wake_fallbacks > 0
+    # the faulty node never woke for the autoscaler's sake
+    assert fe.nodes[3].wakes == 0 or rep.wake_retries >= 50
+
+
+# ---------------------------------------------------------------------------
+# Validation + config wire format
+# ---------------------------------------------------------------------------
+
+def test_bad_node_ids_rejected(cfg):
+    fleet = FleetConfig(n_prefill=1, n_decode=1,
+                        fault=FaultConfig(nodes=(NodeFault(node=7,
+                                                           t_fail=0.1),)))
+    with pytest.raises(ValueError, match="node"):
+        FleetEngine(cfg, fleet, sim=PicnicSimulator())
+    fleet = FleetConfig(n_prefill=1, n_decode=1,
+                        fault=FaultConfig(wakes=(WakeFault(node=-1),)))
+    with pytest.raises(ValueError, match="node"):
+        FleetEngine(cfg, fleet, sim=PicnicSimulator())
+
+
+def test_fault_config_wire_format():
+    fc = FaultConfig.seeded(seed=3, n_nodes=4, horizon_s=0.5,
+                            link_windows=1, node_crashes=1, wake_faults=1)
+    d = fc.to_dict()
+    assert d["schema"] == FaultConfig.SCHEMA_VERSION
+    assert FaultConfig.from_dict(json.loads(json.dumps(d))) == fc
+    with pytest.raises((KeyError, TypeError, ValueError)):
+        FaultConfig.from_dict({"schema": 1, "no_such_knob": 1})
+    # the fault block rides the FleetConfig wire format too
+    fl = FleetConfig(n_prefill=2, n_decode=1, fault=fc)
+    fl2 = FleetConfig.from_dict(json.loads(json.dumps(fl.to_dict())))
+    assert fl2.fault == fc
+
+
+# ---------------------------------------------------------------------------
+# Golden: one full chaos run, hex-pinned
+# ---------------------------------------------------------------------------
+
+def _golden_payload():
+    cfg = get_config("llama3.2-1b")
+    trace = _trace()
+    fe, rep = _run(cfg, _chaos_fleet(_chaos_fault()), trace)
+    return {
+        "report": _hexdict(rep),
+        "node_reports": [_hexdict(r) for r in rep.node_reports],
+        "n_events": [len(n.eng.timeline.events) for n in fe.nodes],
+        "clocks": [n.eng.timeline.now.hex() for n in fe.nodes],
+    }
+
+
+def test_chaos_golden():
+    assert GOLDEN_PATH.exists(), \
+        f"regenerate: PYTHONPATH=src:tests python {Path(__file__).name}"
+    golden = json.loads(GOLDEN_PATH.read_text())
+    assert _golden_payload() == golden
+
+
+# ---------------------------------------------------------------------------
+# Property: any seeded schedule degrades gracefully + deterministically
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       crashes=st.integers(0, 2),
+       links=st.integers(0, 2),
+       wakes=st.integers(0, 1),
+       recover=st.booleans())
+def test_seeded_chaos_conserves_requests(seed, crashes, links, wakes,
+                                         recover):
+    """Differential property over the schedule space: whatever the
+    seeded fault draw, (a) no request vanishes — finished + rejected ==
+    n, every rejection attributed; (b) availability is a probability;
+    (c) the run replays hex-identically."""
+    cfg = get_config("llama3.2-1b")
+    fc = FaultConfig.seeded(seed=seed, n_nodes=4, horizon_s=0.5,
+                            link_windows=links, node_crashes=crashes,
+                            wake_faults=wakes, recover=recover)
+    fleet = FleetConfig(n_prefill=2, n_decode=2,
+                        engine=ServingConfig(max_batch=4, ccpg=True),
+                        autoscale=bool(wakes), min_awake=1,
+                        scale_up_queue=2, fault=fc)
+    trace = _trace(n=12, max_new=16)
+    _, rep = _run(cfg, fleet, trace)
+    assert rep.finished + rep.rejected == len(trace)
+    if fc.active():
+        assert 0.0 <= rep.availability <= 1.0
+        assert rep.rejected == (rep.slo_rejected + rep.router_rejected
+                                + rep.fault_shed)
+        assert rep.node_failures == len(fc.nodes)
+    else:
+        assert rep.availability is None
+    _, rep2 = _run(cfg, fleet, trace)
+    assert _hexdict(rep2) == _hexdict(rep)
+
+
+if __name__ == "__main__":
+    GOLDEN_PATH.parent.mkdir(exist_ok=True)
+    GOLDEN_PATH.write_text(json.dumps(_golden_payload(), indent=1,
+                                      sort_keys=True))
+    print(f"wrote {GOLDEN_PATH}")

@@ -1,0 +1,246 @@
+"""runtime/fault_tolerance.py + runtime/straggler.py unit coverage
+(ISSUE 10 satellite).
+
+Locks the primitives the fleet fault layer is built on:
+
+  * HeartbeatMonitor state machine on an INJECTED clock — suspect/dead
+    thresholds, revive incarnation bumps, and the no-wall-clock
+    contract (a missing ``clock=`` is a TypeError, not a silent
+    ``time.time`` fallback that would leak real time into a DES run);
+  * RestartPolicy exponential backoff monotonicity + window'd failure
+    budget, all on explicit ``now`` arguments;
+  * plan_elastic_mesh shapes and the no-healthy-pods error;
+  * StragglerDetector EWMA arithmetic and median-relative flagging,
+    plus BackupInputRunner speculative-fetch wins.
+"""
+import math
+
+import pytest
+
+from repro.runtime.fault_tolerance import (HeartbeatMonitor,
+                                           RestartPolicy,
+                                           TrainingSupervisor,
+                                           WorkerFailure, WorkerState,
+                                           plan_elastic_mesh)
+from repro.runtime.straggler import BackupInputRunner, StragglerDetector
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor
+# ---------------------------------------------------------------------------
+
+def test_monitor_requires_injected_clock():
+    with pytest.raises(TypeError):
+        HeartbeatMonitor(2)                     # no clock: no fallback
+    with pytest.raises(TypeError):
+        HeartbeatMonitor(2, 1.0, 2.0, lambda: 0.0)   # clock is kw-only
+
+
+def test_monitor_suspect_then_dead_then_revive():
+    t = [0.0]
+    mon = HeartbeatMonitor(3, suspect_s=5.0, dead_s=10.0,
+                           clock=lambda: t[0])
+    assert mon.healthy_ids() == [0, 1, 2]
+
+    t[0] = 6.0
+    mon.heartbeat(1)            # only worker 1 phones home
+    mon.heartbeat(2)
+    assert mon.sweep() == []    # 0 is suspect, nobody dead yet
+    assert mon.workers[0].state is WorkerState.SUSPECT
+    assert mon.healthy_ids() == [1, 2]
+
+    t[0] = 11.0
+    mon.heartbeat(2)
+    assert mon.sweep() == [0]   # crossed dead_s exactly at the gap
+    assert mon.workers[0].state is WorkerState.DEAD
+    # a DEAD worker's heartbeat does NOT resurrect it — revive only
+    mon.heartbeat(0)
+    assert mon.workers[0].state is WorkerState.DEAD
+    assert mon.sweep() == []    # newly-dead reported exactly once
+
+    inc = mon.workers[0].incarnation
+    mon.revive(0)
+    assert mon.workers[0].state is WorkerState.HEALTHY
+    assert mon.workers[0].incarnation == inc + 1
+    assert mon.workers[0].last_heartbeat == t[0]
+
+
+def test_monitor_runs_on_des_clock_without_wall_time():
+    """The whole lifecycle at simulated times far from wall time — if
+    any code path consulted time.time() the states would be wrong."""
+    t = [1e-3]
+    mon = HeartbeatMonitor(2, suspect_s=1e-3, dead_s=2e-3,
+                           clock=lambda: t[0])
+    t[0] = 3.5e-3
+    mon.heartbeat(1)
+    assert mon.sweep() == [0]
+    assert mon.healthy_ids() == [1]
+
+
+# ---------------------------------------------------------------------------
+# RestartPolicy
+# ---------------------------------------------------------------------------
+
+def test_backoff_monotone_and_capped():
+    p = RestartPolicy(base_backoff_s=1.0, max_backoff_s=16.0,
+                      window_s=3600.0)
+    backoffs = []
+    now = 100.0
+    for k in range(8):
+        backoffs.append(p.next_backoff(now + k))
+        p.record_failure(now + k)
+    # empty history -> base; then doubles per recent failure, capped
+    assert backoffs[0] == 1.0
+    assert all(b2 >= b1 for b1, b2 in zip(backoffs, backoffs[1:]))
+    assert backoffs[-1] == 16.0
+    assert max(backoffs) <= 16.0
+
+
+def test_backoff_window_forgets_old_failures():
+    p = RestartPolicy(base_backoff_s=1.0, max_backoff_s=300.0,
+                      window_s=10.0)
+    p.record_failure(0.0)
+    p.record_failure(1.0)
+    assert p.next_backoff(2.0) == 4.0        # 2 recent -> base * 2**2
+    assert p.next_backoff(100.0) == 1.0      # both aged out
+
+
+def test_restart_budget_window():
+    p = RestartPolicy(max_restarts=2, window_s=10.0)
+    assert p.should_restart(0.0)
+    p.record_failure(0.0)
+    p.record_failure(1.0)
+    assert not p.should_restart(2.0)         # budget consumed
+    assert p.should_restart(20.0)            # window slid past both
+    # should_restart also PRUNES aged history
+    assert p.history == []
+
+
+def test_policy_methods_require_explicit_now():
+    p = RestartPolicy()
+    with pytest.raises(TypeError):
+        p.should_restart()
+    with pytest.raises(TypeError):
+        p.next_backoff()
+    with pytest.raises(TypeError):
+        p.record_failure()
+
+
+# ---------------------------------------------------------------------------
+# plan_elastic_mesh
+# ---------------------------------------------------------------------------
+
+def test_elastic_mesh_shapes():
+    assert plan_elastic_mesh(2, 256, 16) == ((2, 16, 16),
+                                             ("pod", "data", "model"))
+    assert plan_elastic_mesh(1, 256, 16) == ((16, 16), ("data", "model"))
+    # the model axis survives any shrink; data axis follows chips/pod
+    shape, axes = plan_elastic_mesh(5, 128, 8)
+    assert shape == (5, 16, 8) and axes[-1] == "model"
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(0)
+
+
+# ---------------------------------------------------------------------------
+# TrainingSupervisor on an injected clock
+# ---------------------------------------------------------------------------
+
+class _Ckpt:
+    def __init__(self):
+        self.saved = []
+
+    def save(self, step, state, meta):
+        self.saved.append(step)
+
+
+def test_supervisor_restarts_on_injected_clock():
+    t = [0.0]
+    policy = RestartPolicy(max_restarts=3, window_s=100.0)
+    sup = TrainingSupervisor(policy, save_every=2, checkpointer=_Ckpt(),
+                             clock=lambda: t[0])
+    fails = {3: True}
+
+    def run_step(state, batch):
+        step = state["step"]
+        if fails.pop(step, False):
+            raise WorkerFailure(0, "injected")
+        state["step"] += 1
+        return state, {}
+
+    def make_batch(step):
+        return step
+
+    def restore_fn():
+        return {"step": 2}, 2
+
+    state = {"step": 0}
+
+    def wrapped(state, batch):
+        t[0] += 1.0
+        return run_step(state, batch)
+
+    out, step = sup.run(state, 0, 5, wrapped, make_batch, restore_fn)
+    assert step == 5 and sup.restarts == 1
+    assert policy.history == [4.0]           # stamped at the DES clock
+
+
+def test_supervisor_budget_exhaustion_raises():
+    policy = RestartPolicy(max_restarts=1, window_s=100.0)
+    sup = TrainingSupervisor(policy, save_every=100, checkpointer=_Ckpt(),
+                             clock=lambda: 0.0)
+
+    def run_step(state, batch):
+        raise WorkerFailure(0)
+
+    with pytest.raises(RuntimeError, match="budget exhausted"):
+        sup.run({}, 0, 5, run_step, lambda s: s, lambda: ({}, 0))
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector / BackupInputRunner
+# ---------------------------------------------------------------------------
+
+def test_straggler_ewma_arithmetic():
+    det = StragglerDetector(2, alpha=0.5, min_samples=1)
+    det.record(0, 1.0)
+    assert det.ewma[0] == 1.0                # first sample verbatim
+    det.record(0, 3.0)
+    assert det.ewma[0] == (1 - 0.5) * 1.0 + 0.5 * 3.0
+    assert det.ewma[1] is None
+
+
+def test_straggler_flagging_is_median_relative():
+    det = StragglerDetector(4, alpha=1.0, threshold=1.5, min_samples=2)
+    for _ in range(2):
+        det.record(0, 1.0)
+        det.record(1, 1.0)
+        det.record(2, 1.0)
+        det.record(3, 4.0)
+    out = det.stragglers()
+    assert [r.worker_id for r in out] == [3]
+    assert out[0].fleet_median_s == 1.0
+    assert out[0].slowdown == pytest.approx(4.0)
+    # under min_samples: never flagged even if slow
+    det2 = StragglerDetector(2, alpha=1.0, threshold=1.5, min_samples=5)
+    det2.record(0, 1.0)
+    det2.record(1, 50.0)
+    assert det2.stragglers() == []
+
+
+def test_backup_runner_speculates_only_for_stragglers():
+    det = StragglerDetector(2, alpha=1.0, threshold=1.5, min_samples=1)
+    runner = BackupInputRunner(det, n_spares=1)
+    # prime: worker 1 is 10x slower than the median
+    for _ in range(2):
+        runner.fetch(0, lambda: "p0", primary_time=1.0)
+        runner.fetch(1, lambda: "p1", primary_time=10.0)
+    assert runner.speculated == 0            # no backup_fn offered yet
+    got = runner.fetch(1, lambda: "primary", backup_fn=lambda: "backup",
+                       primary_time=10.0, backup_time=2.0)
+    assert got == "backup"
+    assert runner.speculated == 1 and runner.wins_by_backup == 1
+    # healthy worker never speculates
+    got = runner.fetch(0, lambda: "primary", backup_fn=lambda: "backup",
+                       primary_time=1.0, backup_time=0.1)
+    assert got == "primary"
+    assert runner.speculated == 1
